@@ -1,0 +1,18 @@
+"""Timing + CSV helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+
+
+def time_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""Paper Fig. 9: multiplication packing density per technique, plus the
+TPU-adapted (32-bit VPU budget) equivalents."""
+
+from __future__ import annotations
+
+from repro.core.packing import int4_packing, int8_packing, intn_packing
+from repro.kernels.ref import INT2_EXACT, INT4_EXACT, INT4_MR_OVERPACKED
+
+from .bench_util import emit
+
+
+def run() -> None:
+    rows = [
+        ("int8_xilinx", int8_packing()),
+        ("int4_xilinx", int4_packing()),
+        ("intn_6x_3bit", intn_packing((4, 4, 4), (3, 3), delta=0)),
+        ("overpack_6x_d-2", intn_packing((4, 4, 4), (5, 5), delta=-2)),
+        ("mr_overpack_4x6bit_d-2", intn_packing((6, 6), (6, 6), delta=-2)),
+    ]
+    for name, cfg in rows:
+        emit(
+            f"fig9/{name}", 0.0,
+            f"rho={cfg.packing_density():.3f} results={cfg.n_results} "
+            f"fits_dsp48={cfg.fits_dsp48()}",
+        )
+    # TPU adaptation: products per 32-bit VPU multiply and K-chunk length
+    for name, spec in (
+        ("tpu_int4_exact", INT4_EXACT),
+        ("tpu_int4_mr_overpacked", INT4_MR_OVERPACKED),
+        ("tpu_int2_exact", INT2_EXACT),
+    ):
+        emit(
+            f"fig9/{name}", 0.0,
+            f"products_per_mul=2 chunk={spec.chunk} p={spec.p} "
+            f"(extraction amortized over {spec.n_pairs} pairs)",
+        )

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: packed vs unpacked matmul paths.
+
+CPU timings (interpret mode for Pallas) are NOT the perf claim — the perf
+claim is the §Roofline analysis; these timings regression-track the
+reference implementations and report achieved arithmetic densities.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ref import INT4_EXACT, INT4_MR_OVERPACKED
+
+from .bench_util import emit, time_us
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    m = k = n = 256
+    x = jnp.asarray(rng.integers(0, 16, (m, k)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-8, 8, (k, n)).astype(np.int8))
+
+    exact = jax.jit(ref.ref_quantized_matmul)
+    packed = jax.jit(lambda a, b: ref.ref_packed_matmul(a, b, INT4_EXACT))
+    over = jax.jit(lambda a, b: ref.ref_packed_matmul(a, b, INT4_MR_OVERPACKED))
+
+    base_us = time_us(lambda: np.asarray(exact(x, w)))
+    emit("kernel/int_matmul_exact_256", base_us, "oracle int32 matmul")
+    us = time_us(lambda: np.asarray(packed(x, w)))
+    emit(
+        "kernel/packed_int4_exact_256", us,
+        f"2 products/mul, chunk={INT4_EXACT.chunk}, bit-exact",
+    )
+    us = time_us(lambda: np.asarray(over(x, w)))
+    err = np.abs(np.asarray(over(x, w)) - np.asarray(exact(x, w)))
+    emit(
+        "kernel/packed_int4_mr_over_256", us,
+        f"chunk={INT4_MR_OVERPACKED.chunk} MAE={err.mean():.3f} WCE={err.max()}",
+    )
+
+    wp = ref.pack_int4_weights(w)
+    x8 = jnp.asarray(rng.integers(-128, 128, (m, k)).astype(np.int8))
+    prod = jax.jit(ref.ref_int4_matmul)
+    us = time_us(lambda: np.asarray(prod(x8, wp)))
+    emit(
+        "kernel/int4_packed_storage_256", us,
+        f"weight bytes halved: {wp.size}B vs {w.size}B",
+    )
+    run_extra()
+
+
+def run_extra() -> None:
+    """Flash-attention and addpack kernels (interpret-mode parity checks)."""
+    import numpy as np
+    from repro.kernels.flash_attention import flash_attention, ref_attention
+    from repro.kernels.addpack_acc import addpack_accumulate, ref_addpack_accumulate
+
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 2, 512, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 512, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64)).astype(np.float32))
+    us = time_us(lambda: np.asarray(flash_attention(q, k, v, interpret=True)), warmup=1, iters=2)
+    err = float(jnp.abs(flash_attention(q, k, v, interpret=True) - ref_attention(q, k, v)).max())
+    emit("kernel/flash_attention_512", us, f"maxerr={err:.1e} (S x S never materialized)")
+
+    terms = jnp.asarray(rng.integers(-2000, 2000, (64, 2, 256)).astype(np.int32))
+    us = time_us(lambda: np.asarray(addpack_accumulate(terms, interpret=True)), warmup=1, iters=2)
+    ok = bool((addpack_accumulate(terms, interpret=True) == ref_addpack_accumulate(terms)).all())
+    emit("kernel/addpack_accumulate_64x2x256", us, f"exact={ok} (2 lanes per int32 add)")

@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh) cell, derives the three roofline terms on TPU v5e
+constants and identifies the dominant bottleneck:
+
+  compute    = HLO_FLOPs_per_chip / 197e12 FLOP/s        (bf16 MXU peak)
+  memory     = HLO_bytes_per_chip / 819e9 B/s            (HBM bandwidth)
+  collective = collective_bytes_per_chip / 50e9 B/s      (ICI, 1-link eff.)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` with the scan-body
+extrapolation done by the dry-run (XLA counts loop bodies once).
+Collective bytes are the per-device result sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+optimized HLO.  ``MODEL_FLOPS = 6·N·D`` (dense) or ``6·N_active·D`` (MoE);
+the ratio MODEL/HLO exposes remat and dispatch overheads.
+
+Notes on accounting (EXPERIMENTS.md §Roofline):
+  * cost_analysis "bytes accessed" counts every HLO buffer touch; real HBM
+    traffic is lower for fusion-resident buffers — the memory term is an
+    upper bound.
+  * the collective term assumes serialized transfers on ONE 50 GB/s ICI
+    link per chip — a lower bound on achievable overlap (v5e has 4 links).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+# training does fwd+bwd: 3x the fwd matmul work (6ND counts it: 6 = 2*3)
+STEP_MULT = {"train_4k": 1.0, "prefill_32k": 1 / 3, "decode_32k": 1 / 3, "long_500k": 1 / 3}
+
+
+def active_fraction(arch: str) -> float:
+    """Share of expert parameters that are active per token."""
+    from repro.models.registry import get_config
+
+    cfg = get_config(arch)
+    if not cfg.n_experts:
+        return 1.0
+    return cfg.experts_per_token / cfg.n_experts
+
+
+def expert_param_share(arch: str) -> float:
+    """Fraction of total params that live in expert stacks (by tree walk)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+    from repro.models.registry import get_config
+
+    cfg = get_config(arch)
+    if not cfg.n_experts:
+        return 0.0
+    tree = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    tot = exp = 0
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = math.prod(leaf.shape)
+        tot += n
+        if "moe/" in key and "router" not in key:
+            exp += n
+    return exp / tot
+
+
+def analyze(record: dict) -> dict:
+    arch, shape = record["arch"], record["shape"]
+    chips = record["n_devices"]
+    compute_s = record["flops"] / PEAK_FLOPS
+    memory_s = record["bytes_accessed"] / HBM_BW
+    coll_s = record["collectives"]["total"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+
+    n = record["n_params"]
+    share = expert_param_share(arch)
+    n_active = n * (1 - share) + n * share * active_fraction(arch)
+    model_flops = 6 * n_active * TOKENS[shape] * STEP_MULT[shape]
+    model_flops_per_chip = model_flops / chips
+    hlo = record["flops"] or 1.0
+    ratio = model_flops_per_chip / hlo
+    # roofline fraction: useful model FLOPs per chip-second at the bound
+    frac = model_flops_per_chip / PEAK_FLOPS / bound_s if bound_s else 0.0
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": record["mesh"],
+        "variant": record.get("variant", "baseline"),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_ratio": ratio,
+        "roofline_fraction": frac,
+        "n_params": n,
+        "n_active": int(n_active),
+    }
+
+
+LEVERS = {
+    "compute": "cut recompute (remat policy) / shed non-model FLOPs so HLO→model ratio rises",
+    "memory": "tighten fusion & bf16 residents; chunk attention to kill S² f32 traffic",
+    "collective": "reshard to reduce gathered bytes (bf16 gathers, reduce-scatter grads, 1-axis TP)",
+}
+
+
+def run(out_dir: str = "artifacts/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        rows.append(analyze(rec))
+    rows.sort(key=lambda r: (r["shape"], r["arch"], r["mesh"], r["variant"]))
+    for r in rows:
+        var = "" if r["variant"] == "baseline" else f"__{r['variant']}"
+        print(
+            f"roofline/{r['arch']}__{r['shape']}__{r['mesh']}{var},0.0,"
+            f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"collective={r['collective_s']:.4f}s dominant={r['dominant']} "
+            f"model/hlo={r['model_flops_ratio']:.2f} "
+            f"roofline_frac={r['roofline_fraction']:.3f}"
+        )
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows

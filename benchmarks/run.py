@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure + kernel and
+roofline reports.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated subset: table1,table2,table3,fig9,kernel,roofline",
+    )
+    args = ap.parse_args()
+    from . import (
+        fig9_density,
+        kernel_bench,
+        roofline,
+        table1_packing,
+        table2_per_result,
+        table3_addpack,
+    )
+
+    print("name,us_per_call,derived")
+    mods = {
+        "table1": table1_packing.run,
+        "table2": table2_per_result.run,
+        "table3": table3_addpack.run,
+        "fig9": fig9_density.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    selected = args.only.split(",") if args.only else list(mods)
+    for name in selected:
+        mods[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Table I: error statistics of every packing approach (exhaustive,
+all 65 536 4-bit input combinations), plus the wide-multiply sim timing."""
+
+from __future__ import annotations
+
+from repro.core.correction import scheme_stats
+from repro.core.packing import int4_packing
+
+from .bench_util import emit, time_us
+
+
+def run() -> None:
+    rows = [
+        ("xilinx_int4_naive", int4_packing(), "naive"),
+        ("int4_full_correction", int4_packing(), "full"),
+        ("int4_approx_correction", int4_packing(), "approx"),
+        ("overpacking_d-1", int4_packing(-1), "naive"),
+        ("overpacking_d-2", int4_packing(-2), "naive"),
+        ("overpacking_d-3", int4_packing(-3), "naive"),
+        ("mr_overpacking_d-1", int4_packing(-1), "mr"),
+        ("mr_overpacking_d-2", int4_packing(-2), "mr"),
+        ("mr_overpacking_d-3", int4_packing(-3), "mr"),
+        ("BEYOND_mr+full_d-1", int4_packing(-1), "mr+full"),
+        ("BEYOND_mr+full_d-2", int4_packing(-2), "mr+full"),
+    ]
+    for name, cfg, scheme in rows:
+        us = time_us(lambda c=cfg, s=scheme: scheme_stats(c, s), iters=1, warmup=0)
+        st = scheme_stats(cfg, scheme)
+        emit(
+            f"table1/{name}", us,
+            f"MAE={st.mae_bar:.2f} EP={st.ep_bar:.2f}% WCE={st.wce_bar}",
+        )

@@ -1,0 +1,22 @@
+"""Paper Table II: per-result error statistics for INT4 and MR δ=-2."""
+
+from __future__ import annotations
+
+from repro.core.correction import scheme_stats
+from repro.core.packing import int4_packing
+
+from .bench_util import emit, time_us
+
+
+def run() -> None:
+    for tag, cfg, scheme in (
+        ("int4", int4_packing(), "naive"),
+        ("mr_d-2", int4_packing(-2), "mr"),
+    ):
+        us = time_us(lambda c=cfg, s=scheme: scheme_stats(c, s), iters=1, warmup=0)
+        st = scheme_stats(cfg, scheme)
+        for n, (mae, ep, wce) in enumerate(zip(st.mae, st.ep, st.wce)):
+            emit(
+                f"table2/{tag}/r{n}", us,
+                f"MAE={mae:.2f} EP={ep:.2f}% WCE={wce}",
+            )

@@ -1,0 +1,58 @@
+"""Quickstart: the paper's DSP-packing in five minutes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.correction import scheme_stats, simulate
+from repro.core.packing import int4_packing, intn_packing, outer_product_exact
+from repro.core.addpack import AddPackConfig, packed_lane_add, lane_add_expected
+
+print("=" * 70)
+print("1. Pack four 4-bit multiplications into ONE wide multiply (paper §III)")
+cfg = int4_packing()
+a = np.array([[3, 10]])     # unsigned activations
+w = np.array([[-7, 5]])     # signed weights
+print(f"   a={a[0]}, w={w[0]}")
+print(f"   exact outer product   : {outer_product_exact(cfg, a, w)[0]}")
+print(f"   naive (Xilinx) extract: {simulate(cfg, a, w, 'naive')[0]}  <- biased!")
+print(f"   full correction       : {simulate(cfg, a, w, 'full')[0]}")
+print(f"   approx correction     : {simulate(cfg, a, w, 'approx')[0]}")
+
+print()
+print("2. Exhaustive error statistics (paper Table I)")
+for scheme in ("naive", "full", "approx"):
+    print(f"   {scheme:8s}: {scheme_stats(cfg, scheme).row()}")
+
+print()
+print("3. Overpacking: six 4-bit multiplies per DSP at bounded error (§VI)")
+six = intn_packing((4, 4, 4), (5, 5), delta=-2)
+print(f"   density rho={six.packing_density():.3f} (INT4 baseline: 0.667)")
+over = int4_packing(delta=-2)
+print(f"   naive overpacking : {scheme_stats(over, 'naive').row()}")
+print(f"   MR-overpacking    : {scheme_stats(over, 'mr').row()}")
+print(f"   MR+round (ours)   : {scheme_stats(over, 'mr+full').row()}")
+
+print()
+print("4. Addition packing (paper §VII): five 9-bit adders in one 48-bit add")
+apc = AddPackConfig((9, 9, 9, 9, 9), guard_bits=0)
+x = np.array([[100, -200, 5, 17, -9]])
+y = np.array([[-50, 130, 25, -4, 77]])
+print(f"   packed result: {packed_lane_add(apc, x, y)[0]}")
+print(f"   expected     : {lane_add_expected(apc, x, y)[0]}")
+
+print()
+print("5. The TPU adaptation: pair-packed int32 matmul (kernels/, DESIGN.md §2)")
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ref import INT4_EXACT
+
+rng = np.random.default_rng(0)
+x_q = jnp.asarray(rng.integers(0, 16, (8, 32)).astype(np.int8))
+w_q = jnp.asarray(rng.integers(-8, 8, (32, 8)).astype(np.int8))
+packed = ref.ref_packed_matmul(x_q, w_q, INT4_EXACT)
+exact = ref.ref_quantized_matmul(x_q, w_q)
+print(f"   packed matmul == exact int matmul: {bool((packed == exact).all())}")
+print("   (one int32 VPU multiply computes TWO int4 products)")

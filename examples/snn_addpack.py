@@ -1,0 +1,53 @@
+"""Spiking-neural-network accumulation with addition packing (paper §VII).
+
+An SNN layer integrates weighted spikes: ``v[t+1] = v[t] + W @ s[t]``.
+With binary spikes the MAC degenerates to masked adds — the paper packs
+several narrow accumulators into one 48-bit adder.  This demo packs four
+10-bit membrane accumulators per adder (2 guard bits -> exact) and checks
+a leaky integrate-and-fire layer end to end.
+
+Run:  PYTHONPATH=src python examples/snn_addpack.py
+"""
+
+import numpy as np
+
+from repro.core.addpack import AddPackConfig, accumulate
+
+rng = np.random.default_rng(0)
+
+N_IN, N_OUT, T_STEPS = 64, 16, 32
+THRESHOLD = 64
+
+w = rng.integers(-8, 8, (N_IN, N_OUT))        # int4 weights
+spikes = (rng.random((T_STEPS, N_IN)) < 0.15)  # Poisson-ish input spikes
+
+# per-timestep weighted spike sums (these are the narrow addends)
+drive = spikes.astype(np.int64) @ w           # (T, N_OUT), small ints
+
+cfg = AddPackConfig((10, 10, 10, 10), guard_bits=2)
+assert cfg.bits_used() <= 48
+
+# pack N_OUT accumulators into groups of 4 lanes
+groups = drive.reshape(T_STEPS, N_OUT // 4, 4).transpose(1, 0, 2)
+packed_v = np.stack([accumulate(cfg, g) for g in groups])  # (groups, 4)
+v_packed = packed_v.reshape(N_OUT)
+v_exact = drive.sum(0)
+
+print(f"[snn] membrane potentials (packed)  : {v_packed[:8]} ...")
+print(f"[snn] membrane potentials (exact)   : {v_exact[:8]} ...")
+assert (v_packed == v_exact).all(), "guard bits must make packing exact"
+print(f"[snn] exact with {cfg.guard_bits} guard bits; "
+      f"{cfg.n_lanes} accumulators per 48-bit adder "
+      f"(density {cfg.packing_density():.2f})")
+
+fired = v_packed > THRESHOLD
+print(f"[snn] neurons fired: {fired.sum()}/{N_OUT}")
+
+# without guard bits: approximate integration (bounded per-step LSB error)
+loose = AddPackConfig((12, 12, 12, 12), guard_bits=0)
+v_loose = np.stack(
+    [accumulate(loose, g, headroom_bits=0) for g in groups]
+).reshape(N_OUT)
+err = np.abs(v_loose - v_exact)
+print(f"[snn] no-guard variant: max |error| = {err.max()} "
+      f"(paper §VII: carry corrupts only the victim LSB)")

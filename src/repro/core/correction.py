@@ -1,0 +1,192 @@
+"""Error-correction schemes for DSP packing (paper §V/§VI) + error metrics.
+
+Schemes
+  * ``naive``   — Xilinx white-paper extraction; biased by −1 whenever the
+                  cumulative lower fields are negative (§V).
+  * ``full``    — Full Error Correction: round-half-up at extraction
+                  (Eqn. 7).  Exact for ``delta >= 0`` configs.
+  * ``approx``  — Approximate Correction: pre-bias the product through the
+                  accumulator (C port) with the anticipated sign of the
+                  field below each result (Fig. 4).  No extra hardware.
+  * ``mr``      — MR-Overpacking: for ``delta < 0``, restore each field's
+                  corrupted MSBs by subtracting the exactly-computed LSBs of
+                  the field above (Eqns. 8/9, Fig. 6).
+  * ``mr+full`` — beyond-paper combination: MR restore *and* round-half-up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .packing import (
+    PackingConfig,
+    extract_fields,
+    mul_lsbs,
+    multiply_packed,
+    outer_product_exact,
+    sign_extend,
+)
+
+__all__ = [
+    "SCHEMES",
+    "approx_correction_word",
+    "simulate",
+    "mr_restore",
+    "ErrorStats",
+    "error_stats",
+    "exhaustive_operands",
+]
+
+
+def approx_correction_word(cfg: PackingConfig, w: np.ndarray) -> np.ndarray:
+    """The 48-bit C-port pre-bias of §V-B (Fig. 4).
+
+    For every result field ``n >= 1`` the field below it (``n-1``) floors the
+    extraction by −1 exactly when the cumulative lower value is negative.
+    Its sign is *anticipated* from the sign bit of the signed operand
+    ``w_{j(n-1)}`` that generates field ``n-1`` (the unsigned ``a`` operand
+    cannot flip a sign).  The anticipated bit is added at offset
+    ``r_offsets[n]`` *before* the product is formed, cancelling the bias.
+    The anticipation fails only when the generating product is zero while
+    ``w < 0`` (e.g. ``a_{i(n-1)} == 0``) — the residual 3 % of §V-B.
+    """
+    w = np.asarray(w, dtype=np.int64)
+    word = np.zeros(w.shape[:-1], dtype=np.int64)
+    order = np.argsort(np.asarray(cfg.r_offsets, dtype=np.int64), kind="stable")
+    for rank in range(1, cfg.n_results):
+        below = int(order[rank - 1])
+        here = int(order[rank])
+        _, j_below = cfg.result_operands(below)
+        sign_bit = (w[..., j_below] < 0).astype(np.int64)
+        word = word + (sign_bit << np.int64(cfg.r_offsets[here]))
+    return word
+
+
+def mr_restore(
+    cfg: PackingConfig,
+    fields: np.ndarray,
+    a: np.ndarray,
+    w: np.ndarray,
+) -> np.ndarray:
+    """Most-significant-bit Restoring Overpacking (§VI-B).
+
+    With ``delta < 0`` adjacent fields overlap by ``|delta|`` bits: the LSBs
+    of field ``n+1`` were *added* into the top ``|delta|`` bits of field
+    ``n``.  Those LSBs are recomputed exactly from the operands (cheap in
+    hardware — Eqns. 8/9) and subtracted after extraction.
+    """
+    if cfg.delta >= 0:
+        return fields
+    nlsb = -cfg.delta
+    a = np.asarray(a, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    out = fields.copy()
+    order = np.argsort(np.asarray(cfg.r_offsets, dtype=np.int64), kind="stable")
+    for rank in range(cfg.n_results - 1):
+        n = int(order[rank])
+        above = int(order[rank + 1])
+        shift = cfg.r_offsets[above] - cfg.r_offsets[n]
+        if shift >= cfg.r_widths[n]:
+            continue  # no overlap between these two fields
+        i, j = cfg.result_operands(above)
+        contam = mul_lsbs(a[..., i], w[..., j], cfg.r_widths[n] - shift)
+        # Field arithmetic is modulo 2**width: re-wrap after the subtraction
+        # (the true product fits the field, so the congruent value is the
+        # restored result up to the small LSB contamination from below).
+        out[..., n] = sign_extend(
+            out[..., n] - (contam << np.int64(shift)), cfg.r_widths[n]
+        )
+    return out
+
+
+def simulate(
+    cfg: PackingConfig,
+    a: np.ndarray,
+    w: np.ndarray,
+    scheme: str = "naive",
+    accumulate_correction: np.ndarray | None = None,
+) -> np.ndarray:
+    """End-to-end packed multiply → extraction under a correction scheme."""
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; options: {sorted(SCHEMES)}")
+    cword = None
+    if scheme == "approx":
+        cword = approx_correction_word(cfg, w)
+    if accumulate_correction is not None:
+        cword = accumulate_correction if cword is None else cword + accumulate_correction
+    p = multiply_packed(cfg, a, w, correction_word=cword)
+    fields = extract_fields(cfg, p, round_half_up=scheme in ("full", "mr+full"))
+    if scheme in ("mr", "mr+full"):
+        fields = mr_restore(cfg, fields, a, w)
+    return fields
+
+
+SCHEMES = ("naive", "full", "approx", "mr", "mr+full")
+
+
+# ---- error metrics (paper §VIII, Eqns. 10-12) ---------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorStats:
+    """EP (%), MAE, WCE — per result field and aggregated (bar accent)."""
+
+    ep: tuple[float, ...]
+    mae: tuple[float, ...]
+    wce: tuple[int, ...]
+
+    @property
+    def ep_bar(self) -> float:
+        return float(np.mean(self.ep))
+
+    @property
+    def mae_bar(self) -> float:
+        return float(np.mean(self.mae))
+
+    @property
+    def wce_bar(self) -> int:
+        return int(np.max(self.wce))
+
+    def row(self) -> str:
+        return (
+            f"MAE={self.mae_bar:.2f} EP={self.ep_bar:.2f}% WCE={self.wce_bar}"
+        )
+
+
+def error_stats(expected: np.ndarray, actual: np.ndarray) -> ErrorStats:
+    """Eqns. (10)-(12) over the leading axes, per result field."""
+    err = np.abs(np.asarray(actual, np.int64) - np.asarray(expected, np.int64))
+    flat = err.reshape(-1, err.shape[-1]).astype(np.float64)
+    ep = tuple(float(x) for x in (flat > 0).mean(axis=0) * 100.0)
+    mae = tuple(float(x) for x in flat.mean(axis=0))
+    wce = tuple(int(x) for x in flat.max(axis=0))
+    return ErrorStats(ep=ep, mae=mae, wce=wce)
+
+
+def exhaustive_operands(cfg: PackingConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Every possible (a, w) combination for a config — the paper's ``N``.
+
+    Returns arrays of shape ``(N, n_a)`` and ``(N, n_w)``.  Feasible for the
+    4-bit table configs (``16^4 = 65 536`` combinations).
+    """
+    axes = [np.arange(1 << width, dtype=np.int64) for width in cfg.a_widths]
+    axes += [
+        np.arange(-(1 << (width - 1)), 1 << (width - 1), dtype=np.int64)
+        for width in cfg.w_widths
+    ]
+    grids = np.meshgrid(*axes, indexing="ij")
+    flat = [g.reshape(-1) for g in grids]
+    a = np.stack(flat[: cfg.n_a], axis=-1)
+    w = np.stack(flat[cfg.n_a :], axis=-1)
+    return a, w
+
+
+def scheme_stats(cfg: PackingConfig, scheme: str) -> ErrorStats:
+    """Exhaustive error statistics of ``scheme`` for ``cfg`` (Tables I/II)."""
+    a, w = exhaustive_operands(cfg)
+    expected = outer_product_exact(cfg, a, w)
+    actual = simulate(cfg, a, w, scheme=scheme)
+    return error_stats(expected, actual)

@@ -1,0 +1,108 @@
+"""PackedLinear: every matmul in the model zoo routes through this module.
+
+One module, five compute modes — the paper's technique is a first-class,
+config-selectable feature of the framework rather than a bolt-on:
+
+  * ``native``      — plain dense matmul (bf16/f32), the unquantized baseline
+  * ``qat4``/``qat8`` — fake-quant STE on weights (+ optionally activations):
+                      differentiable, used for quantization-aware *training*
+  * ``int8``        — real int8×int8→int32 arithmetic (MXU-native path)
+  * ``int4_packed`` — packed-nibble storage + production Pallas kernel
+  * ``dsp_packed``  — the paper's pair-packed wide-multiply path (Pallas),
+                      correction scheme selectable via ``PackedDotSpec``
+
+Inference-only integer paths raise under differentiation by construction
+(they are used inside ``serve_step``).  Params are plain pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops, ref
+from ..kernels.ref import INT4_EXACT, PackedDotSpec
+from .quantize import fake_quant_signed, quantize_signed
+
+__all__ = ["LinearSpec", "init_linear", "apply_linear"]
+
+MODES = ("native", "qat4", "qat8", "int8", "int4_packed", "dsp_packed")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    mode: str = "native"
+    dsp_spec: PackedDotSpec = INT4_EXACT
+    use_kernel: bool = False  # Pallas kernel vs jnp ref (CPU tests use ref)
+    act_bits: int | None = None  # fake-quant activations too (QAT)
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32):
+    scale = d_in**-0.5
+    params = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+    return params
+
+
+def _flatten_batch(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def apply_linear(params, x: jax.Array, spec: LinearSpec = LinearSpec()) -> jax.Array:
+    """``x @ w (+ b)`` through the selected compute mode."""
+    from .packed_params import is_packed_leaf, materialize_weight
+
+    w = params["w"]
+    mode = spec.mode
+    if is_packed_leaf(w):
+        # packed-serving representation: nibbles live in HBM, dequantize at
+        # the point of use (fused into the matmul on TPU)
+        y = x @ materialize_weight(w, x.dtype)
+        if "b" in params:
+            y = y + params["b"].astype(y.dtype)
+        return y
+    if mode == "native":
+        y = x @ w.astype(x.dtype)
+    elif mode in ("qat4", "qat8"):
+        bits = 4 if mode == "qat4" else 8
+        wq = fake_quant_signed(w.astype(jnp.float32), bits, 0).astype(x.dtype)
+        xq = (
+            fake_quant_signed(x.astype(jnp.float32), spec.act_bits, -1).astype(x.dtype)
+            if spec.act_bits
+            else x
+        )
+        y = xq @ wq
+    elif mode == "int8":
+        x2, lead = _flatten_batch(x.astype(jnp.float32))
+        xq = quantize_signed(x2, bits=8, axis=-1)
+        wq = quantize_signed(w.astype(jnp.float32), bits=8, axis=0)
+        acc = ref.ref_quantized_matmul(xq.values, wq.values)
+        y = (acc.astype(jnp.float32) * xq.scale * wq.scale).reshape(
+            *lead, w.shape[1]
+        ).astype(x.dtype)
+    elif mode == "int4_packed":
+        x2, lead = _flatten_batch(x.astype(jnp.float32))
+        wq = quantize_signed(w.astype(jnp.float32), bits=4, axis=0)
+        packed = ref.pack_int4_weights(wq.values)
+        y = ops.int4_matmul_f32(
+            x2, packed, wq.scale, use_kernel=spec.use_kernel
+        ).reshape(*lead, w.shape[1]).astype(x.dtype)
+    elif mode == "dsp_packed":
+        x2, lead = _flatten_batch(x.astype(jnp.float32))
+        y = ops.packed_matmul_f32(
+            x2, w.astype(jnp.float32), spec=spec.dsp_spec,
+            use_kernel=spec.use_kernel,
+        ).reshape(*lead, w.shape[1]).astype(x.dtype)
+    else:  # pragma: no cover
+        raise AssertionError(mode)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y

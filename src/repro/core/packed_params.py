@@ -1,0 +1,90 @@
+"""Packed-weight parameter trees for serving.
+
+`quantize_params_for_serving` converts every matmul weight into the paper's
+packed-density representation: int4 values, two per uint8 byte (+ per-output
+-channel f32 scale).  This is the framework-level translation of DSP-packing
+for TPU serving (DESIGN.md §2): weight HBM bytes drop 4× vs bf16, which both
+(a) moves the decode roofline's memory term down and (b) lets models that
+needed per-step FSDP gathers fit TP-only-replicated — removing the per-token
+parameter all-gather entirely (EXPERIMENTS.md §Perf, cells A/C).
+
+Norms, biases, embeddings and 1-D leaves stay bf16 (gather tables and
+vector ops gain nothing from nibble packing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+from .quantize import quantize_signed
+
+__all__ = ["quantize_params_for_serving", "is_packed_leaf"]
+
+MIN_DIM = 32  # don't pack tiny matrices (router tables etc. stay exact)
+
+
+def is_packed_leaf(p) -> bool:
+    return isinstance(p, dict) and "packed" in p and "scale" in p
+
+
+def _pack_matrix(w: jax.Array) -> dict:
+    """(…, d_in, d_out) float -> packed int4 nibbles + per-channel scale."""
+    lead = w.shape[:-2]
+    d_in, d_out = w.shape[-2:]
+    if d_in % 2:
+        raise ValueError(f"d_in must be even to pack nibbles, got {d_in}")
+    w2 = w.reshape((-1, d_in, d_out)).astype(jnp.float32)
+    q = jax.vmap(lambda m: quantize_signed(m, bits=4, axis=0))(w2)
+    packed = jax.vmap(ref.pack_int4_weights)(q.values)
+    return {
+        "packed": packed.reshape(lead + (d_in // 2, d_out)),
+        "scale": q.scale.reshape(lead + (1, d_out)).astype(jnp.float32),
+    }
+
+
+def dequantize_packed(p: dict, dtype=jnp.bfloat16) -> jax.Array:
+    """Graph-level unpack: two arithmetic shifts + scale.  On real TPU the
+    Pallas kernel (`kernels/int4_matmul.py`) does this inside VMEM; the
+    jnp path is the portable equivalent with the same HBM byte profile."""
+    b = p["packed"].astype(jnp.int8)
+    lo = (b << 4) >> 4  # arithmetic shifts sign-extend the nibbles
+    hi = b >> 4
+    w = jnp.stack([lo, hi], axis=-2)  # (..., K/2, 2, N)
+    shape = p["packed"].shape[:-2] + (2 * p["packed"].shape[-2], p["packed"].shape[-1])
+    return (w.reshape(shape).astype(jnp.float32) * p["scale"]).astype(dtype)
+
+
+def materialize_weight(p, dtype):
+    return dequantize_packed(p, dtype) if is_packed_leaf(p) else p
+
+
+def quantize_params_for_serving(params, min_dim: int = MIN_DIM):
+    """Replace every large matmul weight leaf 'w' (and MoE expert stacks)
+    with its packed representation.  Tree structure changes: callers use
+    the transformed tree for sharding/eval_shape as well."""
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                p = f"{path}/{k}"
+                if (
+                    k in ("w", "up", "gate", "down")
+                    and hasattr(v, "ndim")
+                    and v.ndim >= 2
+                    and "embed" not in path
+                    and "patch_proj" not in path
+                    and "router" not in p  # keep routing exact (tiny)
+                    and v.shape[-2] >= min_dim
+                    and v.shape[-1] >= min_dim
+                    and v.shape[-2] % 2 == 0
+                ):
+                    out[k] = _pack_matrix(v)
+                else:
+                    out[k] = walk(v, p)
+            return out
+        return tree
+
+    return walk(params)

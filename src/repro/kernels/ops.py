@@ -1,0 +1,115 @@
+"""Public wrappers around the Pallas kernels.
+
+Handles shape padding to block multiples, scale/zero-point bookkeeping and
+backend dispatch (``interpret=True`` everywhere except real TPUs), and
+exposes a float-in/float-out ``packed_linear_apply`` used by the model zoo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantize import (
+    quantize_signed,
+    quantize_unsigned,
+    zero_point_correction,
+)
+from . import ref
+from .int4_matmul import int4_matmul
+from .packed_matmul import packed_matmul
+from .ref import INT4_EXACT, PackedDotSpec
+
+__all__ = [
+    "auto_interpret",
+    "packed_matmul_f32",
+    "int4_matmul_f32",
+    "quantized_matmul_ref",
+]
+
+
+def auto_interpret() -> bool:
+    """Pallas interpret mode everywhere but a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "block", "interpret", "use_kernel")
+)
+def packed_matmul_f32(
+    x: jax.Array,
+    w: jax.Array,
+    spec: PackedDotSpec = INT4_EXACT,
+    block=(128, 128, 128),
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """float (M, K) × float (K, N) through the pair-packed integer path.
+
+    Quantizes activations offset-binary unsigned (zero point folded back via
+    ``zero_point_correction``) and weights signed per output channel, runs
+    the packed integer matmul, and dequantizes.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    xq = quantize_unsigned(x, bits=spec.bits_a, axis=-1)
+    wq = quantize_signed(w, bits=spec.bits_w, axis=0)
+
+    bm, bn, bk = block
+    xv = _pad_to(_pad_to(xq.values, bm, 0), bk, 1)
+    wv = _pad_to(_pad_to(wq.values, bk, 0), bn, 1)
+    if use_kernel:
+        acc = packed_matmul(
+            xv, wv, spec=spec, block=block,
+            interpret=auto_interpret() if interpret is None else interpret,
+        )[:m, :n]
+    else:
+        acc = ref.ref_packed_matmul(xv, wv, spec=spec)[:m, :n]
+    acc = acc - zero_point_correction(wq.values, xq.zero_point)[None, :]
+    return acc.astype(jnp.float32) * xq.scale * wq.scale
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "use_kernel"))
+def int4_matmul_f32(
+    x: jax.Array,
+    w_packed: jax.Array,
+    w_scale: jax.Array,
+    block=(128, 128, 128),
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """float (M, K) × packed int4 (K//2, N) → f32, int8 activations."""
+    m, k = x.shape
+    xq = quantize_signed(x, bits=8, axis=-1)
+    bm, bn, bk = block
+    xv = _pad_to(_pad_to(xq.values, bm, 0), bk, 1)
+    wv = _pad_to(_pad_to(w_packed, bk // 2, 0), bn, 1)
+    if use_kernel:
+        acc = int4_matmul(
+            xv, wv, block=block,
+            interpret=auto_interpret() if interpret is None else interpret,
+        )[:m, : w_packed.shape[1]]
+    else:
+        acc = ref.ref_int4_matmul(xv, wv)[:m, : w_packed.shape[1]]
+    return acc.astype(jnp.float32) * xq.scale * w_scale
+
+
+def quantized_matmul_ref(x: jax.Array, w: jax.Array, bits: int = 4) -> jax.Array:
+    """Exact-arithmetic quantized matmul (no packing) — accuracy oracle."""
+    xq = quantize_unsigned(x, bits=bits, axis=-1)
+    wq = quantize_signed(w, bits=bits, axis=0)
+    acc = ref.ref_quantized_matmul(xq.values, wq.values)
+    acc = acc - zero_point_correction(wq.values, xq.zero_point)[None, :]
+    return acc.astype(jnp.float32) * xq.scale * wq.scale

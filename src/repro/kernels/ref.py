@@ -1,0 +1,220 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two compute paths (see DESIGN.md §2):
+
+* pair-packed "DSP-sim" matmul — the paper-faithful adaptation.  Activations
+  (unsigned, offset-binary) and weights (signed) are packed in pairs along K
+  into int32 words; ONE int32 multiply per pair produces the pair's
+  dot-product contribution in the middle bit field (the dot-product variant
+  of the paper's Eqn. 4: the outer-product cross terms land in the low/high
+  fields).  ``n_pairs`` words are accumulated before the field is extracted,
+  mirroring the paper's ``2**delta`` accumulation budget.
+
+* packed-storage int4 matmul — the production path: weights live in HBM as
+  two nibbles per byte (the *memory* translation of packing density), are
+  unpacked in VMEM and fed to the int8 MXU path.
+
+``ref_packed_matmul`` is bit-accurate to the kernel (same chunking,
+extraction and correction arithmetic) so kernels are tested for *bit
+equality*, errors included.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PackedDotSpec",
+    "INT4_EXACT",
+    "INT4_NAIVE",
+    "INT4_MR_OVERPACKED",
+    "INT2_EXACT",
+    "ref_packed_matmul",
+    "ref_quantized_matmul",
+    "pack_int4_weights",
+    "unpack_int4_weights",
+    "ref_int4_matmul",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedDotSpec:
+    """Parameters of the pair-packed int32 dot path.
+
+    ``p``        — field spacing in bits (the paper's result width + δ).
+    ``n_pairs``  — packed products accumulated per extraction
+                   (the paper's ``2**delta`` accumulation budget).
+    ``correction`` — ``naive`` (biased, Xilinx white-paper semantics),
+                   ``full`` (round-half-up, exact — paper §V-A) or
+                   ``mr`` (overpacked + MSB-restore, paper §VI-B).
+    ``mr_bits``  — overlap bits restored in ``mr`` mode.
+    """
+
+    bits_a: int = 4
+    bits_w: int = 4
+    p: int = 11
+    n_pairs: int = 4
+    correction: str = "full"
+    mr_bits: int = 0
+
+    def __post_init__(self) -> None:
+        if self.correction not in ("naive", "full", "mr"):
+            raise ValueError(f"bad correction {self.correction!r}")
+        max_a = (1 << self.bits_a) - 1
+        max_w = 1 << (self.bits_w - 1)
+        # int32 budget: |packed product sum| must stay below 2**31.
+        top = self.n_pairs * max_a * max_w * (1 << (2 * self.p))
+        mid = self.n_pairs * 2 * max_a * max_w * (1 << self.p)
+        low = self.n_pairs * max_a * max_w
+        if top + mid + low >= 1 << 31:
+            raise ValueError("spec overflows the int32 accumulator budget")
+        if self.correction != "mr":
+            # exact extraction needs the accumulated middle field to fit p bits
+            if self.n_pairs * 2 * max_a * max_w >= 1 << (self.p - 1):
+                raise ValueError(
+                    "middle field overflows spacing p; use mr correction"
+                )
+
+    @property
+    def chunk(self) -> int:
+        """K elements consumed per extraction."""
+        return 2 * self.n_pairs
+
+    @property
+    def extract_width(self) -> int:
+        return self.p + (self.mr_bits if self.correction == "mr" else 0)
+
+    def density_vs_int8(self) -> float:
+        """Multiplies saved vs one-multiply-per-product (2 products/mult)."""
+        return 2.0
+
+
+# Optimal 32-bit-budget presets (derived in DESIGN.md §2 / EXPERIMENTS §Perf).
+INT4_EXACT = PackedDotSpec(bits_a=4, bits_w=4, p=11, n_pairs=4, correction="full")
+INT4_NAIVE = PackedDotSpec(bits_a=4, bits_w=4, p=11, n_pairs=4, correction="naive")
+# Overpacked: spacing squeezed 11->10, 4x longer accumulation chains; the 3
+# contaminated MSBs of the middle field are restored from exactly-computed
+# LSBs of the high field (paper Eqns. 8/9 generalized to sums: products mod 8).
+INT4_MR_OVERPACKED = PackedDotSpec(
+    bits_a=4, bits_w=4, p=10, n_pairs=16, correction="mr", mr_bits=3
+)
+INT2_EXACT = PackedDotSpec(bits_a=2, bits_w=2, p=10, n_pairs=32, correction="full")
+
+
+def _sext(v: jax.Array, width: int) -> jax.Array:
+    mask = jnp.int32((1 << width) - 1)
+    sign = jnp.int32(1 << (width - 1))
+    return ((v & mask) ^ sign) - sign
+
+
+def _pack_words(x_u: jax.Array, w_s: jax.Array, spec: PackedDotSpec):
+    """Pair along K: A = a_even + a_odd<<p ; W = w_odd + w_even<<p."""
+    m, k = x_u.shape
+    _, n = w_s.shape
+    xa = x_u.astype(jnp.int32).reshape(m, k // 2, 2)
+    ws = w_s.astype(jnp.int32).reshape(k // 2, 2, n)
+    a_words = xa[:, :, 0] + (xa[:, :, 1] << spec.p)
+    w_words = ws[:, 1, :] + (ws[:, 0, :] << spec.p)
+    return a_words, w_words
+
+
+def ref_packed_matmul(
+    x_u: jax.Array, w_s: jax.Array, spec: PackedDotSpec = INT4_EXACT
+) -> jax.Array:
+    """Bit-accurate jnp mirror of the pair-packed Pallas kernel.
+
+    ``x_u``: (M, K) unsigned ints (0..2^bits_a-1) stored in any int dtype.
+    ``w_s``: (K, N) signed ints.  K must divide by ``spec.chunk``.
+    Returns int32 (M, N).
+    """
+    m, k = x_u.shape
+    if k % spec.chunk:
+        raise ValueError(f"K={k} not a multiple of chunk={spec.chunk}")
+    a_words, w_words = _pack_words(x_u, w_s, spec)
+    n = w_s.shape[1]
+    acc = jnp.zeros((m, n), dtype=jnp.int32)
+    xa = x_u.astype(jnp.int32).reshape(m, k // 2, 2)
+    ws = w_s.astype(jnp.int32).reshape(k // 2, 2, n)
+    for c in range(k // spec.chunk):
+        sl = slice(c * spec.n_pairs, (c + 1) * spec.n_pairs)
+        partial = jax.lax.dot_general(
+            a_words[:, sl],
+            w_words[sl, :],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + _extract_mid(partial, spec, xa[:, sl], ws[sl])
+    return acc
+
+
+def _extract_mid(partial, spec: PackedDotSpec, xa_chunk, ws_chunk):
+    """Extract the accumulated middle (dot-product) field of the packed sum."""
+    we = spec.extract_width
+    if spec.correction == "full":
+        t = ((partial >> (spec.p - 1)) + 1) >> 1
+        return _sext(t, we)
+    if spec.correction == "naive":
+        return _sext(partial >> spec.p, we)
+    # mr: spacing was squeezed by mr_bits; the top mr_bits of the middle
+    # field overlap the high field's LSBs.  Those LSBs are the low bits of
+    # Σ a_odd·w_even, computed exactly mod 2**mr_bits and subtracted
+    # (then round-half-up for the low-field borrow, beyond-paper combo).
+    mask = jnp.int32((1 << spec.mr_bits) - 1)
+    contam = jax.lax.dot_general(
+        xa_chunk[:, :, 1] & mask,
+        ws_chunk[:, 0, :] & mask,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ) & mask
+    t = ((partial >> (spec.p - 1)) + 1) >> 1
+    e = _sext(t, we)
+    return _sext(e - (contam << (we - spec.mr_bits)), we)
+
+
+def ref_quantized_matmul(x_u: jax.Array, w_s: jax.Array) -> jax.Array:
+    """The mathematically exact unsigned×signed integer matmul (int32)."""
+    return jax.lax.dot_general(
+        x_u.astype(jnp.int32),
+        w_s.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+# ---- packed-storage int4 (production path) ------------------------------
+
+
+def pack_int4_weights(w_s: np.ndarray | jax.Array) -> jax.Array:
+    """(K, N) int4 values -> (K//2, N) uint8, two nibbles per byte."""
+    w = jnp.asarray(w_s, dtype=jnp.int8)
+    k = w.shape[0]
+    if k % 2:
+        raise ValueError("K must be even to pack nibbles")
+    lo = w[0::2] & 0xF
+    hi = w[1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_weights(packed: jax.Array) -> jax.Array:
+    """(K//2, N) uint8 -> (K, N) int8 with sign-extended nibbles."""
+    b = packed.astype(jnp.int8)
+    lo = (b << 4) >> 4  # arithmetic shift sign-extends the low nibble
+    hi = b >> 4
+    k2, n = packed.shape
+    out = jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+    return out
+
+
+def ref_int4_matmul(x_q: jax.Array, w_packed: jax.Array) -> jax.Array:
+    """Oracle for the production kernel: unpack then exact int32 matmul."""
+    w = unpack_int4_weights(w_packed)
+    return jax.lax.dot_general(
+        x_q.astype(jnp.int32),
+        w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )

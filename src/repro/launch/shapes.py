@@ -1,0 +1,97 @@
+"""Assigned input-shape sets and per-cell input_specs (ShapeDtypeStructs).
+
+Four shapes per LM arch (40 cells total):
+  train_4k     seq 4 096 × global_batch 256   → train_step
+  prefill_32k  seq 32 768 × global_batch 32   → prefill_step
+  decode_32k   KV depth 32 768 × batch 128    → serve_step
+  long_500k    KV depth 524 288 × batch 1     → serve_step (sub-quadratic only)
+
+``supported()`` encodes the DESIGN.md §5 skip table: ``long_500k`` needs a
+sub-quadratic decode path (SWA ring buffer, SSM state, or hybrid), pure
+full-attention archs skip it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "supported", "cache_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid") or cfg.sliding_window is not None
+        )
+        if not sub_quadratic:
+            return False, (
+                "pure full-attention arch: 500k decode needs sub-quadratic "
+                "attention (skip noted in DESIGN.md §5)"
+            )
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((b, cfg.encoder_len, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((b, s - cfg.n_patches), i32),
+                "labels": _sds((b, s - cfg.n_patches), i32),
+                "patches": _sds((b, cfg.n_patches, cfg.d_model), bf16),
+            }
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((b, cfg.encoder_len, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((b, s - cfg.n_patches), i32),
+                "patches": _sds((b, cfg.n_patches, cfg.d_model), bf16),
+            }
+        return batch
+    # decode: one new token against a cache of depth s
+    batch = {"tokens": _sds((b, 1), i32), "positions": _sds((b, 1), i32)}
+    if cfg.family == "encdec":
+        batch["encoder_out"] = _sds((b, cfg.encoder_len, cfg.d_model), bf16)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct tree for the decode cache of this cell."""
+    from ..models import transformer as T
+
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )

@@ -1,0 +1,181 @@
+"""train_step / prefill_step / serve_step — the jit roots.
+
+These are the functions the dry-run lowers for every (arch × shape × mesh)
+cell and the train/serve drivers run for real.  Sharding constraints that
+depend on the mesh are injected via the ``mesh`` argument; everything else
+is pure model math.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import contextlib
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamWConfig, adamw_update
+from ..runtime.act_sharding import activation_sharding
+from ..runtime.compression import compressed_grads
+from ..runtime.sharding import logits_pspec
+
+
+def _act_ctx(mesh, group_shardings=None):
+    if mesh is None:
+        return contextlib.nullcontext()
+    return activation_sharding(mesh, group_shardings)
+
+__all__ = ["loss_fn", "make_train_step", "make_prefill_step", "make_serve_step"]
+
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: dict[str, jax.Array],
+    mesh=None,
+    aux_weight: float = 0.01,
+    z_weight: float = 1e-4,
+):
+    """Next-token CE (+ MoE aux + z-loss).  Logits stay vocab-sharded."""
+    kw: dict[str, Any] = {}
+    if cfg.family == "encdec":
+        kw["encoder_out"] = T.encode(params, cfg, batch["frames"])
+    if cfg.family == "vlm":
+        kw["patch_embeds"] = batch["patches"]
+    logits, _, aux = T.forward(params, cfg, batch["tokens"], **kw)
+    if mesh is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits,
+            NamedSharding(mesh, logits_pspec(mesh, batch["tokens"].shape[0])),
+        )
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # patches carry no labels
+        logits = logits[:, -labels.shape[1] :]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    z = jnp.mean(jnp.square(lse))
+    return ce + aux_weight * aux + z_weight * z, {"ce": ce, "aux": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh=None,
+    lr_schedule=None,
+    compress_grads: bool = False,
+    grad_shardings=None,
+    microbatches: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", ("error_buf")}.  Gradient compression
+    (int8 + error feedback) applies between grad and optimizer — the
+    cross-pod reduction then carries int8-representable values.
+    ``microbatches > 1`` = gradient accumulation: the global batch is
+    processed in sequential slices, dividing activation memory by the
+    slice count (the loop is unrolled so XLA cost analysis stays exact).
+    """
+
+    compute_dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+    def cast_for_compute(p):
+        # mixed-precision FSDP: matrices are all-gathered in bf16 (half the
+        # collective bytes); small/1-D leaves stay f32 (norms, biases).
+        if p.dtype == jnp.float32 and p.ndim > 1:
+            return p.astype(compute_dtype)
+        return p
+
+    def train_step(state, batch):
+        def loss_of(p, b):
+            pc = jax.tree.map(cast_for_compute, p)
+            with _act_ctx(mesh):
+                return loss_fn(pc, cfg, b, mesh)
+
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                state["params"], batch
+            )
+        else:
+            losses, grads, metrics = [], None, None
+            for i in range(microbatches):  # unrolled accumulation
+                mb = {
+                    k: v.reshape(microbatches, -1, *v.shape[1:])[i]
+                    for k, v in batch.items()
+                }
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    state["params"], mb
+                )
+                losses.append(l)
+                metrics = m
+                grads = (
+                    g
+                    if grads is None
+                    else jax.tree.map(jnp.add, grads, g)
+                )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = sum(losses) / microbatches
+        if grad_shardings is not None:
+            # pin gradients to the parameter (FSDP) layout right at the
+            # autodiff boundary: XLA then emits reduce-scatter instead of
+            # all-reduce + slice for the data-parallel reduction
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads,
+                grad_shardings,
+            )
+        if compress_grads:
+            grads, new_err = compressed_grads(grads, state["error_buf"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg, lr_schedule
+        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if compress_grads:
+            new_state["error_buf"] = new_err
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, group_shardings=None):
+    """Full-sequence forward → (last-position logits).  Inference prefill."""
+
+    def prefill_step(params, batch):
+        kw: dict[str, Any] = {}
+        with _act_ctx(mesh, group_shardings):
+            if cfg.family == "encdec":
+                kw["encoder_out"] = T.encode(params, cfg, batch["frames"])
+            if cfg.family == "vlm":
+                kw["patch_embeds"] = batch["patches"]
+            logits, _, _ = T.forward(params, cfg, batch["tokens"], **kw)
+            return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, group_shardings=None):
+    """One decode step over a KV/state cache of ``seq_len`` depth."""
+
+    def serve_step(params, cache, batch):
+        kw: dict[str, Any] = {}
+        with _act_ctx(mesh, group_shardings):
+            if cfg.family == "encdec":
+                kw["encoder_out"] = batch["encoder_out"]
+            logits, new_cache, _ = T.forward(
+                params,
+                cfg,
+                batch["tokens"],
+                positions=batch["positions"],
+                cache=cache,
+                **kw,
+            )
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, new_cache
+
+    return serve_step

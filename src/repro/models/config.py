@@ -1,0 +1,84 @@
+"""ModelConfig — one dataclass describes every assigned architecture family."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.packed_linear import LinearSpec
+
+__all__ = ["ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int | None = None  # SWA (h2o-danube); None = full attention
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    mlp_variant: str = "swiglu"  # swiglu (3-matrix) | gelu (2-matrix)
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+
+    # hybrid (jamba): one attention layer per `attn_every` layers, rest Mamba
+    attn_every: int = 0
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # xlstm: one sLSTM per `slstm_every` layers, rest mLSTM
+    slstm_every: int = 0
+
+    # encoder-decoder (whisper): encoder depth + fixed source length
+    n_encoder_layers: int = 0
+    encoder_len: int = 1500
+
+    # vlm (llava): stub patch embeddings prepended to the sequence
+    n_patches: int = 0
+
+    # compilation / memory policy
+    scan_layers: bool = True
+    remat: str = "dots"  # none | dots | full
+    # flash-style online-softmax attention chunk (0 = off; train/prefill
+    # only).  Off by default so baselines measure the naive S² attention;
+    # the optimized configs flip it (EXPERIMENTS.md §Perf iteration 4).
+    attention_chunk: int = 0
+    dtype: str = "bfloat16"
+    quant: LinearSpec = LinearSpec()
+
+    # ---- derived -------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def group_size(self) -> int:
+        """Layers per scan group (identical structure within a group)."""
+        if self.family == "hybrid" and self.attn_every:
+            return self.attn_every
+        if self.family == "ssm" and self.slstm_every:
+            return self.slstm_every
+        return 1
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0, (
+            self.n_layers,
+            self.group_size,
+        )
+        return self.n_layers // self.group_size
+
+    # Exact parameter counts are computed from the eval_shape'd param tree in
+    # ``repro.launch.dryrun`` (MoE active share derived from expert leaves).

@@ -1,0 +1,273 @@
+"""Shared transformer layers (pure JAX, functional, pytree params).
+
+Every projection goes through ``PackedLinear`` so the paper's packed
+low-precision arithmetic is selectable per-model via ``cfg.quant``.
+
+KV caches:
+  * full attention — cache shape (B, S_max, n_kv, hd), written at ``pos``.
+  * sliding-window (SWA) — ring buffer of ``window`` slots written at
+    ``pos % window``; decode attends over at most ``window`` keys, making
+    long-context decode O(window) (sub-quadratic — DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packed_linear import LinearSpec, apply_linear, init_linear
+from ..runtime.act_sharding import constrain
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+NEG_INF = -1e9  # mask value safe in bf16
+
+
+# ---- norms ---------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    # Variance is accumulated in f32 WITHOUT materializing an f32 copy of x
+    # (a (B,S,D) f32 intermediate would double the residual-stream collective
+    # bytes under TP — EXPERIMENTS.md §Perf iteration 2); the normalization
+    # itself runs in the compute dtype.
+    var = (
+        jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+        / x.shape[-1]
+    )
+    scale = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * scale * params["scale"].astype(x.dtype)
+
+
+# ---- rotary embeddings -----------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,).
+
+    Angles are formed in f32 (huge positions at 500k context), but the
+    rotation itself runs in the compute dtype: an f32 rotation would
+    materialize f32 (B,S,H,hd) tensors whose gathers/cotangents dominate
+    TP collective bytes (EXPERIMENTS.md §Perf iteration 2).
+    """
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    if angles.ndim == 2:  # (S, hd/2) -> broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---- attention -------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype=dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.broadcast_to(
+        x[:, :, :, None, :], (b, s, kv, n_rep, hd)
+    ).reshape(b, s, kv * n_rep, hd)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: Params | None = None,
+    causal: bool = True,
+    kv_x: jax.Array | None = None,
+) -> tuple[jax.Array, Params | None]:
+    """GQA attention. ``cache=None`` → full-sequence (train/prefill).
+
+    ``kv_x`` switches to cross-attention (whisper decoder): K/V come from
+    ``kv_x`` and neither causality nor cache updates apply to the source.
+    """
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    spec = cfg.quant
+
+    q = constrain(_split_heads(apply_linear(params["wq"], x, spec), nh, hd), "heads")
+    src = x if kv_x is None else kv_x
+    k = constrain(_split_heads(apply_linear(params["wk"], src, spec), nkv, hd), "heads")
+    v = constrain(_split_heads(apply_linear(params["wv"], src, spec), nkv, hd), "heads")
+
+    if kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode (s==1) or cached prefill (s>1, full attention only):
+        # write K/V at `pos`, attend over the cache.
+        window = cache["k"].shape[1]
+        pos = positions.reshape(-1)[0] if positions.ndim else positions
+        slot = pos % window if cfg.sliding_window else pos
+        k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": k_all, "v": v_all}
+        k, v = k_all, v_all
+        cache_positions = jnp.arange(window)
+        qidx = jnp.arange(s)
+        if cfg.sliding_window:
+            # ring buffer (decode): every slot written so far is in-window
+            valid = ((cache_positions <= slot) | (pos >= window))[None, :]
+        else:
+            valid = cache_positions[None, :] <= pos + qidx[:, None]
+        mask = jnp.where(valid[None, None, :, :], 0.0, NEG_INF)
+    elif causal:
+        ii = positions if positions.ndim == 2 else positions[None]
+        qi = ii[:, :, None]
+        ki = ii[:, None, :]
+        ok = ki <= qi
+        if cfg.sliding_window:
+            ok &= ki > qi - cfg.sliding_window
+        mask = jnp.where(ok[:, None, :, :], 0.0, NEG_INF)
+    else:
+        mask = None
+
+    k = _repeat_kv(k, nh // nkv)
+    v = _repeat_kv(v, nh // nkv)
+    use_chunked = (
+        cache is None
+        and kv_x is None
+        and causal
+        and cfg.attention_chunk
+        and s > cfg.attention_chunk
+        and s % cfg.attention_chunk == 0
+    )
+    if use_chunked:
+        out = _chunked_causal_attention(
+            q, k, v, positions, cfg.attention_chunk, cfg.sliding_window
+        )
+    else:
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * hd**-0.5
+        if cache is not None:
+            scores = constrain(scores, "scores_decode")
+        if mask is not None:
+            scores = scores + mask
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(b, s, nh * hd)
+    return apply_linear(params["wo"], out, spec), new_cache
+
+
+def _chunked_causal_attention(q, k, v, positions, chunk: int, window: int | None):
+    """Online-softmax (flash-style) causal attention, O(S·chunk) memory.
+
+    Scans KV chunks with running (max, denom, acc) — the S×S f32 score
+    matrix is never materialized, which is what makes the 4k/32k train and
+    prefill cells fit HBM (EXPERIMENTS.md §Perf iteration 4).  Positions
+    must be the standard arange layout (asserted by the caller's shapes).
+    """
+    b, s, h, hd = q.shape
+    scale = hd**-0.5
+    n_chunks = s // chunk
+    q_pos = jnp.arange(s)
+    kc = k.reshape(b, n_chunks, chunk, h, hd).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).swapaxes(0, 1)
+
+    def body(carry, xs):
+        m, l, acc = carry  # (B,H,S), (B,H,S), (B,H,S,hd)
+        k_i, v_i, idx = xs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        scores = (
+            jnp.einsum("bqhd,bkhd->bhqk", q, k_i).astype(jnp.float32) * scale
+        )  # (B,H,S,chunk)
+        ok = k_pos[None, :] <= q_pos[:, None]
+        if window:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(ok[None, None], scores, NEG_INF)
+        m_i = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m, m_i)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, h, s), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, s), jnp.float32),
+        jnp.zeros((b, h, s, hd), jnp.float32),
+    )
+    # checkpoint: the backward pass recomputes the (B,H,S,chunk) score block
+    # instead of storing one per chunk (flash-attention memory profile);
+    # full unroll keeps XLA cost analysis exact (loop bodies count once).
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (kc, vc, jnp.arange(n_chunks)),
+        unroll=n_chunks,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B,S,H,hd)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    window = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, window, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---- MLP -------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32, d_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "up": init_linear(ks[0], d, f, dtype=dtype),
+        "gate": init_linear(ks[1], d, f, dtype=dtype),
+        "down": init_linear(ks[2], f, d, dtype=dtype),
+    }
+
+
+def mlp(params: Params, x: jax.Array, spec: LinearSpec) -> jax.Array:
+    if "gate" not in params:  # 2-matrix GELU variant (whisper/starcoder)
+        return gelu_mlp(params, x, spec)
+    up = constrain(apply_linear(params["up"], x, spec), "hidden")
+    gate = constrain(apply_linear(params["gate"], x, spec), "hidden")
+    return apply_linear(params["down"], jax.nn.silu(gate) * up, spec)
+
+
+def init_gelu_mlp(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    """Whisper/starcoder-style 2-matrix GELU MLP."""
+    ks = jax.random.split(key, 2)
+    return {
+        "up": init_linear(ks[0], cfg.d_model, cfg.d_ff, dtype=dtype),
+        "down": init_linear(ks[1], cfg.d_ff, cfg.d_model, dtype=dtype),
+    }
+
+
+def gelu_mlp(params: Params, x: jax.Array, spec: LinearSpec) -> jax.Array:
+    hidden = constrain(apply_linear(params["up"], x, spec), "hidden")
+    return apply_linear(params["down"], jax.nn.gelu(hidden), spec)

@@ -1,0 +1,323 @@
+"""State-space / recurrent mixers: Mamba (jamba) and xLSTM (sLSTM + mLSTM).
+
+All are O(L) in sequence length with O(1)-per-token decode state — these are
+the families that make the ``long_500k`` cells runnable (DESIGN.md §5).
+
+Training/prefill uses chunked scans (``lax.scan`` over chunks of
+``CHUNK`` tokens, parallel math within a chunk) to bound activation memory
+and keep the lowered HLO small; decode advances the carried state one step.
+Projections route through PackedLinear like every other matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packed_linear import apply_linear, init_linear
+from .config import ModelConfig
+from .layers import Params, rmsnorm, init_rmsnorm
+
+CHUNK = 256
+
+__all__ = [
+    "init_mamba", "mamba", "init_mamba_cache",
+    "init_mlstm", "mlstm", "init_mlstm_cache",
+    "init_slstm", "slstm", "init_slstm_cache",
+]
+
+
+# ---- Mamba (selective SSM) -------------------------------------------------
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    di = d * cfg.mamba_expand
+    ds, dc, dr = cfg.mamba_d_state, cfg.mamba_d_conv, _dt_rank(cfg)
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_linear(ks[2], di, dr + 2 * ds, dtype=dtype),
+        "dt_proj": init_linear(ks[3], dr, di, bias=True, dtype=dtype),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[4], di, d, dtype=dtype),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di = cfg.d_model * cfg.mamba_expand
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), dtype),
+    }
+
+
+def _causal_conv(x, w, b, prev):
+    """Depthwise causal conv1d.  x: (B, L, di); prev: (B, dc-1, di)."""
+    dc = w.shape[0]
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(dc)
+    )
+    return out + b[None, None, :], xp[:, -(dc - 1):, :]
+
+
+def mamba(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    b, l, d = x.shape
+    di = d * cfg.mamba_expand
+    ds, dr = cfg.mamba_d_state, _dt_rank(cfg)
+    spec = cfg.quant
+
+    xz = apply_linear(params["in_proj"], x, spec)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    prev = (
+        cache["conv"]
+        if cache is not None
+        else jnp.zeros((b, cfg.mamba_d_conv - 1, di), xin.dtype)
+    )
+    xc, conv_state = _causal_conv(
+        xin, params["conv_w"].astype(xin.dtype), params["conv_b"].astype(xin.dtype), prev
+    )
+    xc = jax.nn.silu(xc)
+
+    proj = apply_linear(params["x_proj"], xc, spec).astype(jnp.float32)
+    dt_in, bmat, cmat = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        apply_linear(params["dt_proj"], dt_in.astype(x.dtype), spec).astype(jnp.float32)
+    )  # (B, L, di)
+    a = -jnp.exp(params["a_log"])  # (di, ds)
+
+    h0 = (
+        cache["h"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((b, di, ds), jnp.float32)
+    )
+    xf = xc.astype(jnp.float32)
+
+    def chunk_step(h, args):
+        dt_c, b_c, c_c, u_c = args  # (B, C, di) / (B, C, ds) / ...
+        decay = jnp.exp(dt_c[..., None] * a[None, None])  # (B, C, di, ds)
+        drive = (dt_c * u_c)[..., None] * b_c[:, :, None, :]  # (B, C, di, ds)
+        # within-chunk associative scan over the time axis
+        def combine(p, q):
+            return (p[0] * q[0], p[1] * q[0] + q[1])
+        dec_cum, drv_cum = jax.lax.associative_scan(
+            combine, (decay, drive), axis=1
+        )
+        h_t = dec_cum * h[:, None] + drv_cum  # (B, C, di, ds)
+        y = jnp.einsum("bcds,bcs->bcd", h_t, c_c)
+        return h_t[:, -1], y
+
+    n_chunks = max(1, l // CHUNK)
+    cl = l // n_chunks
+    assert cl * n_chunks == l, (l, CHUNK)
+    resh = lambda v: v.reshape(b, n_chunks, cl, v.shape[-1]).swapaxes(0, 1)
+    h_fin, ys = jax.lax.scan(
+        chunk_step, h0, (resh(dt), resh(bmat), resh(cmat), resh(xf))
+    )
+    y = ys.swapaxes(0, 1).reshape(b, l, di)
+    y = y + xf * params["d_skip"][None, None, :]
+    out = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = apply_linear(params["out_proj"], out, spec)
+    new_cache = (
+        {"conv": conv_state.astype(prev.dtype), "h": h_fin.astype(h0.dtype)}
+        if cache is not None
+        else None
+    )
+    return out, new_cache
+
+
+# ---- mLSTM (matrix-memory LSTM, chunkwise) ---------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    return {
+        "wq": init_linear(ks[0], d, d, dtype=dtype),
+        "wk": init_linear(ks[1], d, d, dtype=dtype),
+        "wv": init_linear(ks[2], d, d, dtype=dtype),
+        "wi": init_linear(ks[3], d, cfg.n_heads, bias=True, dtype=dtype),
+        "wf": init_linear(ks[4], d, cfg.n_heads, bias=True, dtype=dtype),
+        "wo": init_linear(ks[5], d, d, dtype=dtype),
+        "norm": init_rmsnorm(d, dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    hd = cfg.d_model // cfg.n_heads
+    return {
+        "c": jnp.zeros((batch, cfg.n_heads, hd, hd), dtype),
+        "n": jnp.zeros((batch, cfg.n_heads, hd), dtype),
+        "m": jnp.zeros((batch, cfg.n_heads), dtype),
+    }
+
+
+def mlstm(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    """Chunkwise stabilized mLSTM: C_t = f C_{t-1} + i v kᵀ; y = Cq/max(n·q,1)."""
+    b, l, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    spec = cfg.quant
+
+    def heads(v):
+        return v.reshape(b, l, h, hd).transpose(0, 2, 1, 3)  # (B, H, L, hd)
+
+    q = heads(apply_linear(params["wq"], x, spec)).astype(jnp.float32) * hd**-0.5
+    k = heads(apply_linear(params["wk"], x, spec)).astype(jnp.float32) * hd**-0.5
+    v = heads(apply_linear(params["wv"], x, spec)).astype(jnp.float32)
+    ig = apply_linear(params["wi"], x, spec).astype(jnp.float32).transpose(0, 2, 1)
+    fg = apply_linear(params["wf"], x, spec).astype(jnp.float32).transpose(0, 2, 1)
+    logf = -jax.nn.softplus(-fg)  # log sigmoid(f̃)  (B, H, L)
+
+    if cache is not None:
+        c0 = cache["c"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+    else:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -30.0, jnp.float32)
+
+    n_chunks = max(1, l // CHUNK)
+    cl = l // n_chunks
+    assert cl * n_chunks == l
+
+    def chunk_step(carry, args):
+        c, n, m = carry
+        q_c, k_c, v_c, i_c, lf_c = args  # (B,H,C,·)
+        csum = jnp.cumsum(lf_c, axis=-1)  # Σ_{t<=j} log f_t  (B,H,C)
+        total = csum[..., -1]
+        # per-position stabilizer: m_j = g_j + csum_j with
+        # g_j = max(m_carry, cummax_{t<=j}(i_t - csum_t)); every exponent
+        # used below is then <= 0 (xLSTM stabilization, chunkwise form).
+        g = jnp.maximum(
+            m[..., None], jax.lax.cummax(i_c - csum, axis=i_c.ndim - 1)
+        )  # (B,H,C)
+        # inter-chunk: carried state contribution at each position
+        dec_q = jnp.exp(m[..., None] - g)  # (B,H,C)  = exp(csum+m-m_pos)
+        y_inter = jnp.einsum("bhcd,bhde->bhce", q_c, c) * dec_q[..., None]
+        n_inter = jnp.einsum("bhcd,bhd->bhc", q_c, n) * dec_q
+        # intra-chunk: masked decay-weighted attention term
+        gates = (i_c - csum)[:, :, None, :] - g[..., None]  # (B,H,row,col)
+        mask = jnp.tril(jnp.ones((cl, cl), bool))
+        w_att = jnp.where(mask[None, None], jnp.exp(gates), 0.0)
+        scores = jnp.einsum("bhcd,bhed->bhce", q_c, k_c) * w_att
+        y_intra = jnp.einsum("bhce,bhed->bhcd", scores, v_c)
+        n_intra = jnp.sum(scores, axis=-1)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-g - csum))
+        y = (y_inter + y_intra) / denom[..., None]
+        # carry update for the next chunk (stabilizer m_last = g_last+total)
+        g_last = g[..., -1]
+        dec_c = jnp.exp(m - g_last)
+        add_w = jnp.exp(i_c - csum - g_last[..., None])
+        c_new = c * dec_c[..., None, None] + jnp.einsum(
+            "bhc,bhcd,bhce->bhde", add_w, k_c, v_c
+        )
+        n_upd = n * dec_c[..., None] + jnp.einsum("bhc,bhcd->bhd", add_w, k_c)
+        return (c_new, n_upd, g_last + total), y
+
+    resh = lambda t: t.reshape(b, h, n_chunks, cl, *t.shape[3:]).transpose(
+        2, 0, 1, 3, *range(4, t.ndim + 1)
+    )
+    q_s, k_s, v_s = (resh(t) for t in (q, k, v))
+    i_s = ig.reshape(b, h, n_chunks, cl).transpose(2, 0, 1, 3)
+    f_s = logf.reshape(b, h, n_chunks, cl).transpose(2, 0, 1, 3)
+    (c_f, n_f, m_f), ys = jax.lax.scan(chunk_step, (c0, n0, m0), (q_s, k_s, v_s, i_s, f_s))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, l, hd).transpose(0, 2, 1, 3)
+    y = y.reshape(b, l, d).astype(x.dtype)
+    out = apply_linear(params["wo"], rmsnorm(params["norm"], y), spec)
+    new_cache = (
+        {"c": c_f.astype(cache["c"].dtype), "n": n_f.astype(cache["n"].dtype), "m": m_f.astype(cache["m"].dtype)}
+        if cache is not None
+        else None
+    )
+    return out, new_cache
+
+
+# ---- sLSTM (scalar-memory LSTM, sequential) --------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    return {
+        "wz": init_linear(ks[0], d, d, bias=True, dtype=dtype),
+        "wi": init_linear(ks[1], d, d, bias=True, dtype=dtype),
+        "wf": init_linear(ks[2], d, d, bias=True, dtype=dtype),
+        "wo_gate": init_linear(ks[3], d, d, bias=True, dtype=dtype),
+        "wo": init_linear(ks[4], d, d, dtype=dtype),
+        "norm": init_rmsnorm(d, dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, d), -30.0, dtype),
+    }
+
+
+def slstm(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    b, l, d = x.shape
+    spec = cfg.quant
+    z = jnp.tanh(apply_linear(params["wz"], x, spec)).astype(jnp.float32)
+    ig = apply_linear(params["wi"], x, spec).astype(jnp.float32)
+    fg = apply_linear(params["wf"], x, spec).astype(jnp.float32)
+    og = jax.nn.sigmoid(apply_linear(params["wo_gate"], x, spec)).astype(jnp.float32)
+
+    if cache is not None:
+        c0, n0, m0 = (cache[k].astype(jnp.float32) for k in ("c", "n", "m"))
+    else:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, d), -30.0, jnp.float32)
+
+    def step(carry, args):
+        c, n, m = carry
+        z_t, i_t, f_t, o_t = args
+        logf = -jax.nn.softplus(-f_t)  # exp-gate via log sigmoid (stabilized)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_s = jnp.exp(i_t - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z_t
+        n_new = f_s * n + i_s
+        h = o_t * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new), h
+
+    xs = tuple(t.swapaxes(0, 1) for t in (z, ig, fg, og))  # (L, B, d)
+    (c_f, n_f, m_f), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    out = apply_linear(params["wo"], rmsnorm(params["norm"], y), spec)
+    new_cache = (
+        {"c": c_f.astype(cache["c"].dtype), "n": n_f.astype(cache["n"].dtype), "m": m_f.astype(cache["m"].dtype)}
+        if cache is not None
+        else None
+    )
+    return out, new_cache

@@ -1,0 +1,30 @@
+"""LR schedules (cosine with linear warmup, constant, rsqrt)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_with_warmup", "constant", "rsqrt"]
+
+
+def cosine_with_warmup(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def rsqrt(peak_lr: float, warmup: int):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        return peak_lr * jnp.minimum(step / max(warmup, 1), jnp.sqrt(warmup / jnp.maximum(step, 1.0)))
+
+    return sched

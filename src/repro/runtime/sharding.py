@@ -1,0 +1,210 @@
+"""Sharding policy: logical-axis rules → PartitionSpecs per (arch × shape).
+
+Mesh axes (launch/mesh.py):
+  single-pod   (16, 16)        ("data", "model")
+  multi-pod    (2, 16, 16)     ("pod", "data", "model")
+
+Logical policy (DESIGN.md §4):
+  * FSDP: parameters, gradients and optimizer state shard their largest
+    non-"model" dimension over the composite ``fsdp = ("pod","data")`` axis.
+  * TP (Megatron): attention heads / FFN inner dim / experts / vocab shard
+    over "model"; row-parallel partners shard the opposite dim.
+  * batch shards over fsdp for train/prefill/decode; ``long_500k``
+    (batch=1) shards the KV/state *sequence or head* dims instead (SP).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "fsdp_axes",
+    "param_pspec",
+    "param_shardings",
+    "batch_pspec",
+    "cache_pspec",
+    "logits_pspec",
+]
+
+
+def fsdp_axes(mesh: Mesh):
+    """The composite data/FSDP axis: ("pod","data") when a pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _divisible(size: int, mesh: Mesh, axes) -> bool:
+    n = 1
+    for a in axes if isinstance(axes, tuple) else (axes,):
+        n *= mesh.shape[a]
+    return size % n == 0
+
+
+def param_pspec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Map one parameter (by its tree path) to a PartitionSpec.
+
+    Conventions: stacked scan/group/expert axes lead; 2-D weights are
+    (d_in, d_out).  TP axis choice follows Megatron: column-parallel for
+    up/QKV (out dim on "model"), row-parallel for down/out projections
+    (in dim on "model").  The remaining large dim takes FSDP.
+    """
+    fsdp = fsdp_axes(mesh)
+    fs = fsdp if len(fsdp) > 1 else fsdp[0]
+    name = path.lower()
+
+    def ok(dim_size, axis) -> bool:
+        return _divisible(dim_size, mesh, axis)
+
+    # biases / norm scales / small vectors: replicate (possibly stacked)
+    if len(shape) <= 1 or name.endswith("/b") or "scale" in name or "norm" in name:
+        return P(*(None,) * len(shape))
+
+    ndim = len(shape)
+    lead = ndim - 2  # stacked axes (groups, experts, slots...)
+    d_in, d_out = shape[-2], shape[-1]
+
+    # exact path-token matching (substring matching once made 'groups'
+    # match 'up' and col-sharded every stacked weight — §Perf iteration 7)
+    tokens = set(name.split("/"))
+    col = bool(
+        tokens
+        & {
+            "wq", "wk", "wv", "up", "gate", "in_proj", "wz", "wi", "wf",
+            "wo_gate", "lm_head", "x_proj", "dt_proj", "patch_proj",
+        }
+    )
+    row = bool(tokens & {"wo", "down", "out_proj"})
+    if "embed" in name:
+        # (vocab, d): vocab on model (TP vocab-parallel), d on fsdp
+        spec = [None] * ndim
+        if ok(d_in, "model"):
+            spec[-2] = "model"
+        if ok(d_out, fs):
+            spec[-1] = fs
+        return P(*spec)
+    spec: list[Any] = [None] * ndim
+    # expert parallelism: the innermost lead axis of a MoE expert stack is
+    # the expert axis; shard it over "model".  Matched on the '/moe/' path
+    # segment — substring matching on 'up' once matched 'groUPs' and
+    # stack-sharded every dense weight (§Perf iteration 7).
+    if lead >= 1 and "/moe/" in name and "router" not in name:
+        li = lead - 1
+        if ok(shape[li], "model") and shape[li] >= 4:
+            spec[li] = "model"
+            # EP consumed the model axis: FSDP the biggest matrix dim
+            big = -1 if d_out >= d_in else -2
+            if ok(shape[big], fs):
+                spec[big] = fs
+            return P(*spec)
+    if col and ok(d_out, "model"):
+        spec[-1] = "model"
+        if ok(d_in, fs):
+            spec[-2] = fs
+    elif row and ok(d_in, "model"):
+        spec[-2] = "model"
+        if ok(d_out, fs):
+            spec[-1] = fs
+    else:  # fallback: FSDP the larger dim
+        big = -1 if d_out >= d_in else -2
+        if ok(shape[big], fs):
+            spec[big] = fs
+    return P(*spec)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, serving: bool = False) -> Any:
+    """ShapeDtypeStruct tree → NamedSharding tree (same structure).
+
+    ``serving=True`` strips the FSDP axes (params replicate over data/pod,
+    shard over model only): decode touches every weight every token, so
+    FSDP-sharded serving params would force a full parameter all-gather
+    per generated token (measured: 2e11 B/step on qwen decode —
+    EXPERIMENTS.md §Perf cell A).
+    """
+    fsdp = set(fsdp_axes(mesh))
+
+    def strip(spec: P) -> P:
+        def keep(e):
+            if e is None:
+                return None
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a not in fsdp)
+                return kept if kept else None
+            return None if e in fsdp else e
+
+        return P(*(keep(e) for e in spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        spec = param_pspec(key, leaf.shape, mesh)
+        if serving:
+            spec = strip(spec)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_pspec(mesh: Mesh, batch: int) -> P:
+    fsdp = fsdp_axes(mesh)
+    fs = fsdp if len(fsdp) > 1 else fsdp[0]
+    return P(fs, None) if _divisible(batch, mesh, fsdp) else P(None, None)
+
+
+def logits_pspec(mesh: Mesh, batch: int) -> P:
+    fsdp = fsdp_axes(mesh)
+    fs = fsdp if len(fsdp) > 1 else fsdp[0]
+    b = fs if _divisible(batch, mesh, fsdp) else None
+    return P(b, None, "model")
+
+
+def cache_pspec(
+    mesh: Mesh, cache_shape: tuple[int, ...], batch: int, path: str = "attn"
+) -> P:
+    """Decode caches: batch over fsdp when divisible, else shard the
+    sequence axis (long_500k SP); heads/features over model when divisible.
+
+    Layouts (leading axis is always the scan-group stack):
+      attn KV    (G, B, S, kv, hd)           — path contains 'attn'
+      ssm state  (G, [stack], B, feat...)    — mamba/mlstm/slstm caches
+    """
+    fsdp = fsdp_axes(mesh)
+    fs = fsdp if len(fsdp) > 1 else fsdp[0]
+    ndim = len(cache_shape)
+    spec: list[Any] = [None] * ndim
+    batch_ok = _divisible(batch, mesh, fsdp)
+
+    if "attn" in path and ndim == 5:
+        if batch_ok:
+            spec[1] = fs
+        elif _divisible(cache_shape[2], mesh, fsdp):
+            spec[2] = fs  # sequence-parallel cache (long_500k, batch=1)
+        if spec[2] is None and _divisible(cache_shape[2], mesh, "model"):
+            # decode KV parallelism: shard the SEQUENCE axis over model —
+            # scores/context contractions stay shard-local and only a tiny
+            # (B,H,1) logsumexp + (B,H,1,hd) context psum cross chips.
+            # (hd-sharded caches force a full K/V all-gather per decoded
+            # token: 172 GB/step measured on qwen decode — §Perf cell A.)
+            spec[2] = "model"
+        else:
+            for feat in (4, 3):  # prefer head_dim, fall back to kv heads
+                if _divisible(cache_shape[feat], mesh, "model") and cache_shape[feat] > 1:
+                    spec[feat] = "model"
+                    break
+        return P(*spec)
+
+    # state caches: locate the batch axis by size (dim 1 or 2; a within-
+    # group stack axis may precede it)
+    batch_axis = next(
+        (i for i in (1, 2) if i < ndim and cache_shape[i] == batch), None
+    )
+    if batch_axis is not None and batch_ok:
+        spec[batch_axis] = fs
+    start = (batch_axis or 0) + 1
+    feats = [i for i in range(start, ndim) if spec[i] is None]
+    if feats:
+        biggest = max(feats, key=lambda i: cache_shape[i])
+        if _divisible(cache_shape[biggest], mesh, "model") and cache_shape[biggest] > 1:
+            spec[biggest] = "model"
+    return P(*spec)

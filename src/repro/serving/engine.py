@@ -1,0 +1,144 @@
+"""Slot-based batched serving engine (continuous-batching-lite).
+
+A fixed pool of ``n_slots`` sequences shares one stacked decode cache; new
+requests claim free slots (their prompt is prefilled into the slot),
+finished sequences free them.  One jitted ``decode_step`` advances every
+active slot by a token per call — the standard TPU serving shape
+(decode is batch-synchronous; per-slot positions are tracked so slots can
+be at different depths).
+
+With ``quant mode`` set to one of the packed modes the weights used for
+decode are the paper's packed low-precision weights — the serving-side
+payoff of DSP-packing (decode is weight-bandwidth-bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    n_slots: int = 8
+    max_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    eos_token: int = 1
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self.cache = T.init_cache(cfg, serve_cfg.n_slots, serve_cfg.max_len)
+        self.positions = np.zeros(serve_cfg.n_slots, np.int32)
+        self.active = np.zeros(serve_cfg.n_slots, bool)
+        self.last_token = np.zeros(serve_cfg.n_slots, np.int32)
+        self.outputs: dict[int, list[int]] = {}
+        self._next_rid = 0
+        self._rid_of_slot: dict[int, int] = {}
+
+    # ---- jitted steps ---------------------------------------------------
+    @partial(jax.jit, static_argnums=(0,))
+    def _prefill(self, params, cache, tokens, slot):
+        """Prefill one prompt into ``slot`` of the batched cache."""
+        cfg = self.cfg
+        one_cache = jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), cache
+        )
+        # feed tokens one position at a time to reuse the decode path
+        def body(carry, tok_pos):
+            cache_s, _ = carry
+            tok, pos = tok_pos
+            logits, new_c, _ = T.forward(
+                params, cfg, tok[None, None], positions=pos[None, None], cache=cache_s
+            )
+            return (new_c, logits[0, -1]), None
+
+        pos = jnp.arange(tokens.shape[0])
+        (one_cache, last_logits), _ = jax.lax.scan(body, (one_cache, jnp.zeros((cfg.vocab_size,))), (tokens, pos))
+        cache = jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), slot, axis=1),
+            cache,
+            one_cache,
+        )
+        return cache, jnp.argmax(last_logits).astype(jnp.int32)
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _decode(self, params, cache, tokens, positions):
+        cfg = self.cfg
+        logits, new_cache, _ = T.forward(
+            params, cfg, tokens[:, None], positions=positions[:, None], cache=cache
+        )
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return new_cache, nxt
+
+    # ---- request lifecycle ----------------------------------------------
+    def submit(self, prompt: list[int]) -> int | None:
+        free = np.flatnonzero(~self.active)
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        rid = self._next_rid
+        self._next_rid += 1
+        toks = jnp.asarray(prompt, jnp.int32)
+        self.cache, last = self._prefill(self.params, self.cache, toks, slot)
+        self.positions[slot] = len(prompt)
+        self.last_token[slot] = int(last)
+        self.active[slot] = True
+        self._rid_of_slot[slot] = rid
+        self.outputs[rid] = [int(last)]
+        return rid
+
+    def step(self) -> list[int]:
+        """Advance every active slot one token; returns finished rids."""
+        if not self.active.any():
+            return []
+        self.cache, nxt = self._decode(
+            self.params,
+            self.cache,
+            jnp.asarray(self.last_token),
+            jnp.asarray(self.positions),
+        )
+        nxt = np.asarray(nxt)
+        finished = []
+        for slot in np.flatnonzero(self.active):
+            self.positions[slot] += 1
+            tok = int(nxt[slot])
+            rid = self._rid_of_slot[slot]
+            self.outputs[rid].append(tok)
+            self.last_token[slot] = tok
+            done = tok == self.scfg.eos_token or self.positions[slot] >= self.scfg.max_len - 1
+            if done:
+                self.active[slot] = False
+                finished.append(rid)
+        return finished
+
+    def generate(self, prompts: list[list[int]], max_new: int = 32) -> dict[int, list[int]]:
+        """Drive a full batch to completion (simple reference loop)."""
+        pending = list(prompts)
+        rids = []
+        for _ in range(max_new * max(1, len(prompts))):
+            while pending:
+                rid = self.submit(pending[0])
+                if rid is None:
+                    break
+                rids.append(rid)
+                pending.pop(0)
+            if not self.active.any() and not pending:
+                break
+            self.step()
+            for slot in np.flatnonzero(self.active):
+                if len(self.outputs[self._rid_of_slot[slot]]) >= max_new:
+                    self.active[slot] = False
+        return {r: self.outputs[r] for r in rids}

@@ -1,0 +1,8 @@
+import sys
+import os
+
+sys.path.insert(0, os.path.dirname(__file__))  # proptest shim importable
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running end-to-end tests")

@@ -1,0 +1,65 @@
+"""Tiny property-testing shim (hypothesis is unavailable offline).
+
+Provides ``@given(...)`` decorators with seeded strategies.  Each strategy
+is a callable ``rng -> value``; the decorated test runs ``N_CASES`` times
+with derandomized seeds so failures are reproducible.  Shrinking is not
+implemented; the failing seed is reported instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+N_CASES = int(os.environ.get("PROPTEST_CASES", "25"))
+
+
+def integers(lo: int, hi: int):
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def sampled_from(options):
+    return lambda rng: options[int(rng.integers(0, len(options)))]
+
+
+def lists(elem, min_size: int, max_size: int):
+    def strat(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elem(rng) for _ in range(n)]
+
+    return strat
+
+
+def arrays(shape_strat, lo, hi, dtype=np.int64):
+    def strat(rng):
+        shape = shape_strat(rng) if callable(shape_strat) else shape_strat
+        return rng.integers(lo, hi + 1, size=shape).astype(dtype)
+
+    return strat
+
+
+def floats_array(shape, scale=1.0):
+    return lambda rng: (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def given(**strategies):
+    def deco(fn):
+        # zero-arg wrapper (no functools.wraps: pytest must NOT see the
+        # strategy parameters, or it would try to inject them as fixtures)
+        def wrapper(*args):  # *args carries `self` for methods only
+            for case in range(N_CASES):
+                rng = np.random.default_rng((hash(fn.__name__) & 0xFFFF, case))
+                drawn = {k: s(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **drawn)
+                except Exception:
+                    print(f"[proptest] {fn.__name__} failed on case {case}: {drawn}")
+                    raise
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

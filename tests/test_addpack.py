@@ -1,0 +1,77 @@
+"""Addition packing (paper §VII, Table III)."""
+
+import numpy as np
+import pytest
+
+from repro.core.addpack import (
+    AddPackConfig,
+    accumulate,
+    extract_lanes,
+    five_by_nine,
+    lane_add_expected,
+    pack_lanes,
+    packed_add,
+    packed_lane_add,
+)
+
+
+def test_lane_layout():
+    cfg = five_by_nine()
+    assert cfg.offsets == (0, 9, 18, 27, 36)
+    assert cfg.bits_used() == 45
+    with pytest.raises(ValueError):
+        AddPackConfig((9,) * 6)  # 54 bits > 48
+
+
+def test_pack_extract_roundtrip():
+    cfg = five_by_nine()
+    rng = np.random.default_rng(0)
+    x = rng.integers(-256, 256, (64, 5))
+    np.testing.assert_array_equal(extract_lanes(cfg, pack_lanes(cfg, x)), x)
+
+
+def test_table3_statistics():
+    """Paper Table III: MAE 0.51 / EP 51.83% / WCE 1 for a 9-bit lane packed
+    with four others, no guards.  Exhaustive over one lane pair + carry-in:
+    our measured EP is ~49.9% (uniform operands); MAE == EP/100 and WCE == 1
+    in modular lane arithmetic — structure matches, level within 2pp
+    (operand distribution in the paper's HW run is unspecified; recorded in
+    EXPERIMENTS.md §Paper-deltas)."""
+    cfg = AddPackConfig((9, 9), guard_bits=0, total_bits=48)
+    a0 = np.arange(512)
+    # exhaustive lower-lane pairs; upper lane fixed operands sweep a sample
+    lo_x, lo_y = np.meshgrid(a0, a0, indexing="ij")
+    rng = np.random.default_rng(0)
+    hi_x = rng.integers(-256, 256, lo_x.shape)
+    hi_y = rng.integers(-256, 256, lo_x.shape)
+    x = np.stack([lo_x.ravel() - 256, hi_x.ravel()], -1)
+    y = np.stack([lo_y.ravel() - 256, hi_y.ravel()], -1)
+    got = packed_lane_add(cfg, x, y)
+    want = lane_add_expected(cfg, x, y)
+    diff = np.abs(got[:, 1] - want[:, 1])
+    mod = np.minimum(diff, 512 - diff)
+    ep = (mod > 0).mean() * 100
+    assert mod.max() == 1  # WCE = 1 (Table III)
+    assert abs(ep - 51.83) < 2.5  # level close to the paper's 51.83%
+    assert (got[:, 0] == want[:, 0]).all()  # lowest lane exact (paper claim a)
+
+
+def test_guard_bit_blocks_carry():
+    cfg = AddPackConfig((8, 8), guard_bits=1)
+    x = np.array([[255 - 256, 3]])  # lower lane at max field pattern
+    y = np.array([[1, 4]])
+    np.testing.assert_array_equal(
+        packed_lane_add(cfg, x, y), lane_add_expected(cfg, x, y)
+    )
+
+
+def test_snn_accumulate_exact_with_chunking():
+    cfg = AddPackConfig((10,) * 4, guard_bits=2)
+    rng = np.random.default_rng(1)
+    terms = rng.integers(-4, 5, (8, 64, 4))
+    got = accumulate(cfg, terms)
+    np.testing.assert_array_equal(got, terms.sum(-2))
+
+
+def test_packing_density():
+    assert five_by_nine().packing_density() == 45 / 48

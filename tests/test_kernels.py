@@ -1,0 +1,189 @@
+"""Pallas kernel validation: bit-exact vs ref.py oracles across shape/dtype
+sweeps, all in interpret mode (CPU container; TPU is the lowering target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import given, integers, sampled_from
+
+from repro.kernels import ref
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.ops import int4_matmul_f32, packed_matmul_f32, quantized_matmul_ref
+from repro.kernels.packed_matmul import packed_matmul
+from repro.kernels.ref import (
+    INT2_EXACT,
+    INT4_EXACT,
+    INT4_MR_OVERPACKED,
+    INT4_NAIVE,
+    PackedDotSpec,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _operands(m, k, n, bits=4):
+    hi_a = (1 << bits) - 1
+    hi_w = 1 << (bits - 1)
+    x = RNG.integers(0, hi_a + 1, (m, k)).astype(np.int8)
+    w = RNG.integers(-hi_w, hi_w, (k, n)).astype(np.int8)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+class TestPackedMatmulKernel:
+    @pytest.mark.parametrize("spec", [INT4_EXACT, INT4_NAIVE, INT4_MR_OVERPACKED])
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128)])
+    def test_kernel_bit_equals_ref(self, spec, shape):
+        m, k, n = shape
+        x, w = _operands(m, k, n, spec.bits_a)
+        got = packed_matmul(x, w, spec=spec, interpret=True)
+        want = ref.ref_packed_matmul(x, w, spec)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_full_correction_kernel_is_exact(self):
+        x, w = _operands(128, 256, 128)
+        got = packed_matmul(x, w, spec=INT4_EXACT, interpret=True)
+        want = ref.ref_quantized_matmul(x, w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_int2_exact(self):
+        x, w = _operands(128, 128, 128, bits=2)
+        got = packed_matmul(x, w, spec=INT2_EXACT, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.ref_quantized_matmul(x, w))
+        )
+
+    def test_naive_reproduces_bias_at_matmul_scale(self):
+        """The paper's -1-per-extraction bias accumulates over K chunks."""
+        x, w = _operands(128, 512, 128)
+        naive = np.asarray(packed_matmul(x, w, spec=INT4_NAIVE, interpret=True))
+        exact = np.asarray(ref.ref_quantized_matmul(x, w))
+        err = naive - exact
+        assert (err <= 0).all()  # bias toward -inf, never positive
+        n_extractions = 512 // INT4_NAIVE.chunk
+        assert err.min() >= -n_extractions
+
+    def test_mr_overpacked_error_small(self):
+        x, w = _operands(256, 512, 128)
+        got = np.asarray(packed_matmul(x, w, spec=INT4_MR_OVERPACKED, interpret=True))
+        exact = np.asarray(ref.ref_quantized_matmul(x, w))
+        err = np.abs(got - exact)
+        assert err.mean() < 0.2
+        rel = err.mean() / max(np.abs(exact).mean(), 1)
+        assert rel < 1e-3
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            PackedDotSpec(bits_a=4, bits_w=4, p=12, n_pairs=8)  # overflows
+        with pytest.raises(ValueError):
+            PackedDotSpec(bits_a=4, bits_w=4, p=9, n_pairs=4, correction="full")
+
+
+class TestInt4Kernel:
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (128, 256, 384)])
+    def test_kernel_vs_oracle(self, shape):
+        m, k, n = shape
+        x = jnp.asarray(RNG.integers(-128, 128, (m, k)).astype(np.int8))
+        w = jnp.asarray(RNG.integers(-8, 8, (k, n)).astype(np.int8))
+        packed = ref.pack_int4_weights(w)
+        got = int4_matmul(x, packed, interpret=True)
+        want = ref.ref_int4_matmul(x, packed)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_pack_unpack_roundtrip(self):
+        w = jnp.asarray(RNG.integers(-8, 8, (64, 32)).astype(np.int8))
+        np.testing.assert_array_equal(
+            np.asarray(ref.unpack_int4_weights(ref.pack_int4_weights(w))),
+            np.asarray(w),
+        )
+
+    def test_packed_storage_is_half(self):
+        w = jnp.zeros((128, 64), jnp.int8)
+        assert ref.pack_int4_weights(w).size * 2 == w.size
+
+
+class TestFloatWrappers:
+    @given(m=integers(8, 100), k=integers(16, 200), n=integers(8, 100),
+           seed=integers(0, 2**31))
+    def test_packed_f32_equals_quant_oracle(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        got = packed_matmul_f32(x, w, use_kernel=False)
+        want = quantized_matmul_ref(x, w, bits=4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_int4_f32_close_to_dense(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((64, 128)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((128, 96)).astype(np.float32))
+        from repro.core.quantize import quantize_signed
+
+        wq = quantize_signed(w, bits=4, axis=0)
+        packed = ref.pack_int4_weights(wq.values)
+        got = np.asarray(int4_matmul_f32(x, packed, wq.scale, use_kernel=True, interpret=True))
+        dense = np.asarray(x @ w)
+        rel = np.abs(got - dense).mean() / np.abs(dense).mean()
+        assert rel < 0.25  # int4-weight quantization noise only
+
+
+class TestAddpackKernel:
+    def test_exact_vs_oracle(self):
+        from repro.kernels.addpack_acc import (
+            addpack_accumulate,
+            ref_addpack_accumulate,
+        )
+
+        rng = np.random.default_rng(11)
+        terms = jnp.asarray(rng.integers(-2000, 2000, (64, 2, 256)).astype(np.int32))
+        got = addpack_accumulate(terms, interpret=True)
+        want = ref_addpack_accumulate(terms)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(t=integers(1, 48), seed=integers(0, 2**31))
+    def test_random_lengths(self, t, seed):
+        from repro.kernels.addpack_acc import (
+            addpack_accumulate,
+            ref_addpack_accumulate,
+        )
+
+        rng = np.random.default_rng(seed)
+        terms = jnp.asarray(rng.integers(-4096, 4096, (t, 2, 256)).astype(np.int32))
+        got = addpack_accumulate(terms, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref_addpack_accumulate(terms))
+        )
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "shape", [(1, 2, 512, 64, 256, 128), (2, 1, 256, 128, 128, 128)]
+    )
+    def test_matches_oracle(self, shape):
+        from repro.kernels.flash_attention import flash_attention, ref_attention
+
+        b, h, s, hd, bq, bk = shape
+        rng = np.random.default_rng(5)
+        q = jnp.asarray(rng.standard_normal((b, h, s, hd)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((b, h, s, hd)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((b, h, s, hd)).astype(np.float32))
+        got = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref_attention(q, k, v)), atol=5e-6
+        )
+
+    def test_causality(self):
+        from repro.kernels.flash_attention import flash_attention
+
+        rng = np.random.default_rng(6)
+        q = jnp.asarray(rng.standard_normal((1, 1, 256, 64)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 1, 256, 64)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((1, 1, 256, 64)).astype(np.float32))
+        base = flash_attention(q, k, v, bq=128, bk=128, interpret=True)
+        k2 = k.at[:, :, -1].set(50.0)
+        v2 = v.at[:, :, -1].set(50.0)
+        pert = flash_attention(q, k2, v2, bq=128, bk=128, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(base[:, :, :-1]), np.asarray(pert[:, :, :-1]), atol=1e-6
+        )

@@ -1,0 +1,62 @@
+"""Packed serving weights: structure, byte density, numeric drift, and
+end-to-end forward equivalence within int4 quantization noise."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packed_params import (
+    dequantize_packed,
+    is_packed_leaf,
+    quantize_params_for_serving,
+)
+from repro.models import transformer as T
+from repro.models.registry import get_config
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_pack_dequant_roundtrip_bounds():
+    w = jax.random.normal(KEY, (64, 48), jnp.float32)
+    p = quantize_params_for_serving({"w": w}, min_dim=16)["w"]
+    assert is_packed_leaf(p)
+    assert p["packed"].dtype == jnp.uint8
+    assert p["packed"].shape == (32, 48)
+    deq = dequantize_packed(p, jnp.float32)
+    err = jnp.abs(deq - w)
+    # absmax int4: error bounded by scale/2 per channel
+    assert bool((err <= p["scale"][0] * 0.5 + 1e-6).all())
+
+
+def test_norms_and_embed_stay_dense():
+    cfg = get_config("qwen1.5-110b", smoke=True)
+    params = T.init_params(KEY, cfg, jnp.bfloat16)
+    pq = quantize_params_for_serving(params, min_dim=16)
+    assert not is_packed_leaf(pq["embed"]["w"])
+    flat = jax.tree_util.tree_flatten_with_path(pq)[0]
+    assert any("packed" in str(p) for p, _ in flat)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "dbrx-132b", "xlstm-1.3b"])
+def test_forward_drift_small(arch):
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(KEY, cfg, jnp.float32)
+    pq = quantize_params_for_serving(params, min_dim=16)
+    toks = jax.random.randint(KEY, (1, 12), 0, cfg.vocab_size)
+    ref, _, _ = T.forward(params, cfg, toks)
+    got, _, _ = T.forward(pq, cfg, toks)
+    assert np.isfinite(np.asarray(got)).all()
+    # int4 weights: logits drift bounded (smoke nets are tiny + random)
+    rel = float(jnp.abs(got - ref).mean() / jnp.abs(ref).mean())
+    # tiny random smoke nets amplify int4 noise (esp. xLSTM exp gating);
+    # the calibrated bound is family-dependent
+    assert rel < (1.5 if cfg.family == "ssm" else 0.5)
+
+
+def test_byte_density():
+    w = jnp.zeros((128, 128), jnp.bfloat16)
+    p = quantize_params_for_serving({"up": w}, min_dim=16)["up"]
+    raw = 128 * 128 * 2
+    packed = p["packed"].size + p["scale"].size * 4
+    assert packed < raw / 3.5  # ~4x minus scale overhead

@@ -1,0 +1,134 @@
+"""Exhaustive reproduction of the paper's Tables I and II.
+
+Every assertion below checks OUR bit-exact DSP48E2 simulation against the
+NUMBERS PRINTED IN THE PAPER, over all 65 536 input combinations — this is
+the ground-truth layer of the whole framework.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.correction import scheme_stats
+from repro.core.packing import (
+    PackingConfig,
+    int4_packing,
+    int8_packing,
+    intn_packing,
+)
+
+
+class TestConfigAlgebra:
+    def test_int4_matches_paper_fig2(self):
+        cfg = int4_packing()
+        assert cfg.a_offsets == (0, 11)
+        assert cfg.w_offsets == (0, 22)
+        assert cfg.r_offsets == (0, 11, 22, 33)
+        assert cfg.r_widths == (8, 8, 8, 8)
+        assert cfg.delta == 3
+        assert cfg.fits_dsp48()
+
+    def test_mr_overpacking_fig6_config(self):
+        cfg = int4_packing(delta=-2)
+        assert cfg.a_offsets == (0, 6)
+        assert cfg.w_offsets == (0, 12)
+        assert cfg.r_offsets == (0, 6, 12, 18)
+
+    def test_intn_fig9_config(self):
+        cfg = intn_packing((4, 4, 4), (3, 3), delta=0)
+        assert cfg.a_offsets == (0, 7, 14)
+        assert cfg.w_offsets == (0, 21)
+        assert cfg.r_offsets == (0, 7, 14, 21, 28, 35)
+        assert cfg.r_widths == (7,) * 6
+
+    def test_overpacking_fig9_config(self):
+        cfg = intn_packing((4, 4, 4), (5, 5), delta=-2)
+        assert cfg.a_offsets == (0, 7, 14)
+        assert cfg.w_offsets == (0, 21)
+        assert cfg.r_widths == (9,) * 6
+
+    def test_int8_fits(self):
+        assert int8_packing().fits_dsp48()
+
+    def test_accumulation_budget(self):
+        assert int4_packing(delta=3).max_accumulations() == 8
+        assert int4_packing(delta=0).max_accumulations() == 1
+
+
+class TestTable1:
+    """Paper Table I — MAE / EP / WCE per approach (4-bit, 4 multiplies)."""
+
+    def test_xilinx_int4_naive(self):
+        st = scheme_stats(int4_packing(), "naive")
+        assert round(st.mae_bar, 2) == 0.37
+        assert round(st.ep_bar, 2) == 37.35
+        assert st.wce_bar == 1
+
+    def test_full_correction_is_exact(self):
+        st = scheme_stats(int4_packing(), "full")
+        assert st.mae_bar == 0.0 and st.ep_bar == 0.0 and st.wce_bar == 0
+
+    def test_approx_correction(self):
+        st = scheme_stats(int4_packing(), "approx")
+        assert round(st.mae_bar, 2) == 0.02  # paper: 0.02
+        # paper reports EP=3.13%: that is the per-affected-result rate; our
+        # all-results mean is 2.35% (r0 is always exact). Check both views.
+        assert round(st.ep_bar, 2) == pytest.approx(2.35, abs=0.01)
+        for ep in st.ep[1:]:
+            assert ep == pytest.approx(3.13, abs=0.03)
+        assert st.wce_bar == 1
+
+    @pytest.mark.parametrize(
+        "delta,mae,wce", [(-1, 24.27, 129), (-2, 37.95, 194), (-3, 45.53, 228)]
+    )
+    def test_naive_overpacking(self, delta, mae, wce):
+        st = scheme_stats(int4_packing(delta=delta), "naive")
+        assert st.mae_bar == pytest.approx(mae, abs=0.015)
+        assert st.wce_bar == wce
+
+    def test_naive_overpacking_ep_delta1_delta3(self):
+        # EP matches the paper at δ=-1 (49.85) and δ=-3 (78.26); the paper's
+        # δ=-2 EP (58.64%) disagrees with our exhaustive 64.90% even though
+        # its MAE and WCE match exactly — recorded as a probable erratum
+        # (EXPERIMENTS.md §Paper-deltas).
+        assert scheme_stats(int4_packing(delta=-1), "naive").ep_bar == pytest.approx(49.85, abs=0.01)
+        assert scheme_stats(int4_packing(delta=-3), "naive").ep_bar == pytest.approx(78.26, abs=0.01)
+
+    @pytest.mark.parametrize(
+        "delta,mae,ep,wce",
+        [(-1, 0.37, 37.35, 1), (-2, 0.47, 41.48, 2), (-3, 0.78, 49.95, 4)],
+    )
+    def test_mr_overpacking(self, delta, mae, ep, wce):
+        st = scheme_stats(int4_packing(delta=delta), "mr")
+        assert st.mae_bar == pytest.approx(mae, abs=0.015)
+        assert st.ep_bar == pytest.approx(ep, abs=0.02)
+        assert st.wce_bar == wce
+
+
+class TestTable2:
+    """Paper Table II — per-result statistics."""
+
+    def test_int4_per_result(self):
+        st = scheme_stats(int4_packing(), "naive")
+        assert [round(m, 2) for m in st.mae] == [0.0, 0.47, 0.50, 0.53]
+        assert [round(e, 2) for e in st.ep] == [0.0, 46.88, 49.80, 52.73]
+        assert list(st.wce) == [0, 1, 1, 1]
+
+    def test_mr_delta2_per_result(self):
+        st = scheme_stats(int4_packing(delta=-2), "mr")
+        assert list(st.ep) == pytest.approx([0.0, 52.34, 55.41, 58.20], abs=0.02)
+        assert list(st.wce) == [0, 2, 2, 2]
+        assert list(st.mae)[1:] == pytest.approx([0.60, 0.64, 0.66], abs=0.01)
+
+
+class TestBeyondPaper:
+    def test_mr_plus_full_beats_paper(self):
+        """Beyond-paper: MR restore + round-half-up cuts MAE 0.37 -> ~0.10."""
+        base = scheme_stats(int4_packing(delta=-1), "mr")
+        ours = scheme_stats(int4_packing(delta=-1), "mr+full")
+        assert ours.mae_bar < base.mae_bar / 3
+
+    def test_density_ordering_fig9(self):
+        int4 = int4_packing()
+        intn = intn_packing((4, 4, 4), (3, 3), delta=0)
+        over = intn_packing((4, 4, 4), (5, 5), delta=-2)
+        assert int4.packing_density() < intn.packing_density() < over.packing_density()

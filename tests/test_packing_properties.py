@@ -1,0 +1,128 @@
+"""Property tests over random INT-N packing configurations (proptest shim).
+
+Invariants:
+  * full correction == exact outer product, for ANY valid config with δ≥0
+  * naive extraction errs only by -1 per field (δ≥0) and only when a lower
+    field is negative
+  * MR-overpacking WCE is bounded by 2^|δ| scale effects (small-LSB claim)
+  * approximate correction never increases the error rate vs naive
+  * packed addition with guard bits is exact; without guards WCE == 1 in
+    modular lane arithmetic
+"""
+
+import numpy as np
+import pytest
+
+from proptest import given, integers, sampled_from
+
+from repro.core.addpack import (
+    AddPackConfig,
+    lane_add_expected,
+    packed_lane_add,
+)
+from repro.core.correction import (
+    error_stats,
+    exhaustive_operands,
+    outer_product_exact,
+    simulate,
+)
+from repro.core.packing import intn_packing
+
+
+def _random_operands(cfg, rng, n=512):
+    a = np.stack(
+        [rng.integers(0, 1 << w, size=n) for w in cfg.a_widths], axis=-1
+    ).astype(np.int64)
+    w = np.stack(
+        [
+            rng.integers(-(1 << (ww - 1)), 1 << (ww - 1), size=n)
+            for ww in cfg.w_widths
+        ],
+        axis=-1,
+    ).astype(np.int64)
+    return a, w
+
+
+@given(
+    na=integers(1, 3),
+    nw=integers(1, 2),
+    wa=integers(2, 5),
+    ww=integers(2, 5),
+    delta=integers(0, 3),
+    seed=integers(0, 2**31),
+)
+def test_full_correction_exact_for_any_config(na, nw, wa, ww, delta, seed):
+    try:
+        cfg = intn_packing((wa,) * na, (ww,) * nw, delta)
+    except ValueError:
+        return  # config exceeds the int64 budget; skip
+    rng = np.random.default_rng(seed)
+    a, w = _random_operands(cfg, rng)
+    got = simulate(cfg, a, w, scheme="full")
+    np.testing.assert_array_equal(got, outer_product_exact(cfg, a, w))
+
+
+@given(
+    wa=integers(2, 5), ww=integers(2, 5), delta=integers(0, 3),
+    seed=integers(0, 2**31),
+)
+def test_naive_error_is_minus_one_only(wa, ww, delta, seed):
+    cfg = intn_packing((wa, wa), (ww, ww), delta)
+    rng = np.random.default_rng(seed)
+    a, w = _random_operands(cfg, rng)
+    err = simulate(cfg, a, w, scheme="naive") - outer_product_exact(cfg, a, w)
+    assert set(np.unique(err)) <= {-1, 0}
+
+
+@given(seed=integers(0, 2**31), delta=sampled_from([-1, -2, -3]))
+def test_mr_wce_bound(seed, delta):
+    from repro.core.packing import int4_packing
+
+    cfg = int4_packing(delta=delta)
+    rng = np.random.default_rng(seed)
+    a, w = _random_operands(cfg, rng)
+    err = np.abs(simulate(cfg, a, w, scheme="mr") - outer_product_exact(cfg, a, w))
+    assert err.max() <= 2 ** (-delta)  # paper Table I: 1, 2, 4
+
+
+def test_approx_never_worse_than_naive_exhaustive():
+    from repro.core.packing import int4_packing
+
+    cfg = int4_packing()
+    a, w = exhaustive_operands(cfg)
+    exact = outer_product_exact(cfg, a, w)
+    naive = error_stats(exact, simulate(cfg, a, w, "naive"))
+    approx = error_stats(exact, simulate(cfg, a, w, "approx"))
+    assert approx.ep_bar < naive.ep_bar
+    assert approx.mae_bar < naive.mae_bar
+
+
+@given(
+    width=integers(4, 12), lanes=integers(2, 5), guard=integers(1, 2),
+    seed=integers(0, 2**31),
+)
+def test_addpack_guard_bits_exact(width, lanes, guard, seed):
+    if lanes * (width + guard) - guard > 48:
+        return
+    cfg = AddPackConfig((width,) * lanes, guard_bits=guard)
+    rng = np.random.default_rng(seed)
+    lim = 1 << (width - 1)
+    x = rng.integers(-lim, lim, (256, lanes))
+    y = rng.integers(-lim, lim, (256, lanes))
+    np.testing.assert_array_equal(
+        packed_lane_add(cfg, x, y), lane_add_expected(cfg, x, y)
+    )
+
+
+@given(seed=integers(0, 2**31))
+def test_addpack_no_guard_modular_wce_is_one(seed):
+    cfg = AddPackConfig((9,) * 5, guard_bits=0)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-256, 256, (512, 5))
+    y = rng.integers(-256, 256, (512, 5))
+    got = packed_lane_add(cfg, x, y)
+    want = lane_add_expected(cfg, x, y)
+    diff = np.abs(got - want)
+    mod = np.minimum(diff, 512 - diff)  # modular lane distance
+    assert mod.max() <= 1  # paper Table III: WCE = 1
+    assert (mod[:, 0] == 0).all()  # lowest lane is always exact

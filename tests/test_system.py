@@ -1,0 +1,45 @@
+"""End-to-end behaviour tests for the paper's system."""
+
+import subprocess
+import sys
+import os
+
+import pytest
+
+
+@pytest.mark.slow
+def test_quickstart_example_runs():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "examples/quickstart.py"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "packed matmul == exact int matmul: True" in out.stdout
+    assert "MAE=0.37 EP=37.35% WCE=1" in out.stdout  # paper Table I headline
+
+
+@pytest.mark.slow
+def test_snn_example_runs():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "examples/snn_addpack.py"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "exact with 2 guard bits" in out.stdout
+
+
+@pytest.mark.slow
+def test_train_driver_cli():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "xlstm-1.3b",
+         "--smoke", "--steps", "3", "--global-batch", "2", "--seq-len", "32"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "[train] done" in out.stdout
