@@ -10,13 +10,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default=None,
-        help="comma-separated subset: table1,table2,table3,fig9,kernel,roofline",
+        help="comma-separated subset: "
+             "table1,table2,table3,fig9,kernel,roofline,serving",
     )
     args = ap.parse_args()
     from . import (
         fig9_density,
         kernel_bench,
         roofline,
+        serving_bench,
         table1_packing,
         table2_per_result,
         table3_addpack,
@@ -30,6 +32,7 @@ def main() -> None:
         "fig9": fig9_density.run,
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
+        "serving": serving_bench.run,
     }
     selected = args.only.split(",") if args.only else list(mods)
     for name in selected:

@@ -1,0 +1,146 @@
+"""Serving benchmark: prefill and decode tokens/s, float vs packed.
+
+Measures the serving rebuild's two claims:
+
+* **prefill** — the engine's batched chunked prefill (one ``T.forward`` per
+  ``chunk`` tokens) against the seed's per-token scan (one forward per
+  token, the pre-rebuild baseline, reimplemented here for comparison).
+* **decode** — steady-state decode tokens/s with float weights vs the
+  packed int4 decode path (``quant_mode="int4_packed"``).
+
+Emits ``name,us_per_call,derived`` CSV rows like the other benchmarks and
+writes the raw numbers to ``BENCH_serving.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import Engine, ServeConfig
+
+from .bench_util import emit
+
+CFG = ModelConfig(
+    name="serve-bench", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab_size=512, dtype="float32",
+)
+SLOTS = 2
+MAX_LEN = 256
+PROMPT_LEN = 128
+CHUNK = 16
+DECODE_STEPS = 32
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _per_token_prefill(params, cfg, cache, tokens, slot):
+    """The seed engine's prefill: one forward per token through a scan."""
+    one_cache = jax.tree.map(
+        lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), cache
+    )
+
+    def body(carry, tok_pos):
+        cache_s, _ = carry
+        tok, pos = tok_pos
+        logits, new_c, _ = T.forward(
+            params, cfg, tok[None, None], positions=pos[None, None],
+            cache=cache_s,
+        )
+        return (new_c, logits[0, -1]), None
+
+    pos = jnp.arange(tokens.shape[0])
+    init = jnp.zeros((cfg.vocab_size,), jnp.float32)
+    (one_cache, last), _ = jax.lax.scan(body, (one_cache, init), (tokens, pos))
+    return one_cache, last
+
+
+def _block(tree):
+    jax.block_until_ready(jax.tree.leaves(tree)[0])
+
+
+def _bench_prefill_per_token(params, prompt) -> float:
+    cache = T.init_cache(CFG, SLOTS, MAX_LEN)
+    toks = jnp.asarray(prompt, jnp.int32)
+    _block(_per_token_prefill(params, CFG, cache, toks, 0))  # compile
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        _block(_per_token_prefill(params, CFG, cache, toks, 0))
+    dt = (time.perf_counter() - t0) / iters
+    return len(prompt) / dt
+
+
+def _bench_prefill_chunked(params, prompt) -> float:
+    eng = Engine(CFG, params, ServeConfig(
+        n_slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK, max_new=1,
+    ))
+    eng.generate([list(prompt)])  # compile both jit programs, free the slot
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        eng.generate([list(prompt)])
+    dt = (time.perf_counter() - t0) / iters
+    return len(prompt) / dt
+
+
+def _bench_decode(params, quant_mode: str) -> float:
+    eng = Engine(CFG, params, ServeConfig(
+        n_slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+        max_new=MAX_LEN, quant_mode=quant_mode,
+    ))
+    rng = np.random.default_rng(0)
+    for _ in range(SLOTS):
+        eng.submit(list(rng.integers(2, CFG.vocab_size, size=8)))
+    eng.step()  # compile decode
+    t0 = time.perf_counter()
+    for _ in range(DECODE_STEPS):
+        eng.step()
+    dt = time.perf_counter() - t0
+    return SLOTS * DECODE_STEPS / dt
+
+
+def run(out_path: str = "BENCH_serving.json") -> dict:
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    prompt = list(np.random.default_rng(0).integers(2, CFG.vocab_size,
+                                                    size=PROMPT_LEN))
+    per_token = _bench_prefill_per_token(params, prompt)
+    chunked = _bench_prefill_chunked(params, prompt)
+    dec_float = _bench_decode(params, "native")
+    dec_packed = _bench_decode(params, "int4_packed")
+
+    result = {
+        "config": {"slots": SLOTS, "prompt_len": PROMPT_LEN, "chunk": CHUNK,
+                   "decode_steps": DECODE_STEPS, "model": CFG.name},
+        "prefill": {
+            "per_token_tok_s": per_token,
+            "chunked_tok_s": chunked,
+            "speedup": chunked / per_token,
+        },
+        "decode": {
+            "float_tok_s": dec_float,
+            "int4_packed_tok_s": dec_packed,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    emit("serving_prefill_per_token", 1e6 / per_token,
+         f"{per_token:.1f} tok/s")
+    emit("serving_prefill_chunked", 1e6 / chunked,
+         f"{chunked:.1f} tok/s ({chunked / per_token:.1f}x per-token)")
+    emit("serving_decode_float", 1e6 / dec_float, f"{dec_float:.1f} tok/s")
+    emit("serving_decode_int4_packed", 1e6 / dec_packed,
+         f"{dec_packed:.1f} tok/s")
+    return result
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -2,19 +2,22 @@
 decode path is weight-bandwidth-bound, exactly where DSP-packing's density
 pays off (DESIGN.md §2).
 
+Demonstrates the serving stack end to end: chunked batched prefill, the
+request scheduler, per-request sampling, and the packed-weight decode path
+(`quant_mode="int4_packed"` packs weights once at engine build and decodes
+through the packed matmul kernel).
+
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 
-import dataclasses
 import time
 
 import jax
 import numpy as np
 
-from repro.core.packed_linear import LinearSpec
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving import Engine, SamplingParams, ServeConfig
 
 CFG = ModelConfig(
     name="serve-demo", family="dense", n_layers=4, d_model=256, n_heads=4,
@@ -22,23 +25,28 @@ CFG = ModelConfig(
 )
 
 
-def run(quant: str) -> float:
-    cfg = dataclasses.replace(CFG, quant=LinearSpec(mode=quant))
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, ServeConfig(n_slots=4, max_len=64))
+def run(quant_mode: str, sampling: SamplingParams | None = None) -> float:
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    eng = Engine(CFG, params, ServeConfig(
+        n_slots=4, max_len=64, prefill_chunk=8, quant_mode=quant_mode,
+    ))
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(2, 4096, size=6)) for _ in range(6)]
     t0 = time.time()
-    outs = eng.generate(prompts, max_new=12)
+    outs = eng.generate(prompts, max_new=12, sampling=sampling)
     dt = time.time() - t0
+    stats = eng.stats()
     toks = sum(len(v) for v in outs.values())
-    print(f"[serve_lm] quant={quant:12s} {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s)")
+    mode = "greedy" if sampling is None else "sampled"
+    print(f"[serve_lm] quant={quant_mode:12s} {mode:7s} {toks} tokens in "
+          f"{dt:.1f}s (prefill {stats['prefill_tok_s']:.1f} tok/s, "
+          f"decode {stats['decode_tok_s']:.1f} tok/s)")
     return dt
 
 
 if __name__ == "__main__":
     run("native")
+    run("native", SamplingParams(temperature=0.8, top_k=40, top_p=0.95))
     run("int8")
-    run("int4_packed")   # packed nibble storage -> half the weight bytes
+    run("int4_packed")   # nibbles packed once; decode runs the packed kernel
     run("dsp_packed")    # paper-faithful pair-packed arithmetic

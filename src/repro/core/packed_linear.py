@@ -63,9 +63,19 @@ def apply_linear(params, x: jax.Array, spec: LinearSpec = LinearSpec()) -> jax.A
     w = params["w"]
     mode = spec.mode
     if is_packed_leaf(w):
-        # packed-serving representation: nibbles live in HBM, dequantize at
-        # the point of use (fused into the matmul on TPU)
-        y = x @ materialize_weight(w, x.dtype)
+        if mode == "int4_packed" and w["packed"].ndim == 2:
+            # serving decode path: weights were nibble-packed once at engine
+            # build (`quantize_for_serving`); run the production packed
+            # kernel straight off the stored nibbles — no per-call repack
+            x2, lead = _flatten_batch(x.astype(jnp.float32))
+            y = ops.int4_matmul_f32(
+                x2, w["packed"], w["scale"], use_kernel=spec.use_kernel
+            ).reshape(*lead, w["packed"].shape[-1]).astype(x.dtype)
+        else:
+            # packed-storage representation under a float compute mode:
+            # nibbles live in HBM, dequantize at the point of use (fused
+            # into the matmul on TPU)
+            y = x @ materialize_weight(w, x.dtype)
         if "b" in params:
             y = y + params["b"].astype(y.dtype)
         return y

@@ -20,9 +20,20 @@ import jax.numpy as jnp
 from ..kernels import ref
 from .quantize import quantize_signed
 
-__all__ = ["quantize_params_for_serving", "is_packed_leaf"]
+__all__ = [
+    "quantize_params_for_serving",
+    "quantize_for_serving",
+    "is_packed_leaf",
+    "SERVING_MODES",
+]
 
 MIN_DIM = 32  # don't pack tiny matrices (router tables etc. stay exact)
+
+# Weight-conversion modes accepted by the serving engine.  Storage packing
+# only happens for ``int4_packed``; ``int8``/``dsp_packed`` keep float
+# weights and quantize at the point of use (their arithmetic is selected via
+# ``LinearSpec.mode``), and ``native``/``none`` serve the weights as-is.
+SERVING_MODES = ("native", "none", "int8", "int4_packed", "dsp_packed")
 
 
 def is_packed_leaf(p) -> bool:
@@ -88,3 +99,20 @@ def quantize_params_for_serving(params, min_dim: int = MIN_DIM):
         return tree
 
     return walk(params)
+
+
+def quantize_for_serving(params, mode: str = "int4_packed", min_dim: int = MIN_DIM):
+    """Engine-build-time weight conversion step.
+
+    ``int4_packed`` packs every large matmul weight to nibbles *once*; the
+    decode path (`packed_linear.apply_linear`) then runs the paper's packed
+    matmul kernel directly on the stored nibbles every step — no per-call
+    re-quantization.  The other modes keep float weights (``int8`` and
+    ``dsp_packed`` quantize at the point of use through their
+    ``LinearSpec.mode`` arithmetic; ``native``/``none`` are pass-through).
+    """
+    if mode not in SERVING_MODES:
+        raise ValueError(f"serving mode {mode!r} not in {SERVING_MODES}")
+    if mode == "int4_packed":
+        return quantize_params_for_serving(params, min_dim=min_dim)
+    return params

@@ -2,22 +2,20 @@
 
 CPU-smoke example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-110b --smoke \
-      --requests 6 --max-new 16 --quant int4_packed
+      --requests 6 --max-new 16 --quant int4_packed --temperature 0.8
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import numpy as np
 
-from ..core.packed_linear import LinearSpec
 from ..models import transformer as T
 from ..models.registry import get_config
-from ..serving.engine import Engine, ServeConfig
+from ..serving import Engine, SamplingParams, ServeConfig
 
 
 def main() -> None:
@@ -27,14 +25,24 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--quant", default="native",
                     choices=["native", "int8", "int4_packed", "dsp_packed"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    cfg = dataclasses.replace(cfg, quant=LinearSpec(mode=args.quant))
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, ServeConfig(n_slots=args.slots, max_len=64))
+    engine = Engine(cfg, params, ServeConfig(
+        n_slots=args.slots, max_len=args.max_len,
+        prefill_chunk=args.prefill_chunk, quant_mode=args.quant,
+        seed=args.seed,
+    ))
+    sampling = SamplingParams(args.temperature, args.top_k, args.top_p)
 
     rng = np.random.default_rng(0)
     prompts = [
@@ -42,13 +50,19 @@ def main() -> None:
         for _ in range(args.requests)
     ]
     t0 = time.time()
-    outputs = engine.generate(prompts, max_new=args.max_new)
+    outputs = engine.generate(prompts, max_new=args.max_new, sampling=sampling)
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in outputs.values())
     for rid, toks in sorted(outputs.items()):
-        print(f"[serve] request {rid}: {len(toks)} tokens -> {toks[:8]}...")
-    print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / max(dt, 1e-9):.1f} tok/s, quant={args.quant})")
+        reason = engine.scheduler.requests[rid].finish_reason
+        print(f"[serve] request {rid}: {len(toks)} tokens ({reason}) "
+              f"-> {toks[:8]}...")
+    stats = engine.stats()
+    print(f"[serve] {total_tokens} tokens in {dt:.2f}s (quant={args.quant}, "
+          f"prefill {stats['prefill_tok_s']:.1f} tok/s, "
+          f"decode {stats['decode_tok_s']:.1f} tok/s, "
+          f"mean ttft {stats['mean_ttft_s'] * 1e3:.0f}ms, "
+          f"mean latency {stats['mean_latency_s'] * 1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

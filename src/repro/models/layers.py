@@ -126,23 +126,35 @@ def attention(
 
     new_cache = None
     if cache is not None:
-        # decode (s==1) or cached prefill (s>1, full attention only):
-        # write K/V at `pos`, attend over the cache.
+        # decode (s==1) or cached chunked prefill (s>1, full attention only):
+        # write K/V at each row's own position, attend over the cache.  Rows
+        # (serving slots) may sit at different depths, so writes and masks
+        # are per-row (vmapped update slice).
         window = cache["k"].shape[1]
-        pos = positions.reshape(-1)[0] if positions.ndim else positions
-        slot = pos % window if cfg.sliding_window else pos
-        k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if positions.ndim == 2:
+            row_pos = positions[:, 0]
+        else:
+            row_pos = jnp.broadcast_to(positions.reshape(-1)[:1], (b,))
+        slot = row_pos % window if cfg.sliding_window else row_pos
+        upd = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+        k_all = jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype), slot)
+        v_all = jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype), slot)
         new_cache = {"k": k_all, "v": v_all}
         k, v = k_all, v_all
         cache_positions = jnp.arange(window)
         qidx = jnp.arange(s)
         if cfg.sliding_window:
             # ring buffer (decode): every slot written so far is in-window
-            valid = ((cache_positions <= slot) | (pos >= window))[None, :]
+            valid = (cache_positions[None, :] <= slot[:, None]) | (
+                row_pos[:, None] >= window
+            )
+            valid = jnp.broadcast_to(valid[:, None, :], (b, s, window))
         else:
-            valid = cache_positions[None, :] <= pos + qidx[:, None]
-        mask = jnp.where(valid[None, None, :, :], 0.0, NEG_INF)
+            valid = (
+                cache_positions[None, None, :]
+                <= row_pos[:, None, None] + qidx[None, :, None]
+            )
+        mask = jnp.where(valid[:, None, :, :], 0.0, NEG_INF)
     elif causal:
         ii = positions if positions.ndim == 2 else positions[None]
         qi = ii[:, :, None]

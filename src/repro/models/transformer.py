@@ -154,8 +154,15 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
     return params
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Stacked (n_groups, ...) decode cache matching the scan layout."""
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Stacked (n_groups, ...) decode cache matching the scan layout.
+
+    ``dtype=None`` derives the KV dtype from the model's compute dtype, so a
+    float32 model gets a float32 cache (bit-exact cached decode) while bf16
+    models keep the bandwidth-saving bf16 cache.
+    """
+    if dtype is None:
+        dtype = _dtype(cfg)
 
     def one_group():
         fam = cfg.family
@@ -387,11 +394,15 @@ def forward(
     encoder_out: jax.Array | None = None,
     patch_embeds: jax.Array | None = None,
     logits_dtype=jnp.float32,
+    return_hidden: bool = False,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Token ids → logits.  Returns (logits, new_cache, aux_loss).
 
     decode: ``tokens`` is (B, 1) and ``cache`` holds the stacked KV/state.
     vlm: ``patch_embeds`` (B, P, d) is prepended to the embedded tokens.
+    ``return_hidden`` skips the lm_head and returns the post-final-norm
+    hidden states instead of logits — serving prefill projects only the
+    last prompt position, not every position of every chunk.
     """
     x = params["embed"]["w"][tokens].astype(_dtype(cfg))
     if patch_embeds is not None:
@@ -405,6 +416,8 @@ def forward(
         params["groups"], x, cfg, positions, cache, encoder_out
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, new_cache, aux
     if cfg.tie_embeddings:
         logits = x.astype(logits_dtype) @ params["embed"]["w"].T.astype(logits_dtype)
     else:
@@ -425,7 +438,7 @@ class Model:
     def init(self, key, dtype=jnp.float32) -> Params:
         return init_params(key, self.cfg, dtype)
 
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch: int, max_len: int, dtype=None):
         return init_cache(self.cfg, batch, max_len, dtype)
 
     def __call__(self, params, tokens, **kw):

@@ -1,0 +1,53 @@
+"""Version-portability shims: one import site for APIs that moved between
+JAX 0.4.x and JAX >= 0.6.
+
+The repo targets both the pinned 0.4.x CI environment and current JAX:
+
+* ``shard_map`` — ``jax.shard_map`` (new) vs ``jax.experimental.shard_map``
+  (0.4.x).  The new API renamed ``check_rep`` to ``check_vma``; callers here
+  always speak ``check_vma`` and the shim translates.
+* ``use_mesh`` — context manager that makes ``mesh`` the ambient mesh.
+  ``jax.set_mesh`` where it exists, ``jax.sharding.use_mesh`` on the
+  versions that had only that, and a no-op context on 0.4.x (where passing
+  the mesh explicitly — as all call sites in this repo do — is sufficient).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["shard_map", "use_mesh"]
+
+
+def shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+              check_vma: bool | None = None):
+    """Drop-in for ``jax.shard_map`` that also runs on JAX 0.4.x.
+
+    Usable directly or as a decorator factory (``shard_map(mesh=..., ...)``),
+    mirroring how ``functools.partial(jax.shard_map, ...)`` is used.
+    """
+    if f is None:
+        return lambda fn: shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def use_mesh(mesh):
+    """``with use_mesh(mesh):`` — ambient-mesh context on every JAX version."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext(mesh)

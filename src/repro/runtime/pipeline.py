@@ -28,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models import transformer as T
 from ..models.config import ModelConfig
+from .jax_compat import shard_map
 
 __all__ = ["split_stages", "pipeline_forward"]
 
@@ -76,7 +77,7 @@ def pipeline_forward(
     final_norm = params["final_norm"]
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), params["groups"]), P()),
         out_specs=P(),

@@ -1,0 +1,17 @@
+"""Serving subsystem: slot engine, sampling, request scheduler.
+
+See ``engine.Engine`` for the architecture overview.
+"""
+
+from .engine import Engine, ServeConfig
+from .sampling import GREEDY, SamplingParams
+from .scheduler import Request, Scheduler
+
+__all__ = [
+    "Engine",
+    "ServeConfig",
+    "SamplingParams",
+    "GREEDY",
+    "Request",
+    "Scheduler",
+]

@@ -1,28 +1,50 @@
-"""Slot-based batched serving engine (continuous-batching-lite).
+"""Slot-based continuous-batching serving engine.
 
-A fixed pool of ``n_slots`` sequences shares one stacked decode cache; new
-requests claim free slots (their prompt is prefilled into the slot),
-finished sequences free them.  One jitted ``decode_step`` advances every
-active slot by a token per call — the standard TPU serving shape
-(decode is batch-synchronous; per-slot positions are tracked so slots can
-be at different depths).
+A fixed pool of ``n_slots`` sequences shares one stacked decode cache; the
+scheduler admits queued requests into free slots, finished sequences free
+them.  The engine has exactly three jitted programs, all with static
+shapes, so steady-state serving never retraces:
 
-With ``quant mode`` set to one of the packed modes the weights used for
-decode are the paper's packed low-precision weights — the serving-side
-payoff of DSP-packing (decode is weight-bandwidth-bound).
+* **batched chunked prefill** — admitted prompts are padded onto a shared
+  ``(n_slots, prefill_chunk)`` grid and every chunk is ONE ``T.forward``
+  call.  A prompt of length L costs ``ceil(L / chunk)`` forward calls
+  instead of L (the seed engine scanned one token at a time *and* retraced
+  per prompt length).  Rows not being prefilled are masked out of the cache
+  merge, so admission can overlap slots that are mid-decode.
+* **decode step** — advances every active slot one token per call (the
+  standard TPU serving shape), with per-slot positions so slots sit at
+  different depths.
+* **sampling** — temperature/top-k/top-p with per-slot PRNG keys
+  (``serving.sampling``), one batched draw for prefill and decode alike.
+
+With ``ServeConfig.quant_mode = "int4_packed"`` the engine calls
+``quantize_for_serving`` once at build time: every large matmul weight is
+stored as packed int4 nibbles and ``decode_step`` runs the paper's packed
+matmul kernel straight off the stored nibbles — the serving-side payoff of
+DSP-packing (decode is weight-bandwidth-bound).  ``int8``/``dsp_packed``
+select the corresponding per-call arithmetic paths.
+
+Termination goes through a single code path (``_finish_slot``): EOS,
+per-request ``max_new`` and the cache-capacity bound all free the slot,
+record the finish reason and report the rid to the caller.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.packed_linear import LinearSpec
+from ..core.packed_params import SERVING_MODES, quantize_for_serving
 from ..models import transformer as T
 from ..models.config import ModelConfig
+from .sampling import SamplingParams, sample_tokens, slot_key
+from .scheduler import Scheduler
 
 __all__ = ["ServeConfig", "Engine"]
 
@@ -31,114 +53,327 @@ __all__ = ["ServeConfig", "Engine"]
 class ServeConfig:
     n_slots: int = 8
     max_len: int = 512
-    temperature: float = 0.0  # 0 = greedy
+    prefill_chunk: int = 16
+    max_new: int = 64          # default per-request budget (submit can override)
     eos_token: int = 1
+    # weight path: native | int8 | int4_packed | dsp_packed (see
+    # core.packed_params.quantize_for_serving)
+    quant_mode: str = "native"
+    use_kernel: bool = False   # Pallas kernels vs jnp refs (CPU tests use ref)
+    # default sampling (submit can override per request)
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.quant_mode not in SERVING_MODES:
+            raise ValueError(
+                f"quant_mode {self.quant_mode!r} not in {SERVING_MODES}"
+            )
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        if serve_cfg.quant_mode not in ("native", "none"):
+            # switch the arithmetic mode but preserve the caller's other
+            # LinearSpec choices (dsp_spec correction scheme, act_bits)
+            cfg = dataclasses.replace(
+                cfg,
+                quant=dataclasses.replace(
+                    cfg.quant, mode=serve_cfg.quant_mode,
+                    use_kernel=serve_cfg.use_kernel,
+                ),
+            )
+            params = quantize_for_serving(params, serve_cfg.quant_mode)
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
-        self.cache = T.init_cache(cfg, serve_cfg.n_slots, serve_cfg.max_len)
-        self.positions = np.zeros(serve_cfg.n_slots, np.int32)
-        self.active = np.zeros(serve_cfg.n_slots, bool)
-        self.last_token = np.zeros(serve_cfg.n_slots, np.int32)
-        self.outputs: dict[int, list[int]] = {}
-        self._next_rid = 0
-        self._rid_of_slot: dict[int, int] = {}
+        b = serve_cfg.n_slots
+        # Chunked prefill needs (a) contiguous full-attention cache writes —
+        # ring-buffer (sliding-window) caches only support single-position
+        # writes — and (b) per-position masking, which recurrent state
+        # (ssm/hybrid) doesn't have: a padded chunk would advance the
+        # recurrent state past the prompt.  Both fall back to chunk=1.
+        recurrent = cfg.family in ("ssm", "hybrid")
+        self._chunk = 1 if (cfg.sliding_window or recurrent) else max(
+            1, min(serve_cfg.prefill_chunk, serve_cfg.max_len)
+        )
+        # the prefill grid is padded to whole chunks, so allocate the cache
+        # on the same grid — otherwise the last chunk's writes would clamp
+        # at max_len and shift K/V backwards over earlier positions
+        window = -(-serve_cfg.max_len // self._chunk) * self._chunk
+        self.cache = T.init_cache(cfg, b, window)
+        # per-leaf batch axis: attention KV leaves carry the slot axis at 1,
+        # stacked recurrent state (mlstm/mamba) at 2 — locate it by shape
+        # difference between a b-slot and a (b+1)-slot cache
+        s_b = jax.eval_shape(lambda: T.init_cache(cfg, b, window))
+        s_b1 = jax.eval_shape(lambda: T.init_cache(cfg, b + 1, window))
+        self._batch_axes = jax.tree.map(
+            lambda x, y: next(
+                i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q
+            ),
+            s_b, s_b1,
+        )
+        self.positions = np.zeros(b, np.int32)
+        self.active = np.zeros(b, bool)
+        self.last_token = np.zeros(b, np.int32)
+        self._slot_rid = np.full(b, -1, np.int64)
+        # per-slot sampling state (set at admission from the request)
+        self._temperature = np.zeros(b, np.float32)
+        self._top_k = np.zeros(b, np.int32)
+        self._top_p = np.ones(b, np.float32)
+        self._keys = np.zeros((b, 2), np.uint32)
+        self._base_key = jax.random.PRNGKey(serve_cfg.seed)
+        self.scheduler = Scheduler()
+        self._sample = jax.jit(sample_tokens)
 
     # ---- jitted steps ---------------------------------------------------
-    @partial(jax.jit, static_argnums=(0,))
-    def _prefill(self, params, cache, tokens, slot):
-        """Prefill one prompt into ``slot`` of the batched cache."""
-        cfg = self.cfg
-        one_cache = jax.tree.map(
-            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), cache
-        )
-        # feed tokens one position at a time to reuse the decode path
-        def body(carry, tok_pos):
-            cache_s, _ = carry
-            tok, pos = tok_pos
-            logits, new_c, _ = T.forward(
-                params, cfg, tok[None, None], positions=pos[None, None], cache=cache_s
-            )
-            return (new_c, logits[0, -1]), None
+    @staticmethod
+    def _row_select(mask, leaf, axis):
+        """Broadcast a (n_slots,) bool mask against ``leaf`` along its
+        batch ``axis``."""
+        shape = [1] * leaf.ndim
+        shape[axis] = mask.shape[0]
+        return mask.reshape(shape)
 
-        pos = jnp.arange(tokens.shape[0])
-        (one_cache, last_logits), _ = jax.lax.scan(body, (one_cache, jnp.zeros((cfg.vocab_size,))), (tokens, pos))
+    @partial(jax.jit, static_argnums=(0,))
+    def _reset_slots(self, cache, row_mask):
+        """Zero the cache state of the slots in ``row_mask`` — a freshly
+        admitted request must not continue from the previous occupant's
+        recurrent state or stale KV."""
+        return jax.tree.map(
+            lambda leaf, ax: jnp.where(
+                self._row_select(row_mask, leaf, ax),
+                jnp.zeros((), leaf.dtype), leaf,
+            ),
+            cache, self._batch_axes,
+        )
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _prefill_chunk(self, params, cache, tokens, base, row_mask, last_idx,
+                       last_hidden):
+        """One chunk of batched prefill.
+
+        ``tokens``: (n_slots, C) — rows selected by ``row_mask`` carry
+        prompt tokens for positions ``[base, base + C)``; other rows are
+        ignored (their cache updates are masked out of the merge).
+        Collects each admitted row's last-prompt-token *hidden state* into
+        ``last_hidden`` when that position falls inside this chunk; the
+        lm_head runs once on the gathered rows (``_lm_head``), not on every
+        position of every chunk.
+        """
+        b, c = tokens.shape
+        positions = jnp.broadcast_to(base + jnp.arange(c)[None], (b, c))
+        hidden, new_cache, _ = T.forward(
+            params, self.cfg, tokens, positions=positions, cache=cache,
+            return_hidden=True,
+        )
         cache = jax.tree.map(
-            lambda full, one: jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), slot, axis=1),
-            cache,
-            one_cache,
+            lambda old, new, ax: jnp.where(
+                self._row_select(row_mask, old, ax), new, old
+            ),
+            cache, new_cache, self._batch_axes,
         )
-        return cache, jnp.argmax(last_logits).astype(jnp.int32)
+        idx = jnp.clip(last_idx - base, 0, c - 1)
+        row_hidden = jnp.take_along_axis(
+            hidden, idx[:, None, None], axis=1
+        )[:, 0]
+        in_chunk = row_mask & (last_idx >= base) & (last_idx < base + c)
+        last_hidden = jnp.where(
+            in_chunk[:, None], row_hidden.astype(last_hidden.dtype), last_hidden
+        )
+        return cache, last_hidden
 
     @partial(jax.jit, static_argnums=(0,))
-    def _decode(self, params, cache, tokens, positions):
-        cfg = self.cfg
+    def _lm_head(self, params, hidden):
+        """(n_slots, d) hidden → (n_slots, V) f32 logits (mirrors
+        ``T.forward``'s head)."""
+        if self.cfg.tie_embeddings:
+            return hidden.astype(jnp.float32) @ params["embed"]["w"].T.astype(
+                jnp.float32
+            )
+        from ..core.packed_linear import apply_linear
+
+        return apply_linear(
+            params["lm_head"], hidden, self.cfg.quant
+        ).astype(jnp.float32)
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _decode_step(self, params, cache, tokens, positions, keys,
+                     temperature, top_k, top_p):
         logits, new_cache, _ = T.forward(
-            params, cfg, tokens[:, None], positions=positions[:, None], cache=cache
+            params, self.cfg, tokens[:, None], positions=positions[:, None],
+            cache=cache,
         )
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        nxt = sample_tokens(
+            logits[:, -1], keys, positions, temperature, top_k, top_p
+        )
         return new_cache, nxt
 
     # ---- request lifecycle ----------------------------------------------
-    def submit(self, prompt: list[int]) -> int | None:
-        free = np.flatnonzero(~self.active)
-        if len(free) == 0:
-            return None
-        slot = int(free[0])
-        rid = self._next_rid
-        self._next_rid += 1
-        toks = jnp.asarray(prompt, jnp.int32)
-        self.cache, last = self._prefill(self.params, self.cache, toks, slot)
-        self.positions[slot] = len(prompt)
-        self.last_token[slot] = int(last)
-        self.active[slot] = True
-        self._rid_of_slot[slot] = rid
-        self.outputs[rid] = [int(last)]
+    def submit(self, prompt: list[int], max_new: int | None = None,
+               sampling: SamplingParams | None = None,
+               admit: bool = True) -> int:
+        """Enqueue a request; it is admitted as soon as a slot frees up.
+
+        ``admit=False`` defers admission to the next ``step()`` so that a
+        burst of submissions shares one batched prefill pass.
+        Returns the request id (outputs appear in ``outputs[rid]``).
+        """
+        if len(prompt) >= self.scfg.max_len - 1:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_len-1 ({self.scfg.max_len - 1})"
+            )
+        if max_new is None:
+            max_new = self.scfg.max_new
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if sampling is None:
+            sampling = SamplingParams(
+                self.scfg.temperature, self.scfg.top_k, self.scfg.top_p
+            )
+        rid = self.scheduler.submit(prompt, max_new, sampling)
+        if admit:
+            self._admit()
         return rid
 
-    def step(self) -> list[int]:
-        """Advance every active slot one token; returns finished rids."""
-        if not self.active.any():
+    def _admit(self) -> list[int]:
+        """Move queued requests into free slots: batched chunked prefill +
+        first-token sample.  Returns rids finished during admission (a
+        first token can already hit EOS or a 1-token budget)."""
+        free = np.flatnonzero(~self.active)
+        admitted = self.scheduler.admit(len(free))
+        if not admitted:
             return []
-        self.cache, nxt = self._decode(
-            self.params,
-            self.cache,
-            jnp.asarray(self.last_token),
-            jnp.asarray(self.positions),
+        t0 = time.monotonic()
+        b, c = self.scfg.n_slots, self._chunk
+        lmax = max(len(r.prompt) for r in admitted)
+        n_chunks = -(-lmax // c)
+        tokens = np.zeros((b, n_chunks * c), np.int32)
+        row_mask = np.zeros(b, bool)
+        last_idx = np.zeros(b, np.int32)
+        for slot, req in zip(free, admitted):
+            ln = len(req.prompt)
+            tokens[slot, :ln] = req.prompt
+            row_mask[slot] = True
+            last_idx[slot] = ln - 1
+            self.positions[slot] = ln
+            self.active[slot] = True
+            self._slot_rid[slot] = req.rid
+            self._temperature[slot] = req.sampling.temperature
+            self._top_k[slot] = req.sampling.top_k
+            self._top_p[slot] = req.sampling.top_p
+            self._keys[slot] = np.asarray(slot_key(self._base_key, req.rid))
+
+        cache = self._reset_slots(self.cache, jnp.asarray(row_mask))
+        last_hidden = jnp.zeros((b, self.cfg.d_model), T._dtype(self.cfg))
+        last_idx_j = jnp.asarray(last_idx)
+        for ci in range(n_chunks):
+            base = ci * c
+            # rows whose prompt is already fully written skip later chunks
+            mask_c = jnp.asarray(row_mask & (last_idx >= base))
+            cache, last_hidden = self._prefill_chunk(
+                self.params, cache,
+                jnp.asarray(tokens[:, base:base + c]), jnp.int32(base),
+                mask_c, last_idx_j, last_hidden,
+            )
+        self.cache = cache
+
+        first = np.asarray(self._sample(
+            self._lm_head(self.params, last_hidden),
+            jnp.asarray(self._keys), last_idx_j,
+            jnp.asarray(self._temperature), jnp.asarray(self._top_k),
+            jnp.asarray(self._top_p),
+        ))
+        n_prompt_tokens = sum(len(r.prompt) for r in admitted)
+        self.scheduler.note_prefill(
+            n_prompt_tokens, time.monotonic() - t0, admitted
         )
-        nxt = np.asarray(nxt)
         finished = []
-        for slot in np.flatnonzero(self.active):
-            self.positions[slot] += 1
-            tok = int(nxt[slot])
-            rid = self._rid_of_slot[slot]
-            self.outputs[rid].append(tok)
+        for slot, req in zip(free, admitted):
+            tok = int(first[slot])
+            req.tokens.append(tok)
             self.last_token[slot] = tok
-            done = tok == self.scfg.eos_token or self.positions[slot] >= self.scfg.max_len - 1
-            if done:
-                self.active[slot] = False
+            rid = self._maybe_finish(slot, tok)
+            if rid is not None:
                 finished.append(rid)
         return finished
 
-    def generate(self, prompts: list[list[int]], max_new: int = 32) -> dict[int, list[int]]:
-        """Drive a full batch to completion (simple reference loop)."""
-        pending = list(prompts)
-        rids = []
-        for _ in range(max_new * max(1, len(prompts))):
-            while pending:
-                rid = self.submit(pending[0])
-                if rid is None:
-                    break
-                rids.append(rid)
-                pending.pop(0)
-            if not self.active.any() and not pending:
+    def _maybe_finish(self, slot: int, tok: int) -> int | None:
+        """Single termination path: EOS, per-request budget and cache
+        capacity all land here."""
+        req = self.scheduler.requests[int(self._slot_rid[slot])]
+        if tok == self.scfg.eos_token:
+            return self._finish_slot(slot, "eos")
+        if len(req.tokens) >= req.max_new:
+            return self._finish_slot(slot, "length")
+        if self.positions[slot] >= self.scfg.max_len - 1:
+            return self._finish_slot(slot, "length")
+        return None
+
+    def _finish_slot(self, slot: int, reason: str) -> int:
+        rid = int(self._slot_rid[slot])
+        self.active[slot] = False
+        self._slot_rid[slot] = -1
+        self.scheduler.finish(rid, reason)
+        return rid
+
+    def step(self) -> list[int]:
+        """Admit what fits, then advance every active slot one token.
+        Returns the rids that finished this step."""
+        finished = self._admit()
+        if not self.active.any():
+            return finished
+        t0 = time.monotonic()
+        self.cache, nxt = self._decode_step(
+            self.params, self.cache,
+            jnp.asarray(self.last_token), jnp.asarray(self.positions),
+            jnp.asarray(self._keys), jnp.asarray(self._temperature),
+            jnp.asarray(self._top_k), jnp.asarray(self._top_p),
+        )
+        nxt = np.asarray(nxt)
+        active_slots = np.flatnonzero(self.active)
+        self.scheduler.note_decode(len(active_slots), time.monotonic() - t0)
+        for slot in active_slots:
+            self.positions[slot] += 1
+            tok = int(nxt[slot])
+            self.scheduler.requests[int(self._slot_rid[slot])].tokens.append(tok)
+            self.last_token[slot] = tok
+            rid = self._maybe_finish(slot, tok)
+            if rid is not None:
+                finished.append(rid)
+        return finished
+
+    def generate(self, prompts: list[list[int]], max_new: int | None = None,
+                 sampling: SamplingParams | None = None) -> dict[int, list[int]]:
+        """Drive a batch of prompts to completion (reference loop)."""
+        rids = [self.submit(p, max_new=max_new, sampling=sampling, admit=False)
+                for p in prompts]
+        per_req = max_new if max_new is not None else self.scfg.max_new
+        budget = per_req * len(prompts) + len(prompts) + 1
+        for _ in range(budget):
+            if not (self.active.any() or self.scheduler.n_queued):
                 break
             self.step()
-            for slot in np.flatnonzero(self.active):
-                if len(self.outputs[self._rid_of_slot[slot]]) >= max_new:
-                    self.active[slot] = False
-        return {r: self.outputs[r] for r in rids}
+        assert not (self.active.any() or self.scheduler.n_queued), \
+            "generate() exceeded its step budget"
+        return {r: list(self.scheduler.requests[r].tokens) for r in rids}
+
+    # ---- introspection --------------------------------------------------
+    @property
+    def outputs(self) -> dict[int, list[int]]:
+        return {r.rid: r.tokens for r in self.scheduler.requests.values()
+                if r.tokens}
+
+    def peek_logits(self) -> np.ndarray:
+        """(n_slots, V) next-token logits for the current state, without
+        advancing it — used by the packed-vs-float tolerance tests."""
+        logits, _, _ = T.forward(
+            self.params, self.cfg, jnp.asarray(self.last_token)[:, None],
+            positions=jnp.asarray(self.positions)[:, None], cache=self.cache,
+        )
+        return np.asarray(logits[:, -1].astype(jnp.float32))
+
+    def stats(self) -> dict:
+        return self.scheduler.stats()

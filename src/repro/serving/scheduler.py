@@ -1,0 +1,114 @@
+"""Request scheduler for the serving engine.
+
+Owns everything that is *not* device compute: the admission queue (FIFO),
+per-request bookkeeping (prompt, budget, sampling params, emitted tokens,
+finish reason) and the engine-wide throughput/latency counters.  The engine
+asks it which requests to admit when slots free up and reports every
+prefill/decode batch back so ``stats()`` can answer the operator questions
+— queue depth, tokens/s by phase, time-to-first-token, request latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+from .sampling import GREEDY, SamplingParams
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    sampling: SamplingParams = GREEDY
+    submitted_at: float = 0.0
+    prefill_done_at: float | None = None
+    finished_at: float | None = None
+    finish_reason: str | None = None  # "eos" | "length" | None while running
+    tokens: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+
+class Scheduler:
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self._queue: deque[int] = deque()
+        self._next_rid = 0
+        self.requests: dict[int, Request] = {}
+        # throughput/latency counters
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.prefill_time_s = 0.0
+        self.decode_time_s = 0.0
+        self.n_finished = 0
+
+    # ---- queue ---------------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int,
+               sampling: SamplingParams = GREEDY) -> int:
+        if not prompt:
+            raise ValueError("empty prompt")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(
+            rid, list(prompt), max_new, sampling, submitted_at=self._clock()
+        )
+        self._queue.append(rid)
+        return rid
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def admit(self, n_free: int) -> list[Request]:
+        """Pop up to ``n_free`` queued requests for prefill."""
+        out = []
+        while self._queue and len(out) < n_free:
+            out.append(self.requests[self._queue.popleft()])
+        return out
+
+    # ---- accounting ----------------------------------------------------
+    def note_prefill(self, n_tokens: int, dt_s: float,
+                     admitted: list[Request]) -> None:
+        self.prefill_tokens += n_tokens
+        self.prefill_time_s += dt_s
+        now = self._clock()
+        for req in admitted:
+            req.prefill_done_at = now
+
+    def note_decode(self, n_tokens: int, dt_s: float) -> None:
+        self.decode_tokens += n_tokens
+        self.decode_time_s += dt_s
+
+    def finish(self, rid: int, reason: str) -> None:
+        req = self.requests[rid]
+        if req.done:
+            raise RuntimeError(f"request {rid} finished twice")
+        req.finish_reason = reason
+        req.finished_at = self._clock()
+        self.n_finished += 1
+
+    # ---- reporting -----------------------------------------------------
+    def stats(self) -> dict:
+        done = [r for r in self.requests.values() if r.done]
+        ttft = [r.prefill_done_at - r.submitted_at for r in done
+                if r.prefill_done_at is not None]
+        lat = [r.finished_at - r.submitted_at for r in done]
+        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0
+        return {
+            "queued": self.n_queued,
+            "running": len(self.requests) - self.n_finished - self.n_queued,
+            "finished": self.n_finished,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tok_s": self.prefill_tokens / max(self.prefill_time_s, 1e-9),
+            "decode_tok_s": self.decode_tokens / max(self.decode_time_s, 1e-9),
+            "mean_ttft_s": mean(ttft),
+            "mean_latency_s": mean(lat),
+        }

@@ -19,6 +19,7 @@ def test_two_stage_pipeline_matches_sequential(tmp_path):
         import jax, jax.numpy as jnp, numpy as np
         from repro.models import transformer as T
         from repro.models.registry import get_config
+        from repro.runtime.jax_compat import use_mesh
         from repro.runtime.pipeline import pipeline_forward, split_stages
 
         cfg = dataclasses.replace(
@@ -39,7 +40,7 @@ def test_two_stage_pipeline_matches_sequential(tmp_path):
         ref = jnp.stack(ref)
 
         staged = split_stages(params, 2)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             got = pipeline_forward(staged, cfg, toks, mesh)
         err = float(jnp.abs(got - ref).max())
         assert err < 2e-3, err

@@ -1,48 +1,148 @@
-"""Serving engine: slot lifecycle, batched decode, packed-weight serving."""
+"""Serving engine: scheduler lifecycle, batched chunked prefill, sampling,
+and the packed-weight decode path."""
 
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.packed_linear import LinearSpec
 from repro.models import transformer as T
 from repro.models.registry import get_config
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving import Engine, SamplingParams, ServeConfig
+from repro.serving.sampling import sample_tokens
 
 KEY = jax.random.PRNGKey(0)
+CFG = dataclasses.replace(get_config("qwen1.5-110b", smoke=True), dtype="float32")
+PARAMS = T.init_params(KEY, CFG)
 
 
-def _engine(quant="native", slots=3):
-    cfg = get_config("qwen1.5-110b", smoke=True)
-    cfg = dataclasses.replace(cfg, quant=LinearSpec(mode=quant))
-    params = T.init_params(KEY, cfg)
-    return Engine(cfg, params, ServeConfig(n_slots=slots, max_len=32))
+def _engine(quant="native", slots=3, chunk=4, **kw):
+    return Engine(CFG, PARAMS, ServeConfig(
+        n_slots=slots, max_len=32, prefill_chunk=chunk, quant_mode=quant, **kw
+    ))
+
+
+def _greedy_reference(prompt, n):
+    """Greedy continuation via full-context uncached forwards."""
+    seq, want = list(prompt), []
+    for _ in range(n):
+        logits, _, _ = T.forward(PARAMS, CFG, jnp.asarray([seq], jnp.int32))
+        nxt = int(np.argmax(np.asarray(logits[0, -1])))
+        want.append(nxt)
+        seq.append(nxt)
+    return want
+
+
+# ---- lifecycle / scheduler ----------------------------------------------
 
 
 def test_submit_and_step():
     eng = _engine()
     rid = eng.submit([5, 6, 7])
     assert rid == 0 and eng.active[0]
+    assert len(eng.outputs[rid]) == 1  # prefill samples the first token
     eng.step()
-    assert len(eng.outputs[rid]) == 2  # prefill token + one decode
+    assert len(eng.outputs[rid]) == 2
 
 
-def test_slot_exhaustion_and_reuse():
+def test_queue_admission_when_slots_full():
     eng = _engine(slots=2)
-    assert eng.submit([1, 2]) is not None
-    assert eng.submit([3, 4]) is not None
-    assert eng.submit([5, 6]) is None  # no free slot
-    eng.active[:] = False  # finish everything
-    assert eng.submit([5, 6]) is not None  # slot reused
+    r0 = eng.submit([1, 2], max_new=2)
+    r1 = eng.submit([3, 4], max_new=2)
+    r2 = eng.submit([5, 6], max_new=2)  # no free slot: queued, not active
+    assert eng.scheduler.n_queued == 1
+    assert not eng.scheduler.requests[r2].tokens
+    eng.step()  # r0/r1 hit max_new=2 and free their slots
+    eng.step()  # r2 admitted and prefilled
+    assert eng.scheduler.n_queued == 0
+    assert eng.scheduler.requests[r2].tokens
+    for _ in range(4):
+        eng.step()
+    assert all(eng.scheduler.requests[r].done for r in (r0, r1, r2))
 
 
-def test_generate_batch():
-    eng = _engine()
-    outs = eng.generate([[2, 3], [4, 5, 6], [7]], max_new=6)
+def test_termination_single_path_frees_bookkeeping():
+    eng = _engine(slots=2)
+    outs = eng.generate([[2, 3], [4, 5, 6], [7]], max_new=4)
     assert len(outs) == 3
-    for toks in outs.values():
-        assert 1 <= len(toks) <= 6
+    assert not eng.active.any()
+    assert (eng._slot_rid == -1).all()
+    st = eng.stats()
+    assert st["finished"] == 3 and st["running"] == 0 and st["queued"] == 0
+    for req in eng.scheduler.requests.values():
+        assert req.finish_reason == "length"
+        assert len(req.tokens) == 4
+
+
+def test_eos_finishes_request():
+    # find the greedy first token, then serve with it as the EOS id: the
+    # request must finish during admission through the same path
+    first = _engine().generate([[2, 3, 4]], max_new=1)[0][0]
+    eng = _engine(eos_token=first)
+    outs = eng.generate([[2, 3, 4]], max_new=8)
+    assert outs[0] == [first]
+    assert eng.scheduler.requests[0].finish_reason == "eos"
+
+
+def test_max_new_one_needs_no_decode():
+    eng = _engine()
+    outs = eng.generate([[9, 8, 7]], max_new=1)
+    assert [len(v) for v in outs.values()] == [1]
+    assert eng.stats()["decode_tokens"] == 0
+
+
+def test_stats_counters():
+    eng = _engine(slots=2)
+    prompts = [[2, 3], [4, 5, 6]]
+    eng.generate(prompts, max_new=3)
+    st = eng.stats()
+    assert st["prefill_tokens"] == sum(len(p) for p in prompts)
+    assert st["decode_tokens"] > 0
+    assert st["prefill_tok_s"] > 0 and st["decode_tok_s"] > 0
+    assert st["mean_ttft_s"] > 0 and st["mean_latency_s"] >= st["mean_ttft_s"]
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(quant_mode="float16")
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        _engine().submit(list(range(40)))  # prompt longer than max_len
+    with pytest.raises(ValueError):
+        _engine().submit([2, 3], max_new=0)  # zero budget is an error
+
+
+# ---- decode correctness --------------------------------------------------
+
+
+def test_greedy_decode_matches_full_forward_multi_slot():
+    """Cached greedy decode must equal argmax over uncached full forwards at
+    every step — with slots at different depths (per-row cache positions)."""
+    prompts = [[3, 7, 11, 2], [5, 9], [13, 4, 8, 6, 1]]
+    got = _engine(chunk=4).generate(prompts, max_new=6)
+    for rid, prompt in enumerate(prompts):
+        assert got[rid] == _greedy_reference(prompt, 6)
+
+
+def test_chunked_prefill_matches_per_token():
+    prompts = [[2, 3, 4, 5, 6, 7, 8], [9, 10]]
+    a = _engine(chunk=1).generate(prompts, max_new=5)
+    b = _engine(chunk=8).generate(prompts, max_new=5)
+    assert a == b
+
+
+def test_chunk_grid_overhanging_max_len():
+    """A prompt whose padded chunk grid overhangs max_len must still prefill
+    correctly (the cache is allocated on the chunk grid, writes never clamp)."""
+    prompt = list(range(2, 32))  # 30 tokens; ceil(30/7)*7 = 35 > max_len 32
+    a = _engine(slots=1, chunk=1).generate([prompt], max_new=2)
+    b = _engine(slots=1, chunk=7).generate([prompt], max_new=2)
+    assert a == b
 
 
 def test_greedy_decode_is_deterministic():
@@ -51,35 +151,148 @@ def test_greedy_decode_is_deterministic():
     assert list(out1.values()) == list(out2.values())
 
 
+# ---- packed-weight serving ----------------------------------------------
+
+
 def test_packed_int4_serving_runs():
     eng = _engine(quant="int4_packed")
     outs = eng.generate([[2, 3, 4]], max_new=4)
     assert all(np.isfinite(t).all() for t in outs.values())
 
 
-def test_engine_decode_consistent_with_uncached_forward():
-    """The engine's cached greedy decode must equal argmax over an
-    uncached full forward at every step (float32 smoke model)."""
-    cfg = dataclasses.replace(
-        get_config("qwen1.5-110b", smoke=True), dtype="float32"
+def test_packed_decode_matches_float_within_tolerance():
+    """The packed decode path must agree with float decode within int4
+    quantization noise, conditioned on the same prompt and next token."""
+    prompt = [3, 7, 11, 2, 9, 14]
+    ref_eng = _engine(slots=1)
+    packed_eng = _engine(slots=1, quant="int4_packed")
+    ref_eng.submit(list(prompt), max_new=8)
+    packed_eng.submit(list(prompt), max_new=8)
+    # force the same conditioning token so the logits are comparable even if
+    # quantization flipped the sampled first token
+    packed_eng.last_token[:] = ref_eng.last_token
+    ref_logits = ref_eng.peek_logits()[0]
+    got_logits = packed_eng.peek_logits()[0]
+    assert np.isfinite(got_logits).all()
+    rel = float(np.abs(got_logits - ref_logits).mean() / np.abs(ref_logits).mean())
+    # int4 weights + int8 activations on a tiny *random* smoke net amplify
+    # quantization noise (cf. the family-dependent bounds in
+    # test_packed_params); calibrated serving bounds (measured rel 0.51,
+    # cos 0.87).  The cosine bound also rules out degenerate outputs
+    # (all-zero logits would pass a pure mean-relative bound).
+    cos = float(
+        np.dot(got_logits, ref_logits)
+        / (np.linalg.norm(got_logits) * np.linalg.norm(ref_logits))
     )
+    assert rel < 1.0, rel
+    assert cos > 0.6, cos
+
+
+def test_prepacked_decode_equals_per_call_int4():
+    """Packing once at engine build must reproduce the per-call int4 path
+    token for token — same arithmetic, no per-step repacking."""
+    import dataclasses as _dc
+
+    from repro.core.packed_linear import LinearSpec
+
+    prompt = [3, 7, 11, 2, 9, 14]
+    prepacked = _engine(slots=1, quant="int4_packed")
+    percall_cfg = _dc.replace(CFG, quant=LinearSpec(mode="int4_packed"))
+    percall = Engine(percall_cfg, PARAMS, ServeConfig(
+        n_slots=1, max_len=32, prefill_chunk=4
+    ))
+    a = prepacked.generate([list(prompt)], max_new=8)
+    b = percall.generate([list(prompt)], max_new=8)
+    assert a[0] == b[0]
+
+
+def test_packed_params_are_packed_once():
+    eng = _engine(quant="int4_packed")
+    leaves = jax.tree_util.tree_flatten_with_path(eng.params)[0]
+    assert any("packed" in str(p) for p, _ in leaves)
+    assert eng.cfg.quant.mode == "int4_packed"
+
+
+# ---- non-dense families --------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "jamba-v0.1-52b",
+                                  "h2o-danube-3-4b"])
+def test_recurrent_and_swa_families_serve(arch):
+    """SSM/hybrid (recurrent state → chunk-1 prefill fallback) and
+    sliding-window models must serve, and a reused slot must behave exactly
+    like a fresh engine (admission resets the previous occupant's state)."""
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
     params = T.init_params(KEY, cfg)
-    eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=32))
-    prompt = [3, 7, 11, 2]
-    rid = eng.submit(list(prompt))
-    for _ in range(5):
-        eng.step()
-    got = eng.outputs[rid][:6]
+    scfg = ServeConfig(n_slots=2, max_len=32, prefill_chunk=8)
+    eng = Engine(cfg, params, scfg)
+    first = eng.generate([[2, 3, 4], [5, 6]], max_new=4)
+    assert all(len(v) == 4 and np.isfinite(v).all() for v in first.values())
+    reused = eng.generate([[2, 3, 4]], max_new=4)
+    fresh = Engine(cfg, params, scfg).generate([[2, 3, 4]], max_new=4)
+    assert list(reused.values()) == list(fresh.values())
 
-    # reference: greedy re-decode with full forwards
-    import jax.numpy as jnp
-    import numpy as np
 
-    seq = list(prompt)
-    want = []
+# ---- sampling ------------------------------------------------------------
+
+
+def _sample(logits, temp, top_k, top_p, position=0, seed=0):
+    b = logits.shape[0]
+    keys = jnp.asarray(
+        np.stack([np.asarray(jax.random.PRNGKey(seed + i)) for i in range(b)])
+    )
+    return np.asarray(sample_tokens(
+        jnp.asarray(logits, jnp.float32), keys,
+        jnp.full((b,), position, jnp.int32),
+        jnp.full((b,), temp, jnp.float32),
+        jnp.full((b,), top_k, jnp.int32),
+        jnp.full((b,), top_p, jnp.float32),
+    ))
+
+
+def test_temperature_zero_is_argmax():
+    logits = np.asarray(jax.random.normal(KEY, (4, 50)))
+    assert (_sample(logits, 0.0, 0, 1.0) == logits.argmax(-1)).all()
+
+
+def test_top_k_one_is_argmax():
+    logits = np.asarray(jax.random.normal(KEY, (4, 50)))
+    assert (_sample(logits, 1.0, 1, 1.0) == logits.argmax(-1)).all()
+
+
+def test_top_k_restricts_support():
+    logits = np.zeros((1, 50), np.float32)
+    logits[0, :3] = [5.0, 4.5, 4.0]  # the only plausible tokens
+    draws = {int(_sample(logits, 1.0, 3, 1.0, position=p)[0]) for p in range(50)}
+    assert draws <= {0, 1, 2} and len(draws) > 1
+
+
+def test_top_p_keeps_nucleus_only():
+    logits = np.zeros((1, 50), np.float32)
+    logits[0, 0] = 10.0  # p(token 0) ~ 1
+    draws = {int(_sample(logits, 1.0, 0, 0.5, position=p)[0]) for p in range(20)}
+    assert draws == {0}
+
+
+def test_sampling_reproducible_per_seed():
+    sp = SamplingParams(temperature=0.9, top_k=8, top_p=0.95)
+    o1 = _engine(seed=7).generate([[2, 3, 4]], max_new=6, sampling=sp)
+    o2 = _engine(seed=7).generate([[2, 3, 4]], max_new=6, sampling=sp)
+    assert list(o1.values()) == list(o2.values())
+    assert all(0 <= t < CFG.vocab_size for t in o1[0])
+
+
+def test_mixed_sampling_per_slot():
+    """One greedy and one sampled request share a decode batch."""
+    eng = _engine(slots=2)
+    r_greedy = eng.submit([2, 3, 4], max_new=5)
+    r_sampled = eng.submit(
+        [2, 3, 4], max_new=5,
+        sampling=SamplingParams(temperature=1.0, top_k=10),
+    )
     for _ in range(6):
-        logits, _, _ = T.forward(params, cfg, jnp.asarray([seq], jnp.int32))
-        nxt = int(np.argmax(np.asarray(logits[0, -1])))
-        want.append(nxt)
-        seq.append(nxt)
-    assert got == want[: len(got)]
+        eng.step()
+    assert eng.scheduler.requests[r_greedy].tokens == _greedy_reference(
+        [2, 3, 4], 5
+    )
+    assert len(eng.scheduler.requests[r_sampled].tokens) == 5

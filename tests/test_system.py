@@ -33,6 +33,22 @@ def test_snn_example_runs():
 
 
 @pytest.mark.slow
+def test_serve_driver_cli():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen1.5-110b",
+         "--smoke", "--requests", "3", "--max-new", "4", "--slots", "2",
+         "--max-len", "32", "--quant", "int4_packed", "--temperature", "0.8",
+         "--top-k", "20"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "request 2" in out.stdout
+    assert "decode" in out.stdout
+
+
+@pytest.mark.slow
 def test_train_driver_cli():
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run(
