@@ -11,7 +11,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None,
         help="comma-separated subset: "
-             "table1,table2,table3,fig9,kernel,roofline,serving",
+             "table1,table2,table3,fig9,kernel,roofline,serving,tuning",
     )
     args = ap.parse_args()
     from . import (
@@ -22,6 +22,7 @@ def main() -> None:
         table1_packing,
         table2_per_result,
         table3_addpack,
+        tuning_bench,
     )
 
     print("name,us_per_call,derived")
@@ -33,6 +34,7 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
         "serving": serving_bench.run,
+        "tuning": tuning_bench.run,
     }
     selected = args.only.split(",") if args.only else list(mods)
     for name in selected:

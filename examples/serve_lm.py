@@ -50,3 +50,4 @@ if __name__ == "__main__":
     run("int8")
     run("int4_packed")   # nibbles packed once; decode runs the packed kernel
     run("dsp_packed")    # paper-faithful pair-packed arithmetic
+    run("dsp_tuned")     # per-layer autotuned packing plans (repro.tuning)

@@ -10,9 +10,15 @@ config-selectable feature of the framework rather than a bolt-on:
   * ``int4_packed`` — packed-nibble storage + production Pallas kernel
   * ``dsp_packed``  — the paper's pair-packed wide-multiply path (Pallas),
                       correction scheme selectable via ``PackedDotSpec``
+  * ``dsp_tuned``   — per-layer tuned pair-packed plans: weights arrive as
+                      ``DspTunedLeaf`` (quantized once at engine build, plan
+                      attached as static aux) and each layer runs ITS plan's
+                      arithmetic; float leaves under this mode fall back to
+                      the native matmul (only packable weights get plans)
 
 Inference-only integer paths raise under differentiation by construction
-(they are used inside ``serve_step``).  Params are plain pytrees.
+(they are used inside ``serve_step``).  Params are plain pytrees (plus the
+registered ``DspTunedLeaf`` node for tuned weights).
 """
 
 from __future__ import annotations
@@ -28,7 +34,8 @@ from .quantize import fake_quant_signed, quantize_signed
 
 __all__ = ["LinearSpec", "init_linear", "apply_linear"]
 
-MODES = ("native", "qat4", "qat8", "int8", "int4_packed", "dsp_packed")
+MODES = ("native", "qat4", "qat8", "int8", "int4_packed", "dsp_packed",
+         "dsp_tuned")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,10 +65,29 @@ def _flatten_batch(x):
 
 def apply_linear(params, x: jax.Array, spec: LinearSpec = LinearSpec()) -> jax.Array:
     """``x @ w (+ b)`` through the selected compute mode."""
-    from .packed_params import is_packed_leaf, materialize_weight
+    from .packed_params import (
+        is_dsp_tuned_leaf,
+        is_packed_leaf,
+        materialize_weight,
+    )
 
     w = params["w"]
     mode = spec.mode
+    if is_dsp_tuned_leaf(w):
+        if w.values.ndim == 2:
+            # serving decode path: this layer's tuned plan rides on the leaf
+            # (static aux), weights were quantized once at engine build
+            x2, lead = _flatten_batch(x.astype(jnp.float32))
+            y = ops.dsp_tuned_matmul_f32(
+                x2, w.values, w.scale, spec=w.spec,
+                block=w.block or (128, 128, 128), use_kernel=spec.use_kernel,
+            ).reshape(*lead, w.values.shape[-1]).astype(x.dtype)
+        else:
+            # stacked leaves outside a layer scan: dequantize at use
+            y = x @ materialize_weight(w, x.dtype)
+        if "b" in params:
+            y = y + params["b"].astype(y.dtype)
+        return y
     if is_packed_leaf(w):
         if mode == "int4_packed" and w["packed"].ndim == 2:
             # serving decode path: weights were nibble-packed once at engine
@@ -79,7 +105,9 @@ def apply_linear(params, x: jax.Array, spec: LinearSpec = LinearSpec()) -> jax.A
         if "b" in params:
             y = y + params["b"].astype(y.dtype)
         return y
-    if mode == "native":
+    if mode in ("native", "dsp_tuned"):
+        # dsp_tuned reaching a float leaf means the weight was not packable
+        # (tiny, odd-shaped, embedding): serve it natively
         y = x @ w.astype(x.dtype)
     elif mode in ("qat4", "qat8"):
         bits = 4 if mode == "qat4" else 8

@@ -8,44 +8,116 @@ for TPU serving (DESIGN.md §2): weight HBM bytes drop 4× vs bf16, which both
 needed per-step FSDP gathers fit TP-only-replicated — removing the per-token
 parameter all-gather entirely (EXPERIMENTS.md §Perf, cells A/C).
 
+``dsp_tuned`` is the per-layer generalization: the ``repro.tuning`` planner
+picks, per weight, the fastest pair-packed plan inside an error budget, and
+the weight is quantized ONCE to the plan's signed integer grid and stored in
+a :class:`DspTunedLeaf` — a registered pytree node that carries the plan
+(spec + block) as static aux data, so jitted serving programs specialize on
+the plan without retracing per call.  Decode then runs the paper's packed
+arithmetic straight off the stored integers, no per-step re-quantization.
+
 Norms, biases, embeddings and 1-D leaves stay bf16 (gather tables and
 vector ops gain nothing from nibble packing).
 """
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Iterator
+
 import jax
 import jax.numpy as jnp
 
 from ..kernels import ref
+from ..kernels.ref import INT4_EXACT, PackedDotSpec
 from .quantize import quantize_signed
 
 __all__ = [
     "quantize_params_for_serving",
     "quantize_for_serving",
     "is_packed_leaf",
+    "is_dsp_tuned_leaf",
+    "iter_packable_weights",
+    "DspTunedLeaf",
     "SERVING_MODES",
 ]
 
 MIN_DIM = 32  # don't pack tiny matrices (router tables etc. stay exact)
 
 # Weight-conversion modes accepted by the serving engine.  Storage packing
-# only happens for ``int4_packed``; ``int8``/``dsp_packed`` keep float
-# weights and quantize at the point of use (their arithmetic is selected via
-# ``LinearSpec.mode``), and ``native``/``none`` serve the weights as-is.
-SERVING_MODES = ("native", "none", "int8", "int4_packed", "dsp_packed")
+# happens for ``int4_packed`` (nibbles) and ``dsp_tuned`` (per-layer plan
+# integers); ``int8``/``dsp_packed`` keep float weights and quantize at the
+# point of use (their arithmetic is selected via ``LinearSpec.mode``), and
+# ``native``/``none`` serve the weights as-is.
+SERVING_MODES = ("native", "none", "int8", "int4_packed", "dsp_packed",
+                 "dsp_tuned")
 
 
 def is_packed_leaf(p) -> bool:
     return isinstance(p, dict) and "packed" in p and "scale" in p
 
 
+def is_dsp_tuned_leaf(p) -> bool:
+    return isinstance(p, DspTunedLeaf)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DspTunedLeaf:
+    """A matmul weight quantized once to a tuned packing plan.
+
+    ``values``: (…, d_in, d_out) signed ints on the plan's ``bits_w`` grid
+    (stored int8 — the pair packer consumes plain integers; sub-byte
+    *storage* nibble packing composes later and is a ROADMAP open item).
+    ``scale``: (…, 1, d_out) f32 per-output-channel dequantization scale.
+    ``spec``/``block``: the plan — static aux data, part of the pytree
+    treedef, so a jitted program is specialized per plan.
+    """
+
+    values: Any
+    scale: Any
+    spec: PackedDotSpec
+    block: tuple[int, int, int] | None = None
+
+    def tree_flatten(self):
+        return (self.values, self.scale), (self.spec, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
+def iter_packable_weights(
+    params, min_dim: int = MIN_DIM, path: str = ""
+) -> Iterator[tuple[str, Any]]:
+    """Yield ``(tree_path, leaf)`` for every matmul weight eligible for
+    packed serving — the single eligibility predicate shared by the weight
+    converters here and the per-layer planner (``tuning.plan_linear_layers``),
+    so plan tables and converted trees always agree on coverage."""
+    if not isinstance(params, dict):
+        return
+    for k, v in params.items():
+        p = f"{path}/{k}"
+        if (
+            k in ("w", "up", "gate", "down")
+            and hasattr(v, "ndim")
+            and v.ndim >= 2
+            and "embed" not in path
+            and "patch_proj" not in path
+            and "router" not in p  # keep routing exact (tiny)
+            and v.shape[-2] >= min_dim
+            and v.shape[-1] >= min_dim
+            and v.shape[-2] % 2 == 0
+        ):
+            yield p, v
+        else:
+            yield from iter_packable_weights(v, min_dim, p)
+
+
 def _pack_matrix(w: jax.Array) -> dict:
     """(…, d_in, d_out) float -> packed int4 nibbles + per-channel scale."""
     lead = w.shape[:-2]
     d_in, d_out = w.shape[-2:]
-    if d_in % 2:
-        raise ValueError(f"d_in must be even to pack nibbles, got {d_in}")
     w2 = w.reshape((-1, d_in, d_out)).astype(jnp.float32)
     q = jax.vmap(lambda m: quantize_signed(m, bits=4, axis=0))(w2)
     packed = jax.vmap(ref.pack_int4_weights)(q.values)
@@ -53,6 +125,21 @@ def _pack_matrix(w: jax.Array) -> dict:
         "packed": packed.reshape(lead + (d_in // 2, d_out)),
         "scale": q.scale.reshape(lead + (1, d_out)).astype(jnp.float32),
     }
+
+
+def _tune_matrix(w: jax.Array, spec: PackedDotSpec,
+                 block: tuple[int, int, int] | None) -> DspTunedLeaf:
+    """(…, d_in, d_out) float -> plan-grid signed ints + per-channel scale."""
+    lead = w.shape[:-2]
+    d_in, d_out = w.shape[-2:]
+    w2 = w.reshape((-1, d_in, d_out)).astype(jnp.float32)
+    q = jax.vmap(lambda m: quantize_signed(m, bits=spec.bits_w, axis=0))(w2)
+    return DspTunedLeaf(
+        values=q.values.astype(jnp.int8).reshape(lead + (d_in, d_out)),
+        scale=q.scale.reshape(lead + (1, d_out)).astype(jnp.float32),
+        spec=spec,
+        block=block,
+    )
 
 
 def dequantize_packed(p: dict, dtype=jnp.bfloat16) -> jax.Array:
@@ -68,51 +155,76 @@ def dequantize_packed(p: dict, dtype=jnp.bfloat16) -> jax.Array:
 
 
 def materialize_weight(p, dtype):
-    return dequantize_packed(p, dtype) if is_packed_leaf(p) else p
+    if is_packed_leaf(p):
+        return dequantize_packed(p, dtype)
+    if is_dsp_tuned_leaf(p):
+        return (p.values.astype(jnp.float32) * p.scale).astype(dtype)
+    return p
+
+
+def _convert_tree(params, paths_to_convert: dict, convert):
+    """Replace the leaves named in ``paths_to_convert`` (path -> per-leaf
+    conversion argument); everything else passes through untouched."""
+
+    def walk(tree, path=""):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for k, v in tree.items():
+            p = f"{path}/{k}"
+            if p in paths_to_convert:
+                out[k] = convert(v, paths_to_convert[p])
+            else:
+                out[k] = walk(v, p)
+        return out
+
+    return walk(params)
 
 
 def quantize_params_for_serving(params, min_dim: int = MIN_DIM):
     """Replace every large matmul weight leaf 'w' (and MoE expert stacks)
     with its packed representation.  Tree structure changes: callers use
     the transformed tree for sharding/eval_shape as well."""
-
-    def walk(tree, path=""):
-        if isinstance(tree, dict):
-            out = {}
-            for k, v in tree.items():
-                p = f"{path}/{k}"
-                if (
-                    k in ("w", "up", "gate", "down")
-                    and hasattr(v, "ndim")
-                    and v.ndim >= 2
-                    and "embed" not in path
-                    and "patch_proj" not in path
-                    and "router" not in p  # keep routing exact (tiny)
-                    and v.shape[-2] >= min_dim
-                    and v.shape[-1] >= min_dim
-                    and v.shape[-2] % 2 == 0
-                ):
-                    out[k] = _pack_matrix(v)
-                else:
-                    out[k] = walk(v, p)
-            return out
-        return tree
-
-    return walk(params)
+    targets = {p: None for p, _ in iter_packable_weights(params, min_dim)}
+    return _convert_tree(params, targets, lambda w, _: _pack_matrix(w))
 
 
-def quantize_for_serving(params, mode: str = "int4_packed", min_dim: int = MIN_DIM):
+def quantize_for_serving(params, mode: str = "int4_packed",
+                         min_dim: int = MIN_DIM, plans=None):
     """Engine-build-time weight conversion step.
 
     ``int4_packed`` packs every large matmul weight to nibbles *once*; the
     decode path (`packed_linear.apply_linear`) then runs the paper's packed
     matmul kernel directly on the stored nibbles every step — no per-call
-    re-quantization.  The other modes keep float weights (``int8`` and
-    ``dsp_packed`` quantize at the point of use through their
-    ``LinearSpec.mode`` arithmetic; ``native``/``none`` are pass-through).
+    re-quantization.
+
+    ``dsp_tuned`` quantizes each weight to its tuned plan (``plans``: a
+    ``{tree_path: PlanReport-or-spec}`` table from
+    ``tuning.plan_linear_layers``; paths missing from the table fall back
+    to the exact int4 preset) and stores :class:`DspTunedLeaf` leaves, so
+    decode runs per-layer pair-packed arithmetic off stored integers.
+
+    The other modes keep float weights (``int8`` and ``dsp_packed``
+    quantize at the point of use through their ``LinearSpec.mode``
+    arithmetic; ``native``/``none`` are pass-through).
     """
     if mode not in SERVING_MODES:
         raise ValueError(f"serving mode {mode!r} not in {SERVING_MODES}")
     if mode == "int4_packed":
         return quantize_params_for_serving(params, min_dim=min_dim)
+    if mode == "dsp_tuned":
+        plans = plans or {}
+        targets = {}
+        for p, _ in iter_packable_weights(params, min_dim):
+            plan = plans.get(p)
+            if plan is None:
+                spec, block = INT4_EXACT, None
+            elif isinstance(plan, PackedDotSpec):
+                spec, block = plan, None
+            else:  # tuning.PlanReport
+                spec, block = plan.spec, plan.block
+            targets[p] = (spec, block)
+        return _convert_tree(
+            params, targets, lambda w, sb: _tune_matrix(w, sb[0], sb[1])
+        )
     return params

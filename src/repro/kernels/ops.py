@@ -25,6 +25,7 @@ from .ref import INT4_EXACT, PackedDotSpec
 __all__ = [
     "auto_interpret",
     "packed_matmul_f32",
+    "dsp_tuned_matmul_f32",
     "int4_matmul_f32",
     "quantized_matmul_ref",
 ]
@@ -62,23 +63,51 @@ def packed_matmul_f32(
     ``zero_point_correction``) and weights signed per output channel, runs
     the packed integer matmul, and dequantizes.
     """
-    m, k = x.shape
-    _, n = w.shape
     xq = quantize_unsigned(x, bits=spec.bits_a, axis=-1)
     wq = quantize_signed(w, bits=spec.bits_w, axis=0)
-
-    bm, bn, bk = block
-    xv = _pad_to(_pad_to(xq.values, bm, 0), bk, 1)
-    wv = _pad_to(_pad_to(wq.values, bk, 0), bn, 1)
+    # ragged shapes are padded (bit-transparently) inside the compute paths
     if use_kernel:
         acc = packed_matmul(
-            xv, wv, spec=spec, block=block,
+            xq.values, wq.values, spec=spec, block=block,
             interpret=auto_interpret() if interpret is None else interpret,
-        )[:m, :n]
+        )
     else:
-        acc = ref.ref_packed_matmul(xv, wv, spec=spec)[:m, :n]
+        acc = ref.ref_packed_matmul(xq.values, wq.values, spec=spec)
     acc = acc - zero_point_correction(wq.values, xq.zero_point)[None, :]
     return acc.astype(jnp.float32) * xq.scale * wq.scale
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "block", "interpret", "use_kernel")
+)
+def dsp_tuned_matmul_f32(
+    x: jax.Array,
+    w_values: jax.Array,
+    w_scale: jax.Array,
+    spec: PackedDotSpec,
+    block=(128, 128, 128),
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """float (M, K) × pre-quantized signed (K, N) through a tuned plan.
+
+    The serving-side companion of ``packed_matmul_f32``: weights were
+    quantized ONCE at engine build (``packed_params.quantize_for_serving``
+    with mode ``dsp_tuned``) onto ``spec``'s signed grid, so every decode
+    step only quantizes the activations and runs the packed integer path —
+    no per-call weight re-quantization.
+    """
+    xq = quantize_unsigned(x, bits=spec.bits_a, axis=-1)
+    wv = w_values.astype(jnp.int32)
+    if use_kernel:
+        acc = packed_matmul(
+            xq.values, wv, spec=spec, block=block,
+            interpret=auto_interpret() if interpret is None else interpret,
+        )
+    else:
+        acc = ref.ref_packed_matmul(xq.values, wv, spec=spec)
+    acc = acc - zero_point_correction(wv, xq.zero_point)[None, :]
+    return acc.astype(jnp.float32) * xq.scale * w_scale
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "use_kernel"))

@@ -8,13 +8,22 @@ extractions.  One int32 multiply computes TWO narrow products (the pair's
 dot-product contribution lands in the middle bit field), halving multiply
 count for sub-8-bit operands.
 
+The kernel dispatches ANY legal :class:`~repro.kernels.ref.PackedDotSpec`
+(arbitrary operand widths, n_pairs counts and correction schemes — the
+plans the ``repro.tuning`` enumerator emits), not just the int4 presets.
+Extraction semantics live in ``ref.extract_accumulated_field``, shared with
+the jnp oracle, so kernel and reference are bit-identical by construction.
+
 Correctness modes mirror the paper exactly:
-  * ``naive`` — biased extraction (Xilinx white-paper semantics, §V)
-  * ``full``  — round-half-up, bit-exact vs the integer matmul (§V-A)
-  * ``mr``    — overpacked spacing + MSB restore from cheap LSBs (§VI-B)
+  * ``naive``   — biased floor extraction (Xilinx white-paper semantics, §V)
+  * ``full``    — round-half-up, bit-exact vs the integer matmul (§V-A)
+  * ``mr``      — overpacked spacing + MSB restore from cheap LSBs (§VI-B)
+  * ``mr+full`` — MSB restore and round-half-up (beyond-paper combination)
 
 Layout: grid (M/bm, N/bn, K/bk); x/w tiles in VMEM; the int32 output block
-doubles as the accumulator across K steps (revisited output block).
+doubles as the accumulator across K steps (revisited output block).  Ragged
+M/N/K are zero-padded to the block grid internally (zero operand pairs are
+bit-transparent in every scheme) and the true (M, N) slice is returned.
 """
 
 from __future__ import annotations
@@ -25,17 +34,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import ref
 from .ref import PackedDotSpec, INT4_EXACT
 
 __all__ = ["packed_matmul", "DEFAULT_BLOCK"]
 
 DEFAULT_BLOCK = (128, 128, 128)  # (bm, bn, bk) — MXU/VPU aligned
-
-
-def _sext(v, width: int):
-    mask = jnp.int32((1 << width) - 1)
-    sign = jnp.int32(1 << (width - 1))
-    return ((v & mask) ^ sign) - sign
 
 
 def _kernel(x_ref, w_ref, out_ref, *, spec: PackedDotSpec, bk: int):
@@ -58,7 +62,6 @@ def _kernel(x_ref, w_ref, out_ref, *, spec: PackedDotSpec, bk: int):
     w_words = ws[:, 1, :] + (ws[:, 0, :] << spec.p)  # (bk//2, bn)
 
     acc = jnp.zeros((bm, bn), dtype=jnp.int32)
-    we = spec.extract_width
     for c in range(bk // spec.chunk):  # unrolled: bk/chunk is small+static
         sl = slice(c * spec.n_pairs, (c + 1) * spec.n_pairs)
         # ONE wide multiply-accumulate per pair (the DSP op).
@@ -68,27 +71,22 @@ def _kernel(x_ref, w_ref, out_ref, *, spec: PackedDotSpec, bk: int):
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
-        if spec.correction == "naive":
-            acc = acc + _sext(partial >> spec.p, we)
-        elif spec.correction == "full":
-            t = ((partial >> (spec.p - 1)) + 1) >> 1
-            acc = acc + _sext(t, we)
-        else:  # mr
-            mask = jnp.int32((1 << spec.mr_bits) - 1)
-            contam = (
-                jax.lax.dot_general(
-                    xa[:, sl, 1] & mask,
-                    ws[sl, 0, :] & mask,
-                    (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32,
-                )
-                & mask
-            )
-            t = ((partial >> (spec.p - 1)) + 1) >> 1
-            e = _sext(t, we)
-            acc = acc + _sext(e - (contam << (we - spec.mr_bits)), we)
+        contam = (
+            ref.contamination_term(xa[:, sl], ws[sl], spec)
+            if spec.uses_mr else None
+        )
+        acc = acc + ref.extract_accumulated_field(partial, spec, contam)
 
     out_ref[...] += acc
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 @functools.partial(
@@ -103,18 +101,26 @@ def packed_matmul(
 ) -> jax.Array:
     """(M, K) unsigned × (K, N) signed → (M, N) int32 via pair packing.
 
-    Shapes must be multiples of ``block`` (use ``repro.kernels.ops`` for
-    padding and scale handling).
+    Any shape is accepted: M/N/K are zero-padded up to the block grid and
+    the result is sliced back to (M, N).  ``block[2]`` must be a multiple
+    of ``spec.chunk`` so every K tile holds whole extraction groups.
     """
     m, k = x_u.shape
     k2, n = w_s.shape
     assert k == k2, (k, k2)
     bm, bn, bk = block
-    if m % bm or n % bn or k % bk or bk % spec.chunk:
-        raise ValueError(f"shape {(m, k, n)} not aligned to block {block}")
+    if bk % spec.chunk:
+        raise ValueError(
+            f"block bk={bk} must be a multiple of spec.chunk={spec.chunk} "
+            f"({spec.name()})"
+        )
+    x_u = _pad_axis(_pad_axis(x_u, bm, 0), bk, 1)
+    w_s = _pad_axis(_pad_axis(w_s, bk, 0), bn, 1)
+    mp, kp = x_u.shape
+    np_ = w_s.shape[1]
 
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
         functools.partial(_kernel, spec=spec, bk=bk),
         grid=grid,
         in_specs=[
@@ -122,6 +128,7 @@ def packed_matmul(
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
         interpret=interpret,
     )(x_u, w_s)
+    return out[:m, :n]

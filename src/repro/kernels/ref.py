@@ -29,16 +29,29 @@ import numpy as np
 
 __all__ = [
     "PackedDotSpec",
+    "CORRECTIONS",
     "INT4_EXACT",
     "INT4_NAIVE",
     "INT4_MR_OVERPACKED",
     "INT2_EXACT",
+    "extract_accumulated_field",
+    "contamination_mask",
+    "contamination_term",
     "ref_packed_matmul",
     "ref_quantized_matmul",
     "pack_int4_weights",
     "unpack_int4_weights",
     "ref_int4_matmul",
 ]
+
+# Correction schemes of the pair-packed dot path, mirroring
+# ``core.correction.SCHEMES`` (the ``approx`` C-port scheme has no dot-product
+# analogue — the accumulated middle field carries its own sign):
+#   * ``naive``   — floor extraction (biased, Xilinx white-paper semantics)
+#   * ``full``    — round-half-up extraction, bit-exact for legal specs (§V-A)
+#   * ``mr``      — overpacked spacing, naive extraction + MSB restore (§VI-B)
+#   * ``mr+full`` — MSB restore *and* round-half-up (beyond-paper combination)
+CORRECTIONS = ("naive", "full", "mr", "mr+full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,10 +61,9 @@ class PackedDotSpec:
     ``p``        — field spacing in bits (the paper's result width + δ).
     ``n_pairs``  — packed products accumulated per extraction
                    (the paper's ``2**delta`` accumulation budget).
-    ``correction`` — ``naive`` (biased, Xilinx white-paper semantics),
-                   ``full`` (round-half-up, exact — paper §V-A) or
-                   ``mr`` (overpacked + MSB-restore, paper §VI-B).
-    ``mr_bits``  — overlap bits restored in ``mr`` mode.
+    ``correction`` — one of :data:`CORRECTIONS`.
+    ``mr_bits``  — overlap bits restored in the ``mr``/``mr+full`` modes
+                   (how far below the exact spacing ``p`` was squeezed).
     """
 
     bits_a: int = 4
@@ -62,22 +74,76 @@ class PackedDotSpec:
     mr_bits: int = 0
 
     def __post_init__(self) -> None:
-        if self.correction not in ("naive", "full", "mr"):
-            raise ValueError(f"bad correction {self.correction!r}")
+        if self.correction not in CORRECTIONS:
+            raise ValueError(
+                f"bad correction {self.correction!r}; options: {CORRECTIONS}"
+            )
+        if self.bits_a < 1 or self.bits_w < 2:
+            raise ValueError(
+                f"operand widths too narrow: bits_a={self.bits_a} (min 1), "
+                f"bits_w={self.bits_w} (min 2, signed)"
+            )
+        if self.n_pairs < 1 or self.p < 1:
+            raise ValueError(f"n_pairs={self.n_pairs} and p={self.p} must be >= 1")
+        if self.uses_mr and self.mr_bits < 1:
+            raise ValueError(
+                f"correction {self.correction!r} restores overlapped MSBs and "
+                "needs mr_bits >= 1"
+            )
+        if not self.uses_mr and self.mr_bits:
+            raise ValueError(
+                f"mr_bits={self.mr_bits} is only meaningful with an mr "
+                f"correction, not {self.correction!r}"
+            )
+        # int32 budget: |packed partial sum| must stay below 2**31.  The three
+        # terms are the high / middle / low result fields of the packed word
+        # after accumulating ``n_pairs`` products.
         max_a = (1 << self.bits_a) - 1
         max_w = 1 << (self.bits_w - 1)
-        # int32 budget: |packed product sum| must stay below 2**31.
         top = self.n_pairs * max_a * max_w * (1 << (2 * self.p))
         mid = self.n_pairs * 2 * max_a * max_w * (1 << self.p)
         low = self.n_pairs * max_a * max_w
-        if top + mid + low >= 1 << 31:
-            raise ValueError("spec overflows the int32 accumulator budget")
-        if self.correction != "mr":
-            # exact extraction needs the accumulated middle field to fit p bits
-            if self.n_pairs * 2 * max_a * max_w >= 1 << (self.p - 1):
+        total = top + mid + low
+        if total >= 1 << 31:
+            raise ValueError(
+                f"{self._describe()} overflows the int32 accumulator budget: "
+                f"the accumulated packed sum spans {total.bit_length()} bits "
+                f"but the int32 accumulator provides 31 value bits; reduce "
+                f"n_pairs (={self.n_pairs}) or the field spacing p (={self.p})"
+            )
+        # The accumulated middle (dot-product) field must fit the bits the
+        # extraction reads back: ``p`` for exact-spacing schemes,
+        # ``p + mr_bits`` once the MSB restore widens the read.
+        mid_mag = self.n_pairs * 2 * max_a * max_w
+        if mid_mag >= 1 << (self.extract_width - 1):
+            need = mid_mag.bit_length() + 1
+            if self.uses_mr:
                 raise ValueError(
-                    "middle field overflows spacing p; use mr correction"
+                    f"{self._describe()} overflows the restored middle field: "
+                    f"the accumulated dot product needs {need} bits but "
+                    f"p + mr_bits = {self.extract_width}; raise p, raise "
+                    f"mr_bits or reduce n_pairs"
                 )
+            raise ValueError(
+                f"{self._describe()} overflows the middle field: the "
+                f"accumulated dot product needs {need} bits but the field "
+                f"spacing provides p = {self.p}; raise p, reduce n_pairs or "
+                "use an mr correction"
+            )
+
+    def _describe(self) -> str:
+        return (
+            f"PackedDotSpec(a{self.bits_a}w{self.bits_w}, p={self.p}, "
+            f"n_pairs={self.n_pairs}, {self.correction})"
+        )
+
+    @property
+    def uses_mr(self) -> bool:
+        return self.correction in ("mr", "mr+full")
+
+    @property
+    def rounds_half_up(self) -> bool:
+        return self.correction in ("full", "mr+full")
 
     @property
     def chunk(self) -> int:
@@ -86,7 +152,37 @@ class PackedDotSpec:
 
     @property
     def extract_width(self) -> int:
-        return self.p + (self.mr_bits if self.correction == "mr" else 0)
+        return self.p + (self.mr_bits if self.uses_mr else 0)
+
+    @property
+    def delta(self) -> int:
+        """Per-product padding in the paper's notation: spacing − result width."""
+        return self.p - (self.bits_a + self.bits_w)
+
+    @property
+    def provably_exact(self) -> bool:
+        """Whether extraction is bit-exact for EVERY operand combination.
+
+        ``full`` is exact by the legality checks (the middle field fits
+        ``p`` and round-half-up absorbs the low-field borrow).  ``mr+full``
+        is exact iff additionally the accumulated low field stays below
+        ``2**(p-1)`` — then its spill into the squeezed middle field is
+        fully absorbed by the rounding while the high-field contamination
+        is subtracted exactly.  The biased schemes are never exact."""
+        if self.correction == "full":
+            return True
+        if self.correction == "mr+full":
+            max_a = (1 << self.bits_a) - 1
+            max_w = 1 << (self.bits_w - 1)
+            return self.n_pairs * max_a * max_w < 1 << (self.p - 1)
+        return False
+
+    def name(self) -> str:
+        """Stable human-readable plan id, e.g. ``a4w4-p10-n16-mr+full``."""
+        return (
+            f"a{self.bits_a}w{self.bits_w}-p{self.p}-n{self.n_pairs}"
+            f"-{self.correction}"
+        )
 
     def density_vs_int8(self) -> float:
         """Multiplies saved vs one-multiply-per-product (2 products/mult)."""
@@ -96,11 +192,12 @@ class PackedDotSpec:
 # Optimal 32-bit-budget presets (derived in DESIGN.md §2 / EXPERIMENTS §Perf).
 INT4_EXACT = PackedDotSpec(bits_a=4, bits_w=4, p=11, n_pairs=4, correction="full")
 INT4_NAIVE = PackedDotSpec(bits_a=4, bits_w=4, p=11, n_pairs=4, correction="naive")
-# Overpacked: spacing squeezed 11->10, 4x longer accumulation chains; the 3
+# Overpacked: spacing squeezed 13->10, 4x longer accumulation chains; the 3
 # contaminated MSBs of the middle field are restored from exactly-computed
-# LSBs of the high field (paper Eqns. 8/9 generalized to sums: products mod 8).
+# LSBs of the high field (paper Eqns. 8/9 generalized to sums: products mod 8),
+# plus round-half-up for the low-field borrow (beyond-paper combination).
 INT4_MR_OVERPACKED = PackedDotSpec(
-    bits_a=4, bits_w=4, p=10, n_pairs=16, correction="mr", mr_bits=3
+    bits_a=4, bits_w=4, p=10, n_pairs=16, correction="mr+full", mr_bits=3
 )
 INT2_EXACT = PackedDotSpec(bits_a=2, bits_w=2, p=10, n_pairs=32, correction="full")
 
@@ -109,6 +206,61 @@ def _sext(v: jax.Array, width: int) -> jax.Array:
     mask = jnp.int32((1 << width) - 1)
     sign = jnp.int32(1 << (width - 1))
     return ((v & mask) ^ sign) - sign
+
+
+def contamination_mask(spec: PackedDotSpec) -> int:
+    """Bit mask of the high-field LSBs that corrupt an overpacked middle field."""
+    return (1 << spec.mr_bits) - 1
+
+
+def contamination_term(xa_chunk: jax.Array, ws_chunk: jax.Array,
+                       spec: PackedDotSpec) -> jax.Array:
+    """The high field's LSBs that leaked into the squeezed middle field.
+
+    ``Σ a_odd·w_even mod 2**mr_bits`` over one extraction chunk, recomputed
+    exactly from the operands (paper Eqns. 8/9 generalized to sums — only
+    the low ``mr_bits`` of each operand can influence the result, so the
+    masked dot is bit-exact and cheap).  Shared by the jnp reference and
+    the Pallas kernel, like :func:`extract_accumulated_field`.
+
+    ``xa_chunk``: (m, n_pairs, 2) paired activations;
+    ``ws_chunk``: (n_pairs, 2, n) paired weights.
+    """
+    mask = jnp.int32(contamination_mask(spec))
+    return jax.lax.dot_general(
+        xa_chunk[:, :, 1] & mask,
+        ws_chunk[:, 0, :] & mask,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ) & mask
+
+
+def extract_accumulated_field(
+    partial: jax.Array, spec: PackedDotSpec, contam: jax.Array | None = None
+) -> jax.Array:
+    """Extract the accumulated middle (dot-product) field of a packed sum.
+
+    This single helper IS the extraction semantics of the whole compute path:
+    both ``ref_packed_matmul`` and the Pallas kernel call it, so the two are
+    bit-identical by construction (and the parity matrix test re-verifies it
+    empirically for every enumerated plan).
+
+    ``contam`` — for mr corrections, the low ``mr_bits`` of the accumulated
+    high field (``Σ a_odd·w_even mod 2**mr_bits``), recomputed exactly from
+    the operands (paper Eqns. 8/9 generalized to sums) and subtracted after
+    sign extension.
+    """
+    we = spec.extract_width
+    if spec.rounds_half_up:
+        t = ((partial >> (spec.p - 1)) + 1) >> 1
+    else:  # naive floor extraction (arithmetic shift)
+        t = partial >> spec.p
+    e = _sext(t, we)
+    if spec.uses_mr:
+        if contam is None:
+            raise ValueError("mr extraction needs the contamination term")
+        e = _sext(e - (contam << (we - spec.mr_bits)), we)
+    return e
 
 
 def _pack_words(x_u: jax.Array, w_s: jax.Array, spec: PackedDotSpec):
@@ -122,18 +274,31 @@ def _pack_words(x_u: jax.Array, w_s: jax.Array, spec: PackedDotSpec):
     return a_words, w_words
 
 
+def _pad_k(x_u: jax.Array, w_s: jax.Array, mult: int):
+    """Zero-pad the contraction axis to a multiple of ``mult``.
+
+    Zero operand pairs contribute exactly zero in every correction scheme
+    (packed words, extractions and contamination terms are all zero), so
+    padding is bit-transparent."""
+    k = x_u.shape[1]
+    pad = (-k) % mult
+    if pad:
+        x_u = jnp.pad(x_u, ((0, 0), (0, pad)))
+        w_s = jnp.pad(w_s, ((0, pad), (0, 0)))
+    return x_u, w_s
+
+
 def ref_packed_matmul(
     x_u: jax.Array, w_s: jax.Array, spec: PackedDotSpec = INT4_EXACT
 ) -> jax.Array:
     """Bit-accurate jnp mirror of the pair-packed Pallas kernel.
 
     ``x_u``: (M, K) unsigned ints (0..2^bits_a-1) stored in any int dtype.
-    ``w_s``: (K, N) signed ints.  K must divide by ``spec.chunk``.
+    ``w_s``: (K, N) signed ints.  Ragged K is zero-padded to ``spec.chunk``.
     Returns int32 (M, N).
     """
+    x_u, w_s = _pad_k(x_u, w_s, spec.chunk)
     m, k = x_u.shape
-    if k % spec.chunk:
-        raise ValueError(f"K={k} not a multiple of chunk={spec.chunk}")
     a_words, w_words = _pack_words(x_u, w_s, spec)
     n = w_s.shape[1]
     acc = jnp.zeros((m, n), dtype=jnp.int32)
@@ -147,32 +312,9 @@ def ref_packed_matmul(
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
-        acc = acc + _extract_mid(partial, spec, xa[:, sl], ws[sl])
+        contam = contamination_term(xa[:, sl], ws[sl], spec) if spec.uses_mr else None
+        acc = acc + extract_accumulated_field(partial, spec, contam)
     return acc
-
-
-def _extract_mid(partial, spec: PackedDotSpec, xa_chunk, ws_chunk):
-    """Extract the accumulated middle (dot-product) field of the packed sum."""
-    we = spec.extract_width
-    if spec.correction == "full":
-        t = ((partial >> (spec.p - 1)) + 1) >> 1
-        return _sext(t, we)
-    if spec.correction == "naive":
-        return _sext(partial >> spec.p, we)
-    # mr: spacing was squeezed by mr_bits; the top mr_bits of the middle
-    # field overlap the high field's LSBs.  Those LSBs are the low bits of
-    # Σ a_odd·w_even, computed exactly mod 2**mr_bits and subtracted
-    # (then round-half-up for the low-field borrow, beyond-paper combo).
-    mask = jnp.int32((1 << spec.mr_bits) - 1)
-    contam = jax.lax.dot_general(
-        xa_chunk[:, :, 1] & mask,
-        ws_chunk[:, 0, :] & mask,
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    ) & mask
-    t = ((partial >> (spec.p - 1)) + 1) >> 1
-    e = _sext(t, we)
-    return _sext(e - (contam << (we - spec.mr_bits)), we)
 
 
 def ref_quantized_matmul(x_u: jax.Array, w_s: jax.Array) -> jax.Array:

@@ -28,7 +28,13 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--quant", default="native",
-                    choices=["native", "int8", "int4_packed", "dsp_packed"])
+                    choices=["native", "int8", "int4_packed", "dsp_packed",
+                             "dsp_tuned"])
+    ap.add_argument("--error-budget", type=float, default=0.5,
+                    help="dsp_tuned: max MAE per extraction a plan may incur")
+    ap.add_argument("--autotune-plans", action="store_true",
+                    help="dsp_tuned: wall-clock block-size sweep per layer "
+                         "shape (slower engine build, measured ranking)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -40,8 +46,13 @@ def main() -> None:
     engine = Engine(cfg, params, ServeConfig(
         n_slots=args.slots, max_len=args.max_len,
         prefill_chunk=args.prefill_chunk, quant_mode=args.quant,
-        seed=args.seed,
+        seed=args.seed, error_budget=args.error_budget,
+        autotune_plans=args.autotune_plans,
     ))
+    if engine.plan_table:
+        plans = {r.name for r in engine.plan_table.values()}
+        print(f"[serve] tuned packing plans (budget {args.error_budget}): "
+              + ", ".join(sorted(plans)))
     sampling = SamplingParams(args.temperature, args.top_k, args.top_p)
 
     rng = np.random.default_rng(0)

@@ -24,6 +24,13 @@ matmul kernel straight off the stored nibbles — the serving-side payoff of
 DSP-packing (decode is weight-bandwidth-bound).  ``int8``/``dsp_packed``
 select the corresponding per-call arithmetic paths.
 
+``quant_mode = "dsp_tuned"`` goes further: the ``repro.tuning`` planner
+enumerates every legal packing plan for ``plan_bits``, scores each by
+simulated error, and picks per layer the fastest plan whose MAE fits
+``error_budget``; weights are quantized once onto each layer's plan and
+decode runs per-layer pair-packed arithmetic.  The chosen table is exposed
+as ``engine.plan_table`` (path → ``tuning.PlanReport``).
+
 Termination goes through a single code path (``_finish_slot``): EOS,
 per-request ``max_new`` and the cache-capacity bound all free the slot,
 record the finish reason and report the rid to the caller.
@@ -56,10 +63,16 @@ class ServeConfig:
     prefill_chunk: int = 16
     max_new: int = 64          # default per-request budget (submit can override)
     eos_token: int = 1
-    # weight path: native | int8 | int4_packed | dsp_packed (see
-    # core.packed_params.quantize_for_serving)
+    # weight path: native | int8 | int4_packed | dsp_packed | dsp_tuned
+    # (see core.packed_params.quantize_for_serving)
     quant_mode: str = "native"
     use_kernel: bool = False   # Pallas kernels vs jnp refs (CPU tests use ref)
+    # dsp_tuned plan search: operand widths, MAE-per-extraction budget and
+    # whether to wall-clock-autotune block sizes (off by default: the cost
+    # proxy ranks identically and engine build stays fast)
+    plan_bits: tuple[int, int] = (4, 4)
+    error_budget: float = 0.5
+    autotune_plans: bool = False
     # default sampling (submit can override per request)
     temperature: float = 0.0
     top_k: int = 0
@@ -75,6 +88,7 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.plan_table = {}
         if serve_cfg.quant_mode not in ("native", "none"):
             # switch the arithmetic mode but preserve the caller's other
             # LinearSpec choices (dsp_spec correction scheme, act_bits)
@@ -85,7 +99,20 @@ class Engine:
                     use_kernel=serve_cfg.use_kernel,
                 ),
             )
-            params = quantize_for_serving(params, serve_cfg.quant_mode)
+            if serve_cfg.quant_mode == "dsp_tuned":
+                from ..tuning import plan_linear_layers
+
+                a_bits, w_bits = serve_cfg.plan_bits
+                self.plan_table = plan_linear_layers(
+                    params, a_bits=a_bits, w_bits=w_bits,
+                    error_budget=serve_cfg.error_budget,
+                    autotune=serve_cfg.autotune_plans,
+                )
+                params = quantize_for_serving(
+                    params, "dsp_tuned", plans=self.plan_table
+                )
+            else:
+                params = quantize_for_serving(params, serve_cfg.quant_mode)
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg

@@ -1,0 +1,46 @@
+"""Packing-plan subsystem: enumerate → score → autotune → select.
+
+The paper generalizes DSP packing to arbitrary widths, multiplication
+counts and δ-spacings (§IV, §VI); this package turns that generality into
+a searchable plan space for the Pallas compute path and picks, per layer,
+the fastest plan whose error fits a user budget.  See ``plans`` (the
+enumerators), ``score`` (error metrics), ``autotune`` (block-size sweep)
+and ``tuner`` (budgeted selection, per-layer tables).
+"""
+
+from .autotune import BlockTiming, autotune_block, candidate_blocks, default_timer
+from .plans import (
+    DEFAULT_MAX_MR_BITS,
+    DEFAULT_N_PAIRS,
+    enumerate_packing_configs,
+    enumerate_specs,
+    min_exact_p,
+)
+from .score import SpecScore, config_error_stats, spec_error_stats
+from .tuner import (
+    DEFAULT_ERROR_BUDGET,
+    PlanReport,
+    plan_linear_layers,
+    rank_plans,
+    select_plan,
+)
+
+__all__ = [
+    "BlockTiming",
+    "autotune_block",
+    "candidate_blocks",
+    "default_timer",
+    "DEFAULT_MAX_MR_BITS",
+    "DEFAULT_N_PAIRS",
+    "enumerate_packing_configs",
+    "enumerate_specs",
+    "min_exact_p",
+    "SpecScore",
+    "config_error_stats",
+    "spec_error_stats",
+    "DEFAULT_ERROR_BUDGET",
+    "PlanReport",
+    "plan_linear_layers",
+    "rank_plans",
+    "select_plan",
+]

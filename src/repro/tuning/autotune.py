@@ -1,0 +1,122 @@
+"""Block-size autotuner for the pair-packed Pallas kernel.
+
+The paper picks a packing *shape*; on TPU the other half of the throughput
+frontier is the kernel's block shape.  This module sweeps ``(bm, bn, bk)``
+candidates for a given spec and problem shape and times the jitted kernel.
+
+Timing is pluggable: pass ``timer=`` any callable with the
+``benchmarks.bench_util.time_us`` signature (``timer(fn, warmup=, iters=)``)
+— the benchmark harness passes exactly that function — or use the built-in
+default, which additionally blocks on the device result so async dispatch
+doesn't fake a win.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.packed_matmul import packed_matmul
+from ..kernels.ref import PackedDotSpec
+
+__all__ = ["BlockTiming", "candidate_blocks", "autotune_block", "default_timer"]
+
+# MXU/VPU-aligned sweep grid; filtered per spec/problem by candidate_blocks.
+DEFAULT_BLOCKS = (
+    (128, 128, 128),
+    (128, 128, 256),
+    (128, 256, 128),
+    (256, 128, 128),
+    (64, 128, 256),
+    (64, 128, 128),
+    (64, 64, 512),
+    (32, 128, 128),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTiming:
+    block: tuple[int, int, int]
+    us_per_call: float
+
+
+def default_timer(fn: Callable[[], object], warmup: int = 1, iters: int = 3) -> float:
+    """``bench_util.time_us``-compatible timer that blocks on the result."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def candidate_blocks(
+    spec: PackedDotSpec,
+    m: int,
+    k: int,
+    n: int,
+    blocks: Sequence[tuple[int, int, int]] = DEFAULT_BLOCKS,
+) -> list[tuple[int, int, int]]:
+    """Filter the sweep grid to blocks legal for ``spec`` and not absurdly
+    oversized for the problem (> 2x padding waste on any axis is dropped,
+    unless nothing survives — then the smallest legal block is kept)."""
+    legal = [b for b in blocks if b[2] % spec.chunk == 0]
+    snug = [
+        b for b in legal
+        if b[0] <= 2 * m and b[1] <= 2 * n and b[2] <= 2 * k
+    ]
+    if snug:
+        return snug
+    if legal:
+        return [min(legal, key=lambda b: b[0] * b[1] * b[2])]
+    # every candidate's bk was smaller than one extraction chunk: build one
+    return [(min(128, max(8, m)), min(128, max(8, n)), spec.chunk)]
+
+
+def autotune_block(
+    spec: PackedDotSpec,
+    shape: tuple[int, int, int],
+    blocks: Sequence[tuple[int, int, int]] | None = None,
+    interpret: bool | None = None,
+    timer: Callable[..., float] | None = None,
+    warmup: int = 1,
+    iters: int = 3,
+    seed: int = 0,
+) -> list[BlockTiming]:
+    """Time every candidate block on a ``shape = (m, k, n)`` problem.
+
+    Returns timings sorted fastest-first.  The kernel output is cross-checked
+    bit-exact against the first block's result — a mistuned block may only
+    be slow, never wrong."""
+    from ..kernels.ops import auto_interpret
+
+    m, k, n = shape
+    if interpret is None:
+        interpret = auto_interpret()
+    if timer is None:
+        timer = default_timer
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 1 << spec.bits_a, (m, k)), jnp.int32)
+    w = jnp.asarray(
+        rng.integers(-(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)),
+        jnp.int32,
+    )
+    cands = candidate_blocks(spec, m, k, n, blocks or DEFAULT_BLOCKS)
+    timings: list[BlockTiming] = []
+    reference = None
+    for block in cands:
+        def run(block=block):
+            return packed_matmul(x, w, spec=spec, block=block, interpret=interpret)
+
+        out = np.asarray(run())
+        if reference is None:
+            reference = out
+        else:
+            np.testing.assert_array_equal(out, reference)
+        timings.append(BlockTiming(block, timer(run, warmup=warmup, iters=iters)))
+    return sorted(timings, key=lambda t: t.us_per_call)

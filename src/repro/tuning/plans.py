@@ -1,0 +1,126 @@
+"""Packing-plan enumeration (paper §IV/§VI generalized to a search space).
+
+The paper's contribution is that DSP packing is a *family* of layouts —
+any operand widths, any number of multiplications, any δ-spacing including
+negative-δ Overpacking — not the two Xilinx app-note configs.  This module
+materializes that family for both compute models in the repo:
+
+* :func:`enumerate_specs` — every legal :class:`PackedDotSpec` for the
+  pair-packed int32 Pallas path, for a requested ``(a_bits, w_bits)``.
+  For exact-spacing schemes (``naive``/``full``) the minimal legal spacing
+  is emitted per accumulation count (wider spacing only wastes bits: the
+  error profile is independent of ``p`` once the middle field fits).  For
+  the mr schemes every overpacked spacing down to ``max_mr_bits`` below the
+  exact minimum is emitted — each trades error for packing density.
+
+* :func:`enumerate_packing_configs` — every legal :class:`PackingConfig`
+  under the DSP48E2 port budgets (the hardware-truth simulation), over a
+  δ range that includes Overpacking.  Negative δ is clamped so fields only
+  ever overlap their immediate neighbour (``spacing >= ceil(width/2)``) —
+  the regime the paper's MR restore (Eqns. 8/9) is defined for.
+"""
+
+from __future__ import annotations
+
+from ..core.packing import PackingConfig, intn_packing
+from ..kernels.ref import CORRECTIONS, PackedDotSpec
+
+__all__ = [
+    "min_exact_p",
+    "enumerate_specs",
+    "enumerate_packing_configs",
+    "DEFAULT_N_PAIRS",
+    "DEFAULT_MAX_MR_BITS",
+]
+
+DEFAULT_N_PAIRS = (1, 2, 4, 8, 16, 32)
+DEFAULT_MAX_MR_BITS = 4
+
+
+def min_exact_p(a_bits: int, w_bits: int, n_pairs: int) -> int:
+    """Smallest spacing whose accumulated middle field never overflows.
+
+    The middle field holds ``Σ (a_even·w_even + a_odd·w_odd)`` over
+    ``n_pairs`` packed words; its magnitude is bounded by
+    ``n_pairs · 2 · a_max · |w_min|`` and the signed field needs one more
+    bit than that magnitude."""
+    max_a = (1 << a_bits) - 1
+    max_w = 1 << (w_bits - 1)
+    return (n_pairs * 2 * max_a * max_w).bit_length() + 1
+
+
+def enumerate_specs(
+    a_bits: int,
+    w_bits: int,
+    corrections: tuple[str, ...] = CORRECTIONS,
+    n_pairs_choices: tuple[int, ...] = DEFAULT_N_PAIRS,
+    max_mr_bits: int = DEFAULT_MAX_MR_BITS,
+    min_p: int = 2,
+) -> tuple[PackedDotSpec, ...]:
+    """Every legal pair-packed plan for ``(a_bits, w_bits)``.
+
+    Legality is delegated to ``PackedDotSpec.__post_init__`` (the int32
+    accumulator and field budgets), so "the enumerator emits it" and "the
+    kernel accepts it" are the same predicate by construction.  The result
+    may be empty — e.g. 8-bit operands admit no exact plan inside int32 —
+    and callers are expected to handle that.
+    """
+    specs: list[PackedDotSpec] = []
+    for n_pairs in n_pairs_choices:
+        p_exact = min_exact_p(a_bits, w_bits, n_pairs)
+        for correction in corrections:
+            if correction in ("naive", "full"):
+                try:
+                    specs.append(
+                        PackedDotSpec(a_bits, w_bits, p_exact, n_pairs, correction)
+                    )
+                except ValueError:
+                    pass  # exceeds the int32 budget at this n_pairs
+            else:  # mr / mr+full: squeeze the spacing below the exact minimum
+                for mr_bits in range(1, max_mr_bits + 1):
+                    p = p_exact - mr_bits
+                    if p < min_p:
+                        continue
+                    try:
+                        specs.append(
+                            PackedDotSpec(
+                                a_bits, w_bits, p, n_pairs, correction, mr_bits
+                            )
+                        )
+                    except ValueError:
+                        pass
+    return tuple(specs)
+
+
+def enumerate_packing_configs(
+    a_bits: int,
+    w_bits: int,
+    n_a_choices: tuple[int, ...] = (1, 2, 3),
+    n_w_choices: tuple[int, ...] = (1, 2),
+    deltas: tuple[int, ...] | range = range(-3, 5),
+) -> tuple[PackingConfig, ...]:
+    """Every legal DSP48E2 packing config for uniform ``(a_bits, w_bits)``.
+
+    Filters by :meth:`PackingConfig.fits_dsp48` (the 17/26/47-bit port
+    budgets) and restricts Overpacking to single-neighbour overlap —
+    ``spacing >= ceil(result_width / 2)`` — which is the regime the MR
+    restore handles (each field is only contaminated by the field directly
+    above it).
+    """
+    width = a_bits + w_bits
+    configs: list[PackingConfig] = []
+    for n_a in n_a_choices:
+        for n_w in n_w_choices:
+            if n_a * n_w < 2:
+                continue  # a single product is not a packing
+            for delta in deltas:
+                spacing = width + delta
+                if delta < 0 and 2 * spacing < width:
+                    continue  # would overlap beyond the adjacent field
+                try:
+                    cfg = intn_packing((a_bits,) * n_a, (w_bits,) * n_w, delta)
+                except ValueError:
+                    continue
+                if cfg.fits_dsp48():
+                    configs.append(cfg)
+    return tuple(configs)

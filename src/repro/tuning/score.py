@@ -1,0 +1,172 @@
+"""Error scoring for packing plans (paper §VIII metrics over plan space).
+
+Two scorers, one per compute model:
+
+* :func:`spec_error_stats` — matmul-level error of a pair-packed
+  :class:`PackedDotSpec`: run the bit-accurate ``ref_packed_matmul`` against
+  the mathematically exact integer matmul over an operand grid and reduce
+  with ``correction.error_stats`` (Eqns. 10-12).  The grid is exhaustive
+  when the per-extraction operand space is small enough (the matmul's
+  rows × columns cross product enumerates every (a-tuple, w-tuple)
+  combination in one call), sampled otherwise.
+
+* :func:`config_error_stats` — DSP48-level error of a
+  :class:`PackingConfig` under a ``core.correction`` scheme, exhaustive
+  when the paper's ``N`` is small, sampled otherwise.
+
+MAE grows linearly with the number of extractions for the biased schemes,
+so plan comparison uses :attr:`SpecScore.mae_per_extraction` — the same
+per-packed-multiply normalization as the paper's tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.correction import ErrorStats, error_stats, exhaustive_operands, simulate
+from ..core.packing import PackingConfig, outer_product_exact
+from ..kernels import ref
+from ..kernels.ref import PackedDotSpec
+
+__all__ = [
+    "SpecScore",
+    "spec_error_stats",
+    "spec_operand_grid",
+    "config_error_stats",
+]
+
+# Exhaustive matmul probes are capped at this many rows/columns; beyond it
+# the operand grid is sampled (the paper's exhaustive tables stop at 4-bit
+# pairs for the same reason: 16^4 is tractable, 16^8 is not).
+EXHAUSTIVE_LIMIT = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecScore:
+    """Error metrics of one plan over a probe matmul."""
+
+    spec: PackedDotSpec
+    stats: ErrorStats
+    n_extractions: int
+    exhaustive: bool
+    n_samples: int = 4096  # measured output values behind the stats
+
+    @property
+    def mae(self) -> float:
+        return self.stats.mae_bar
+
+    @property
+    def mae_per_extraction(self) -> float:
+        """Observed MAE per packed multiply — floored for unproven zeros.
+
+        A sampled grid observing zero error is evidence, not proof: unless
+        the spec's algebra guarantees exactness (``spec.provably_exact``)
+        the plan's error is reported as at least one part in the sample
+        count, so an ``error_budget=0`` selection can only ever admit
+        provably exact plans."""
+        observed = self.stats.mae_bar / self.n_extractions
+        if observed == 0.0 and not self.exhaustive and not self.spec.provably_exact:
+            return 1.0 / self.n_samples
+        return observed
+
+    @property
+    def ep(self) -> float:
+        return self.stats.ep_bar
+
+    @property
+    def wce(self) -> int:
+        return self.stats.wce_bar
+
+
+def _all_tuples(n_vals: int, length: int, lo: int) -> np.ndarray:
+    """(n_vals**length, length) grid of every value tuple."""
+    grids = np.meshgrid(*([np.arange(n_vals) + lo] * length), indexing="ij")
+    return np.stack([g.reshape(-1) for g in grids], axis=-1)
+
+
+def spec_operand_grid(
+    spec: PackedDotSpec,
+    n_extractions: int,
+    samples: int,
+    seed: int,
+) -> tuple[np.ndarray, np.ndarray, bool]:
+    """Probe operands (x (M, K), w (K, N)) for a spec, K = chunk·extractions.
+
+    Exhaustive when one extraction's operand tuples fit ``EXHAUSTIVE_LIMIT``
+    on each side (then ``n_extractions`` is forced to 1 and the matmul's
+    M×N cross product covers every combination); sampled otherwise."""
+    chunk = spec.chunk
+    n_a_tuples = (1 << spec.bits_a) ** chunk
+    n_w_tuples = (1 << spec.bits_w) ** chunk
+    if n_a_tuples <= EXHAUSTIVE_LIMIT and n_w_tuples <= EXHAUSTIVE_LIMIT:
+        x = _all_tuples(1 << spec.bits_a, chunk, 0)
+        w = _all_tuples(1 << spec.bits_w, chunk, -(1 << (spec.bits_w - 1))).T
+        return x.astype(np.int32), w.astype(np.int32), True
+    rng = np.random.default_rng(seed)
+    k = chunk * n_extractions
+    m = n = max(8, int(np.sqrt(samples)))
+    x = rng.integers(0, 1 << spec.bits_a, (m, k)).astype(np.int32)
+    w = rng.integers(
+        -(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)
+    ).astype(np.int32)
+    return x, w, False
+
+
+def spec_error_stats(
+    spec: PackedDotSpec,
+    n_extractions: int = 4,
+    samples: int = 4096,
+    seed: int = 0,
+) -> SpecScore:
+    """Matmul-level error of ``spec`` vs the exact integer matmul."""
+    x, w, exhaustive = spec_operand_grid(spec, n_extractions, samples, seed)
+    if exhaustive:
+        n_extractions = 1
+    got = np.asarray(ref.ref_packed_matmul(x, w, spec))
+    want = np.asarray(ref.ref_quantized_matmul(x, w))
+    stats = error_stats(want.reshape(-1, 1), got.reshape(-1, 1))
+    return SpecScore(spec, stats, n_extractions, exhaustive, got.size)
+
+
+def _sampled_operands(
+    cfg: PackingConfig, samples: int, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    a = np.stack(
+        [rng.integers(0, 1 << wd, size=samples) for wd in cfg.a_widths], axis=-1
+    ).astype(np.int64)
+    w = np.stack(
+        [
+            rng.integers(-(1 << (wd - 1)), 1 << (wd - 1), size=samples)
+            for wd in cfg.w_widths
+        ],
+        axis=-1,
+    ).astype(np.int64)
+    return a, w
+
+
+def config_error_stats(
+    cfg: PackingConfig,
+    scheme: str,
+    samples: int = 8192,
+    seed: int = 0,
+    exhaustive_limit: int = 1 << 16,
+) -> ErrorStats:
+    """DSP48-level error of a config under a correction scheme.
+
+    Exhaustive over the paper's full operand space ``N`` when it fits
+    ``exhaustive_limit`` (matching Tables I/II), sampled otherwise."""
+    n_total = 1
+    for wd in cfg.a_widths:
+        n_total *= 1 << wd
+    for wd in cfg.w_widths:
+        n_total *= 1 << wd
+    if n_total <= exhaustive_limit:
+        a, w = exhaustive_operands(cfg)
+    else:
+        a, w = _sampled_operands(cfg, samples, seed)
+    expected = outer_product_exact(cfg, a, w)
+    actual = simulate(cfg, a, w, scheme=scheme)
+    return error_stats(expected, actual)

@@ -1,0 +1,220 @@
+"""Plan selection: the fastest packing plan inside an error budget.
+
+Mirrors how the related work (wide-datapath arithmetic packing, near-precise
+DSP approximation) treats packing-shape choice: not a fixed scheme but a
+search over an accuracy/throughput frontier.  The pipeline is
+
+    enumerate (plans.enumerate_specs)
+      → score error (score.spec_error_stats, Eqns. 10-12)
+      → filter by the caller's MAE-per-extraction budget
+      → rank by measured kernel time (autotune.autotune_block) or, when
+        measurement is off (engine build time), by an arithmetic cost proxy
+      → select per layer (plan_linear_layers)
+
+The cost proxy counts int32 dot-general work per K element: one packed
+multiply per ``chunk`` K elements, plus half a multiply for the mr
+contamination dot (its operands are ``mr_bits``-masked, but the MXU does
+not care).  Fewer extractions per K is the whole throughput story of
+longer accumulation chains, so the proxy ranks exactly like wall-clock on
+every shape we have measured; wall-clock (``autotune=True``) remains the
+source of truth for the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from ..kernels.ref import INT4_EXACT, PackedDotSpec
+from .autotune import autotune_block
+from .plans import enumerate_specs
+from .score import SpecScore, spec_error_stats
+
+__all__ = [
+    "PlanReport",
+    "DEFAULT_ERROR_BUDGET",
+    "rank_plans",
+    "select_plan",
+    "plan_linear_layers",
+]
+
+# MAE per extraction (paper-table normalization).  0.5 admits every scheme
+# whose mean error stays below half a quantization step of the *packed*
+# arithmetic — the regime where packed-vs-float logit drift is dominated by
+# the 4-bit quantization itself, not the packing (tests/test_serving.py).
+DEFAULT_ERROR_BUDGET = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    """One scored (and optionally timed) packing plan."""
+
+    spec: PackedDotSpec
+    mae: float
+    mae_per_extraction: float
+    ep: float
+    wce: int
+    cost_proxy: float
+    exhaustive: bool
+    block: tuple[int, int, int] | None = None
+    us_per_call: float | None = None
+
+    @property
+    def name(self) -> str:
+        return self.spec.name()
+
+    def to_json(self) -> dict:
+        return {
+            "plan": self.name,
+            "bits_a": self.spec.bits_a,
+            "bits_w": self.spec.bits_w,
+            "p": self.spec.p,
+            "delta": self.spec.delta,
+            "n_pairs": self.spec.n_pairs,
+            "correction": self.spec.correction,
+            "mr_bits": self.spec.mr_bits,
+            "provably_exact": self.spec.provably_exact,
+            "mae_per_extraction": self.mae_per_extraction,
+            "ep_percent": self.ep,
+            "wce": self.wce,
+            "cost_proxy": self.cost_proxy,
+            "exhaustive_grid": self.exhaustive,
+            "block": list(self.block) if self.block else None,
+            "us_per_call": self.us_per_call,
+        }
+
+
+def _cost_proxy(spec: PackedDotSpec) -> float:
+    """Relative int32 multiply-accumulate work per K element (lower=faster)."""
+    return (1.5 if spec.uses_mr else 1.0) / spec.chunk
+
+
+def _report(score: SpecScore) -> PlanReport:
+    return PlanReport(
+        spec=score.spec,
+        mae=score.mae,
+        mae_per_extraction=score.mae_per_extraction,
+        ep=score.ep,
+        wce=score.wce,
+        cost_proxy=_cost_proxy(score.spec),
+        exhaustive=score.exhaustive,
+    )
+
+
+# Error scoring is deterministic per (spec, probe) and specs recur across
+# layers and engine builds — memoize.
+_SCORE_CACHE: dict[tuple, PlanReport] = {}
+
+
+def _scored(spec: PackedDotSpec, n_extractions: int, samples: int, seed: int):
+    key = (spec, n_extractions, samples, seed)
+    if key not in _SCORE_CACHE:
+        _SCORE_CACHE[key] = _report(
+            spec_error_stats(spec, n_extractions=n_extractions,
+                             samples=samples, seed=seed)
+        )
+    return _SCORE_CACHE[key]
+
+
+def rank_plans(
+    a_bits: int,
+    w_bits: int,
+    error_budget: float = DEFAULT_ERROR_BUDGET,
+    shape: tuple[int, int, int] | None = None,
+    autotune: bool = False,
+    specs: Sequence[PackedDotSpec] | None = None,
+    timer: Callable[..., float] | None = None,
+    interpret: bool | None = None,
+    n_extractions: int = 4,
+    samples: int = 4096,
+    seed: int = 0,
+) -> list[PlanReport]:
+    """Score every enumerated plan, keep those inside the error budget and
+    return them fastest-first.
+
+    ``autotune=True`` measures wall-clock per candidate on ``shape``
+    (required then) with the best block from the sweep; otherwise ranking
+    uses the arithmetic cost proxy.  Ties break toward lower error, then
+    wider spacing (cheaper restore)."""
+    if specs is None:
+        specs = enumerate_specs(a_bits, w_bits)
+    reports = [_scored(s, n_extractions, samples, seed) for s in specs]
+    within = [r for r in reports if r.mae_per_extraction <= error_budget]
+    if autotune:
+        if shape is None:
+            raise ValueError("autotune=True needs a probe shape (m, k, n)")
+        timed = []
+        for r in within:
+            timings = autotune_block(
+                r.spec, shape, interpret=interpret, timer=timer, seed=seed
+            )
+            best = timings[0]
+            timed.append(
+                dataclasses.replace(
+                    r, block=best.block, us_per_call=best.us_per_call
+                )
+            )
+        return sorted(timed, key=lambda r: (r.us_per_call, r.mae_per_extraction))
+    return sorted(
+        within,
+        key=lambda r: (r.cost_proxy, r.mae_per_extraction, -r.spec.p),
+    )
+
+
+def select_plan(
+    a_bits: int = 4,
+    w_bits: int = 4,
+    error_budget: float = DEFAULT_ERROR_BUDGET,
+    **kwargs,
+) -> PlanReport:
+    """The fastest plan inside the budget; falls back to the exact int4
+    preset when the budget admits nothing (e.g. budget 0 with widths that
+    have no exact plan raises — there is nothing correct to run)."""
+    ranked = rank_plans(a_bits, w_bits, error_budget=error_budget, **kwargs)
+    if ranked:
+        return ranked[0]
+    if a_bits == 4 and w_bits == 4:
+        return _scored(INT4_EXACT, 4, 4096, 0)
+    raise ValueError(
+        f"no packing plan for a{a_bits}w{w_bits} fits error budget "
+        f"{error_budget} (MAE per extraction); raise the budget or change "
+        "the operand widths"
+    )
+
+
+def plan_linear_layers(
+    params,
+    a_bits: int = 4,
+    w_bits: int = 4,
+    error_budget: float = DEFAULT_ERROR_BUDGET,
+    min_dim: int | None = None,
+    **kwargs,
+) -> dict[str, PlanReport]:
+    """Per-layer plan table for every packable matmul weight in ``params``.
+
+    Keys are the same ``/``-joined tree paths ``quantize_for_serving`` uses,
+    so the table routes straight into the serving conversion.  Plans are
+    selected per distinct weight shape (layers sharing a shape share the
+    ranking work); with the cost proxy the winner is shape-independent, with
+    ``autotune=True`` each shape is measured at its own (m, k, n)."""
+    from ..core.packed_params import MIN_DIM, iter_packable_weights
+
+    if min_dim is None:
+        min_dim = MIN_DIM
+    table: dict[str, PlanReport] = {}
+    by_shape: dict[tuple, PlanReport] = {}
+    autotune = kwargs.get("autotune", False)
+    for path, leaf in iter_packable_weights(params, min_dim=min_dim):
+        d_in, d_out = leaf.shape[-2:]
+        shape_key = (d_in, d_out)
+        if shape_key not in by_shape:
+            call_kwargs = kwargs
+            if autotune and "shape" not in kwargs:
+                # probe each distinct weight shape at its own decode-like
+                # (m, k, n); a caller-supplied shape overrides for all
+                call_kwargs = dict(kwargs, shape=(8, d_in, d_out))
+            by_shape[shape_key] = select_plan(
+                a_bits, w_bits, error_budget=error_budget, **call_kwargs
+            )
+        table[path] = by_shape[shape_key]
+    return table

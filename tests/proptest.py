@@ -24,6 +24,15 @@ def sampled_from(options):
     return lambda rng: options[int(rng.integers(0, len(options)))]
 
 
+def booleans():
+    return lambda rng: bool(rng.integers(0, 2))
+
+
+def tuples(*elems):
+    """Draw one value from each strategy: ``tuples(integers(0,3), booleans())``."""
+    return lambda rng: tuple(e(rng) for e in elems)
+
+
 def lists(elem, min_size: int, max_size: int):
     def strat(rng):
         n = int(rng.integers(min_size, max_size + 1))

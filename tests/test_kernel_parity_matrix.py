@@ -1,0 +1,151 @@
+"""Exhaustive kernel-parity matrix: the Pallas kernel is bit-exact vs the
+``core.packing``/``core.correction``-validated ground truth for EVERY plan
+the enumerator emits — all schemes (naive/full/mr/mr+full), all operand
+widths (2/4/6/8 bit), non-default and ragged block/problem shapes.
+
+Three layers of assurance, replacing the old single-spec spot checks:
+
+1. every emitted plan: kernel == jnp ref, bit-for-bit, on a ragged shape
+   (the ref itself is validated against the exact integer matmul and the
+   DSP48 simulation elsewhere);
+2. exactness where the plan algebra promises it: every ``full`` plan equals
+   the mathematically exact integer matmul; every ``naive`` plan is biased
+   by at most −1 per extraction; every mr plan's error is bounded;
+3. block-shape sweep: representative plans per scheme across non-default
+   and ragged (M, K, N) grids, including blocks larger than the problem.
+
+Plus the plan-construction failure surface: requesting an (n_pairs, δ)
+combination that overflows the int32 accumulator (or a field) fails AT
+CONSTRUCTION with an error naming the violated budget — never deep in the
+kernel.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.packed_matmul import packed_matmul
+from repro.kernels.ref import CORRECTIONS, PackedDotSpec
+from repro.tuning import enumerate_specs
+
+RNG = np.random.default_rng(20)
+
+WIDTH_PAIRS = ((2, 2), (4, 4), (6, 6), (8, 8))
+ALL_SPECS = [s for a, w in WIDTH_PAIRS for s in enumerate_specs(a, w)]
+
+
+def _operands(m, k, n, spec):
+    x = RNG.integers(0, 1 << spec.bits_a, (m, k)).astype(np.int32)
+    w = RNG.integers(
+        -(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)
+    ).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+def _assert_parity(spec, shape, block):
+    m, k, n = shape
+    x, w = _operands(m, k, n, spec)
+    got = packed_matmul(x, w, spec=spec, block=block, interpret=True)
+    want = ref.ref_packed_matmul(x, w, spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    return np.asarray(got), x, w
+
+
+class TestEveryEmittedPlan:
+    """Acceptance gate: parity holds for every plan the enumerator emits."""
+
+    def test_enumerator_emits_plans_for_subbyte_widths(self):
+        for a_bits, w_bits in ((2, 2), (4, 4), (6, 6)):
+            assert enumerate_specs(a_bits, w_bits), (a_bits, w_bits)
+        # 8-bit operands admit no plan inside the int32 accumulator — the
+        # emptiness is itself the enumerator's (tested) answer
+        assert enumerate_specs(8, 8) == ()
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name())
+    def test_kernel_bit_equals_ground_truth(self, spec):
+        # ragged K exercises the zero-pad path; block bk = one chunk group
+        shape = (8, 2 * spec.chunk + 3, 16)
+        got, x, w = _assert_parity(spec, shape, (8, 16, spec.chunk))
+        exact = np.asarray(ref.ref_quantized_matmul(x, w))
+        err = got - exact
+        n_extractions = -(-shape[1] // spec.chunk)
+        if spec.correction == "full":
+            np.testing.assert_array_equal(got, exact)
+        elif spec.correction == "naive":
+            # the white-paper bias: at most -1 per extraction, never positive
+            assert err.max() <= 0 and err.min() >= -n_extractions
+        else:  # mr corrections: restored error is bounded per extraction by
+            # the low-field spill into the squeezed middle field
+            bound = n_extractions * (1 << spec.mr_bits)
+            assert np.abs(err).max() <= bound, spec.name()
+
+
+class TestBlockShapeMatrix:
+    """Scheme × block × ragged-problem grid for representative plans."""
+
+    REPRESENTATIVE = {
+        "naive": PackedDotSpec(4, 4, 11, 4, "naive"),
+        "full": PackedDotSpec(4, 4, 11, 4, "full"),
+        "mr": PackedDotSpec(4, 4, 10, 16, "mr", 3),
+        "mr+full": PackedDotSpec(4, 4, 10, 16, "mr+full", 3),
+    }
+
+    @pytest.mark.parametrize("scheme", CORRECTIONS)
+    @pytest.mark.parametrize(
+        "block", [(128, 128, 128), (32, 64, 128), (16, 16, 64)]
+    )
+    @pytest.mark.parametrize(
+        "shape", [(128, 128, 128), (96, 200, 72), (33, 130, 17)]
+    )
+    def test_parity_across_blocks_and_ragged_shapes(self, scheme, block, shape):
+        _assert_parity(self.REPRESENTATIVE[scheme], shape, block)
+
+    def test_block_larger_than_problem(self):
+        _assert_parity(self.REPRESENTATIVE["full"], (8, 24, 8), (128, 128, 128))
+
+    def test_bk_not_multiple_of_chunk_rejected(self):
+        spec = self.REPRESENTATIVE["mr"]  # chunk 32
+        x, w = _operands(8, 64, 8, spec)
+        with pytest.raises(ValueError, match="multiple of spec.chunk"):
+            packed_matmul(x, w, spec=spec, block=(8, 8, 48), interpret=True)
+
+
+class TestConstructionTimeBudgets:
+    """Satellite: overflowing (n_pairs, δ) combinations fail at plan
+    construction with errors naming the violated budget."""
+
+    def test_int32_accumulator_budget_named(self):
+        with pytest.raises(ValueError, match="int32 accumulator budget"):
+            PackedDotSpec(bits_a=4, bits_w=4, p=12, n_pairs=8)
+
+    def test_int32_budget_message_names_the_knobs(self):
+        with pytest.raises(ValueError, match=r"n_pairs \(=8\).*p \(=12\)"):
+            PackedDotSpec(bits_a=4, bits_w=4, p=12, n_pairs=8)
+
+    def test_middle_field_budget_named(self):
+        with pytest.raises(
+            ValueError, match="middle field.*p = 9.*mr correction"
+        ):
+            PackedDotSpec(bits_a=4, bits_w=4, p=9, n_pairs=4, correction="full")
+
+    def test_restored_middle_field_budget_named(self):
+        # even with the mr widening, n_pairs=64 at p=5 cannot hold the sum
+        with pytest.raises(ValueError, match="restored middle field"):
+            PackedDotSpec(4, 4, p=5, n_pairs=64, correction="mr", mr_bits=1)
+
+    def test_int8_has_no_legal_plan_and_says_why(self):
+        with pytest.raises(ValueError, match="int32 accumulator budget"):
+            PackedDotSpec(bits_a=8, bits_w=8, p=17, n_pairs=1, correction="full")
+
+    def test_mr_bits_consistency_enforced(self):
+        with pytest.raises(ValueError, match="mr_bits >= 1"):
+            PackedDotSpec(4, 4, 10, 4, correction="mr", mr_bits=0)
+        with pytest.raises(ValueError, match="only meaningful"):
+            PackedDotSpec(4, 4, 11, 4, correction="full", mr_bits=2)
+
+    def test_every_emitted_plan_constructs_and_names_itself(self):
+        names = [s.name() for s in ALL_SPECS]
+        assert len(set(names)) == len(names)  # enumeration has no duplicates
+        for spec, name in zip(ALL_SPECS, names):
+            assert f"n{spec.n_pairs}" in name and spec.correction in name

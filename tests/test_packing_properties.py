@@ -13,7 +13,7 @@ Invariants:
 import numpy as np
 import pytest
 
-from proptest import given, integers, sampled_from
+from proptest import booleans, given, integers, sampled_from, tuples
 
 from repro.core.addpack import (
     AddPackConfig,
@@ -23,10 +23,27 @@ from repro.core.addpack import (
 from repro.core.correction import (
     error_stats,
     exhaustive_operands,
+    mr_restore,
     outer_product_exact,
     simulate,
 )
-from repro.core.packing import intn_packing
+from repro.core.packing import (
+    extract_fields,
+    intn_packing,
+    multiply_packed,
+    pack_activations,
+    pack_weights,
+)
+from repro.tuning import enumerate_packing_configs
+
+# The enumerator's full emission over the sub-byte width grid — the property
+# tests below must hold for every config it is willing to emit.
+_WIDTH_PAIRS = ((2, 2), (3, 4), (4, 4), (6, 6))
+ENUMERATED = [
+    cfg for a, w in _WIDTH_PAIRS for cfg in enumerate_packing_configs(a, w)
+]
+ENUMERATED_NONNEG = [c for c in ENUMERATED if c.delta >= 0]
+ENUMERATED_OVERPACKED = [c for c in ENUMERATED if c.delta < 0]
 
 
 def _random_operands(cfg, rng, n=512):
@@ -126,3 +143,72 @@ def test_addpack_no_guard_modular_wce_is_one(seed):
     mod = np.minimum(diff, 512 - diff)  # modular lane distance
     assert mod.max() <= 1  # paper Table III: WCE = 1
     assert (mod[:, 0] == 0).all()  # lowest lane is always exact
+
+
+# ---- enumerator round-trips (tuning.plans → core.packing primitives) -----
+
+
+def test_enumerator_emits_overpacked_configs():
+    """The δ<0 family (§VI) is part of the emitted search space."""
+    assert ENUMERATED_NONNEG and ENUMERATED_OVERPACKED
+
+
+@given(seed=integers(0, 2**31), case=integers(0, 10**6))
+def test_roundtrip_exact_for_every_emitted_nonneg_config(seed, case):
+    """pack → one wide multiply → extract recovers the exact outer product
+    for EVERY δ≥0 config the enumerator emits (full correction, Eqn. 7).
+
+    Spelled with the raw primitives (pack_activations/pack_weights/
+    multiply_packed/extract_fields) rather than ``simulate`` so the
+    round-trip itself — not just the convenience wrapper — is the property.
+    """
+    cfg = ENUMERATED_NONNEG[case % len(ENUMERATED_NONNEG)]
+    rng = np.random.default_rng(seed)
+    a, w = _random_operands(cfg, rng, n=256)
+    assert pack_activations(cfg, a).shape == a.shape[:-1]
+    assert (pack_weights(cfg, w) < 0).any() or (w >= 0).all()
+    p = multiply_packed(cfg, a, w)
+    fields = extract_fields(cfg, p, round_half_up=True)
+    np.testing.assert_array_equal(fields, outer_product_exact(cfg, a, w))
+
+
+@given(seed=integers(0, 2**31), case=integers(0, 10**6))
+def test_mr_restore_bounds_error_for_every_emitted_overpacked_config(seed, case):
+    """For every δ<0 config emitted, restoring the corrupted MSBs from the
+    exactly-recomputed LSBs of the field above (Eqns. 8/9) bounds the
+    remaining error by 2^|δ| — the spill of the field *below*, which the
+    restore deliberately leaves (paper Table I: WCE 1/2/4 at δ −1/−2/−3)."""
+    cfg = ENUMERATED_OVERPACKED[case % len(ENUMERATED_OVERPACKED)]
+    rng = np.random.default_rng(seed)
+    a, w = _random_operands(cfg, rng, n=256)
+    exact = outer_product_exact(cfg, a, w)
+    restored = np.abs(simulate(cfg, a, w, scheme="mr") - exact)
+    assert restored.max() <= 2 ** (-cfg.delta)
+    # the bottom field has nothing below it: always exact after restore
+    bottom = int(np.argmin(cfg.r_offsets))
+    assert (restored[..., bottom] == 0).all()
+
+
+@given(
+    seed=integers(0, 2**31),
+    case=integers(0, 10**6),
+    half_up=booleans(),
+)
+def test_mr_restore_is_identity_for_nonneg_delta(seed, case, half_up):
+    """mr_restore touches nothing when fields don't overlap (δ ≥ 0)."""
+    cfg = ENUMERATED_NONNEG[case % len(ENUMERATED_NONNEG)]
+    rng = np.random.default_rng(seed)
+    a, w = _random_operands(cfg, rng, n=128)
+    fields = extract_fields(cfg, multiply_packed(cfg, a, w), round_half_up=half_up)
+    np.testing.assert_array_equal(mr_restore(cfg, fields, a, w), fields)
+
+
+@given(pair=tuples(integers(0, 3), integers(0, 2**31)))
+def test_emitted_configs_fit_dsp48_ports(pair):
+    """Everything the enumerator emits respects the 17/26/47-bit budgets."""
+    idx, _ = pair
+    for cfg in enumerate_packing_configs(*_WIDTH_PAIRS[idx]):
+        assert cfg.fits_dsp48()
+        if cfg.delta < 0:  # overlap never reaches past the adjacent field
+            width = cfg.a_widths[0] + cfg.w_widths[0]
+            assert 2 * (width + cfg.delta) >= width

@@ -296,3 +296,56 @@ def test_mixed_sampling_per_slot():
         [2, 3, 4], 5
     )
     assert len(eng.scheduler.requests[r_sampled].tokens) == 5
+
+
+# ---- determinism regression (per-slot PRNG invariant from PR 1) ----------
+
+
+class TestServingDeterminism:
+    """Same requests + seed must reproduce identical token streams — no
+    matter how admission interleaves them onto slots.  Guards the
+    (request id, position)-keyed PRNG invariant: a replayed request's draws
+    depend only on its own identity, never on co-resident slots."""
+
+    PROMPTS = [[7, 8, 9, 10], [11, 12], [13, 14, 15, 16, 17], [18, 19, 20]]
+    SAMPLING = SamplingParams(temperature=0.9, top_k=8, top_p=0.95)
+
+    def _run_batch(self, **kw):
+        eng = _engine(slots=kw.pop("slots", 2), seed=kw.pop("seed", 3), **kw)
+        return eng.generate(
+            [list(p) for p in self.PROMPTS], max_new=6, sampling=self.SAMPLING
+        )
+
+    def test_same_requests_same_seed_identical_streams(self):
+        assert self._run_batch() == self._run_batch()
+
+    def test_admission_interleaving_does_not_change_streams(self):
+        # A: all four submitted upfront, two slots -> two admission waves.
+        want = self._run_batch(slots=2)
+        # B: staggered submission while decode is mid-flight, four slots.
+        eng = _engine(slots=4, seed=3)
+        first = [eng.submit(list(p), max_new=6, sampling=self.SAMPLING)
+                 for p in self.PROMPTS[:2]]
+        eng.step()
+        eng.step()
+        later = [eng.submit(list(p), max_new=6, sampling=self.SAMPLING)
+                 for p in self.PROMPTS[2:]]
+        for _ in range(40):
+            if not (eng.active.any() or eng.scheduler.n_queued):
+                break
+            eng.step()
+        got = {r: list(eng.scheduler.requests[r].tokens)
+               for r in first + later}
+        assert got == want
+
+    def test_different_seed_changes_sampled_streams(self):
+        # sanity: the determinism above is not vacuous greedy behaviour
+        assert self._run_batch(seed=3) != self._run_batch(seed=4)
+
+    def test_greedy_streams_immune_to_slot_count(self):
+        greedy = SamplingParams()
+        a = _engine(slots=2).generate([list(p) for p in self.PROMPTS],
+                                      max_new=5, sampling=greedy)
+        b = _engine(slots=4).generate([list(p) for p in self.PROMPTS],
+                                      max_new=5, sampling=greedy)
+        assert a == b

@@ -1,0 +1,225 @@
+"""Packing-plan subsystem: enumeration legality, error scoring, budgeted
+selection, block autotuning and the serving-side plan routing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packed_linear import LinearSpec, apply_linear
+from repro.core.packed_params import (
+    DspTunedLeaf,
+    is_dsp_tuned_leaf,
+    iter_packable_weights,
+    quantize_for_serving,
+)
+from repro.kernels.ref import INT2_EXACT, INT4_EXACT, INT4_MR_OVERPACKED
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.serving import Engine, ServeConfig
+from repro.tuning import (
+    autotune_block,
+    candidate_blocks,
+    enumerate_specs,
+    min_exact_p,
+    plan_linear_layers,
+    rank_plans,
+    select_plan,
+    spec_error_stats,
+)
+
+
+class TestEnumeration:
+    def test_presets_are_rediscovered(self):
+        """The hand-derived presets are points in the searched space."""
+        assert INT4_EXACT in enumerate_specs(4, 4)
+        assert INT4_MR_OVERPACKED in enumerate_specs(4, 4)
+        assert INT2_EXACT in enumerate_specs(2, 2, n_pairs_choices=(32,))
+
+    def test_min_exact_p_is_minimal(self):
+        from repro.kernels.ref import PackedDotSpec
+
+        p = min_exact_p(4, 4, 4)
+        assert p == 11
+        PackedDotSpec(4, 4, p, 4, "full")  # constructs
+        with pytest.raises(ValueError):
+            PackedDotSpec(4, 4, p - 1, 4, "full")  # one bit tighter fails
+
+    def test_exact_schemes_carry_no_mr_bits(self):
+        for spec in enumerate_specs(4, 4):
+            if spec.correction in ("naive", "full"):
+                assert spec.mr_bits == 0 and spec.p == min_exact_p(
+                    4, 4, spec.n_pairs
+                )
+            else:
+                assert spec.mr_bits == min_exact_p(4, 4, spec.n_pairs) - spec.p
+
+    def test_six_bit_only_overpacked(self):
+        specs = enumerate_specs(6, 6)
+        assert specs and all(s.uses_mr for s in specs)
+
+
+class TestScoring:
+    def test_full_plans_score_zero_error(self):
+        for spec in enumerate_specs(4, 4, corrections=("full",)):
+            assert spec_error_stats(spec).mae == 0.0
+
+    def test_naive_plans_score_the_bias(self):
+        score = spec_error_stats(INT4_EXACT.__class__(4, 4, 11, 4, "naive"))
+        assert 0 < score.mae_per_extraction <= 1.0
+
+    def test_exhaustive_grid_used_when_small(self):
+        assert spec_error_stats(INT2_EXACT.__class__(2, 2, 5, 1, "full")).exhaustive
+        assert not spec_error_stats(INT4_MR_OVERPACKED).exhaustive
+
+    def test_rounding_never_hurts_mr(self):
+        from repro.kernels.ref import PackedDotSpec
+
+        mr = spec_error_stats(PackedDotSpec(4, 4, 10, 16, "mr", 3))
+        mrf = spec_error_stats(PackedDotSpec(4, 4, 10, 16, "mr+full", 3))
+        assert mrf.mae <= mr.mae
+
+
+class TestSelection:
+    def test_budget_filters(self):
+        """Budget 0 admits only PROVABLY exact plans — a sampled grid that
+        happened to observe zero error is not proof of exactness."""
+        exact_only = rank_plans(4, 4, error_budget=0.0)
+        assert exact_only and all(r.mae_per_extraction == 0 for r in exact_only)
+        assert all(r.spec.provably_exact for r in exact_only)
+        sampled_zero = [
+            r for r in rank_plans(4, 4, error_budget=0.5)
+            if r.mae == 0 and not r.spec.provably_exact and not r.exhaustive
+        ]
+        for r in sampled_zero:  # floored, so budget 0 cannot admit them
+            assert r.mae_per_extraction > 0
+
+    def test_default_budget_prefers_longer_chains(self):
+        best = select_plan(4, 4)
+        assert best.spec.chunk > INT4_EXACT.chunk  # non-default plan wins
+        assert best.mae_per_extraction <= 0.5
+
+    def test_every_ranked_plan_respects_budget(self):
+        for budget in (0.0, 0.1, 0.5):
+            for r in rank_plans(4, 4, error_budget=budget):
+                assert r.mae_per_extraction <= budget
+
+    def test_unsatisfiable_budget_raises_with_guidance(self):
+        with pytest.raises(ValueError, match="error budget"):
+            select_plan(6, 6, error_budget=0.0)
+
+    def test_report_json_roundtrips(self):
+        import json
+
+        r = select_plan(4, 4)
+        blob = json.loads(json.dumps(r.to_json()))
+        assert blob["plan"] == r.name and blob["correction"] == r.spec.correction
+
+
+class TestAutotune:
+    def test_blocks_filtered_to_spec_chunk(self):
+        for b in candidate_blocks(INT4_MR_OVERPACKED, 64, 256, 64):
+            assert b[2] % INT4_MR_OVERPACKED.chunk == 0
+
+    def test_sweep_times_and_sorts(self):
+        timings = autotune_block(
+            INT4_EXACT, (16, 64, 16),
+            blocks=[(16, 16, 32), (16, 16, 64)],
+            interpret=True, warmup=0, iters=1,
+        )
+        assert len(timings) == 2
+        assert timings[0].us_per_call <= timings[1].us_per_call
+
+    def test_rank_with_autotune_attaches_blocks(self):
+        specs = enumerate_specs(4, 4, corrections=("full",),
+                                n_pairs_choices=(2, 4))
+        ranked = rank_plans(4, 4, specs=specs, autotune=True,
+                            shape=(16, 64, 16), interpret=True)
+        assert all(r.block is not None and r.us_per_call is not None
+                   for r in ranked)
+
+
+CFG = dataclasses.replace(get_config("qwen1.5-110b", smoke=True),
+                          dtype="float32")
+PARAMS = T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+class TestServingIntegration:
+    def test_plan_table_covers_exactly_the_packable_weights(self):
+        table = plan_linear_layers(PARAMS)
+        assert set(table) == {p for p, _ in iter_packable_weights(PARAMS)}
+        assert table  # smoke config has packable layers
+
+    def test_quantize_for_serving_routes_plans(self):
+        table = plan_linear_layers(PARAMS)
+        tuned = quantize_for_serving(PARAMS, "dsp_tuned", plans=table)
+        leaves = [
+            (p, l) for p, l in _walk(tuned) if is_dsp_tuned_leaf(l)
+        ]
+        assert {p for p, _ in leaves} == set(table)
+        for p, leaf in leaves:
+            assert leaf.spec == table[p].spec
+            assert leaf.values.dtype == jnp.int8
+
+    def test_tuned_leaf_is_jit_transparent(self):
+        leaf = DspTunedLeaf(
+            values=jnp.ones((32, 8), jnp.int8),
+            scale=jnp.ones((1, 8), jnp.float32),
+            spec=INT4_EXACT,
+        )
+        y = jax.jit(lambda p, x: apply_linear(p, x, LinearSpec("dsp_tuned")))(
+            {"w": leaf}, jnp.ones((4, 32), jnp.float32)
+        )
+        assert y.shape == (4, 8)
+
+    def test_tuned_apply_matches_per_call_dsp_packed(self):
+        from repro.core.quantize import quantize_signed
+
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(rng.standard_normal((64, 48)).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal((5, 64)).astype(np.float32))
+        spec = INT4_MR_OVERPACKED
+        wq = quantize_signed(w, bits=4, axis=0)
+        leaf = DspTunedLeaf(wq.values.astype(jnp.int8), wq.scale, spec)
+        tuned = apply_linear({"w": leaf}, x, LinearSpec("dsp_tuned"))
+        percall = apply_linear(
+            {"w": w}, x, LinearSpec("dsp_packed", dsp_spec=spec)
+        )
+        np.testing.assert_allclose(
+            np.asarray(tuned), np.asarray(percall), atol=1e-4
+        )
+
+    def test_engine_runs_tuned_plans_end_to_end(self):
+        eng = Engine(CFG, PARAMS, ServeConfig(
+            n_slots=2, max_len=32, prefill_chunk=4, quant_mode="dsp_tuned",
+        ))
+        assert eng.plan_table
+        assert any(r.spec != INT4_EXACT for r in eng.plan_table.values())
+        out = eng.generate([[5, 6, 7], [8, 9]], max_new=4)
+        assert all(len(t) == 4 for t in out.values())
+
+    def test_engine_budget_zero_serves_exact_plans(self):
+        eng = Engine(CFG, PARAMS, ServeConfig(
+            n_slots=2, max_len=32, prefill_chunk=4, quant_mode="dsp_tuned",
+            error_budget=0.0,
+        ))
+        assert all(r.mae_per_extraction == 0 for r in eng.plan_table.values())
+        # exact packed arithmetic == the plain quantized path: greedy tokens
+        # match the dsp_packed engine with the exact preset
+        ref_eng = Engine(CFG, PARAMS, ServeConfig(
+            n_slots=2, max_len=32, prefill_chunk=4, quant_mode="dsp_packed",
+        ))
+        prompts = [[5, 6, 7], [8, 9]]
+        assert eng.generate(prompts, max_new=4) == ref_eng.generate(
+            prompts, max_new=4
+        )
+
+
+def _walk(tree, path=""):
+    if isinstance(tree, dict) and not is_dsp_tuned_leaf(tree):
+        for k, v in tree.items():
+            yield from _walk(v, f"{path}/{k}")
+    else:
+        yield path, tree
