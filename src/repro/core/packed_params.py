@@ -15,6 +15,11 @@ a :class:`DspTunedLeaf` — a registered pytree node that carries the plan
 (spec + block) as static aux data, so jitted serving programs specialize on
 the plan without retracing per call.  Decode then runs the paper's packed
 arithmetic straight off the stored integers, no per-step re-quantization.
+Plans may be multi-DSP column-packed (``spec.n_columns > 1``), which is
+what makes ``ServeConfig.plan_bits=(8, 8)`` servable: 8-bit operands have
+no single-word plan inside int32, but a column plan spreads each dot
+product across several packed words (weights still store one int8 per
+value — the column slicing happens on the activations inside the kernel).
 
 Norms, biases, embeddings and 1-D leaves stay bf16 (gather tables and
 vector ops gain nothing from nibble packing).

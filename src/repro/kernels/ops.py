@@ -95,7 +95,10 @@ def dsp_tuned_matmul_f32(
     quantized ONCE at engine build (``packed_params.quantize_for_serving``
     with mode ``dsp_tuned``) onto ``spec``'s signed grid, so every decode
     step only quantizes the activations and runs the packed integer path —
-    no per-call weight re-quantization.
+    no per-call weight re-quantization.  Multi-DSP column plans
+    (``spec.n_columns > 1``, e.g. every a8w8 plan) need no special casing
+    here: activations quantize to the full ``spec.bits_a`` grid and the
+    kernel slices them into column streams internally.
     """
     xq = quantize_unsigned(x, bits=spec.bits_a, axis=-1)
     wv = w_values.astype(jnp.int32)

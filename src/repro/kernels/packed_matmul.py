@@ -9,8 +9,14 @@ dot-product contribution lands in the middle bit field), halving multiply
 count for sub-8-bit operands.
 
 The kernel dispatches ANY legal :class:`~repro.kernels.ref.PackedDotSpec`
-(arbitrary operand widths, n_pairs counts and correction schemes — the
-plans the ``repro.tuning`` enumerator emits), not just the int4 presets.
+(arbitrary operand widths, n_pairs counts, correction schemes and multi-DSP
+column counts — the plans the ``repro.tuning`` enumerator emits), not just
+the int4 presets.  ``spec.n_columns > 1`` spreads one dot product across
+several packed int32 words: each activation bit-slice drives its own
+packed-word stream against the shared packed weights, fields are extracted
+per column and recombined by shifted int32 summation (the wide-datapath
+related work's column decomposition) — this is what lifts the int32
+accumulator ceiling to exact a8w8 / a8w4 plans.
 Extraction semantics live in ``ref.extract_accumulated_field``, shared with
 the jnp oracle, so kernel and reference are bit-identical by construction.
 
@@ -42,7 +48,7 @@ __all__ = ["packed_matmul", "DEFAULT_BLOCK"]
 DEFAULT_BLOCK = (128, 128, 128)  # (bm, bn, bk) — MXU/VPU aligned
 
 
-def _kernel(x_ref, w_ref, out_ref, *, spec: PackedDotSpec, bk: int):
+def _kernel(x_ref, w_ref, out_ref, *, spec: PackedDotSpec):
     """One (bm, bk)×(bk, bn) step; accumulates into the revisited out block."""
     k_step = pl.program_id(2)
 
@@ -52,32 +58,10 @@ def _kernel(x_ref, w_ref, out_ref, *, spec: PackedDotSpec, bk: int):
 
     x = x_ref[...].astype(jnp.int32)  # (bm, bk) unsigned payload
     w = w_ref[...].astype(jnp.int32)  # (bk, bn) signed payload
-    bm = x.shape[0]
-    bn = w.shape[1]
-
-    # Pair along K: one packed word per two K elements.
-    xa = x.reshape(bm, bk // 2, 2)
-    ws = w.reshape(bk // 2, 2, bn)
-    a_words = xa[:, :, 0] + (xa[:, :, 1] << spec.p)  # (bm, bk//2)
-    w_words = ws[:, 1, :] + (ws[:, 0, :] << spec.p)  # (bk//2, bn)
-
-    acc = jnp.zeros((bm, bn), dtype=jnp.int32)
-    for c in range(bk // spec.chunk):  # unrolled: bk/chunk is small+static
-        sl = slice(c * spec.n_pairs, (c + 1) * spec.n_pairs)
-        # ONE wide multiply-accumulate per pair (the DSP op).
-        partial = jax.lax.dot_general(
-            a_words[:, sl],
-            w_words[sl, :],
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        contam = (
-            ref.contamination_term(xa[:, sl], ws[sl], spec)
-            if spec.uses_mr else None
-        )
-        acc = acc + ref.extract_accumulated_field(partial, spec, contam)
-
-    out_ref[...] += acc
+    # The whole pack → chunk-batched wide multiply → extract → column
+    # recombination pipeline is ref.packed_tile_matmul, shared VERBATIM
+    # with the jnp reference — kernel == ref by construction.
+    out_ref[...] += ref.packed_tile_matmul(x, w, spec)
 
 
 def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -121,7 +105,7 @@ def packed_matmul(
 
     grid = (mp // bm, np_ // bn, kp // bk)
     out = pl.pallas_call(
-        functools.partial(_kernel, spec=spec, bk=bk),
+        functools.partial(_kernel, spec=spec),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

@@ -8,7 +8,11 @@ Two compute paths (see DESIGN.md §2):
   dot-product contribution in the middle bit field (the dot-product variant
   of the paper's Eqn. 4: the outer-product cross terms land in the low/high
   fields).  ``n_pairs`` words are accumulated before the field is extracted,
-  mirroring the paper's ``2**delta`` accumulation budget.
+  mirroring the paper's ``2**delta`` accumulation budget.  Multi-DSP
+  *column* packing (``PackedDotSpec.n_columns``, the wide-datapath related
+  work's decomposition) splits the activation into unsigned bit-slices, one
+  packed-word stream per slice, and recombines the extracted dot fields by
+  shifted summation — lifting the int32 ceiling to 8-bit operands.
 
 * packed-storage int4 matmul — the production path: weights live in HBM as
   two nibbles per byte (the *memory* translation of packing density), are
@@ -37,6 +41,9 @@ __all__ = [
     "extract_accumulated_field",
     "contamination_mask",
     "contamination_term",
+    "contamination_terms",
+    "slice_column",
+    "packed_tile_matmul",
     "ref_packed_matmul",
     "ref_quantized_matmul",
     "pack_int4_weights",
@@ -64,6 +71,19 @@ class PackedDotSpec:
     ``correction`` — one of :data:`CORRECTIONS`.
     ``mr_bits``  — overlap bits restored in the ``mr``/``mr+full`` modes
                    (how far below the exact spacing ``p`` was squeezed).
+    ``n_columns`` — multi-DSP column packing (the wide-datapath related
+                   work's column decomposition): the activation's ``bits_a``
+                   bits are split into ``n_columns`` unsigned bit-slices of
+                   :attr:`col_bits_a` bits each, every slice runs its own
+                   packed-word stream ("column") against the SHARED packed
+                   weights, and the per-column extracted dot fields are
+                   recombined as ``Σ_j field_j << (j·col_bits_a)``.  All
+                   legality budgets below then apply PER COLUMN, which is
+                   what lifts the int32 ceiling: widths with no
+                   single-column plan (8-bit operands) become exactly
+                   packable by spreading one dot product across several
+                   int32 words at the cost of ``n_columns`` multiplies per
+                   packed word position.
     """
 
     bits_a: int = 4
@@ -72,6 +92,7 @@ class PackedDotSpec:
     n_pairs: int = 4
     correction: str = "full"
     mr_bits: int = 0
+    n_columns: int = 1
 
     def __post_init__(self) -> None:
         if self.correction not in CORRECTIONS:
@@ -85,6 +106,23 @@ class PackedDotSpec:
             )
         if self.n_pairs < 1 or self.p < 1:
             raise ValueError(f"n_pairs={self.n_pairs} and p={self.p} must be >= 1")
+        if self.n_columns < 1 or self.n_columns > self.bits_a:
+            raise ValueError(
+                f"n_columns={self.n_columns} must be in [1, bits_a="
+                f"{self.bits_a}]: every column carries at least one "
+                "activation bit"
+            )
+        if (self.n_columns - 1) * self.col_bits_a >= self.bits_a:
+            # e.g. 4 columns of ceil(6/4)=2-bit slices: the 4th slice is
+            # provably zero — the same plan with 3 columns is strictly
+            # cheaper, so the wasteful spelling is rejected outright
+            canonical = -(-self.bits_a // self.col_bits_a)
+            raise ValueError(
+                f"n_columns={self.n_columns} leaves the last column with no "
+                f"activation bits ({self.col_bits_a}-bit slices cover "
+                f"bits_a={self.bits_a} with {canonical} columns); use "
+                f"n_columns={canonical}"
+            )
         if self.uses_mr and self.mr_bits < 1:
             raise ValueError(
                 f"correction {self.correction!r} restores overlapped MSBs and "
@@ -95,21 +133,25 @@ class PackedDotSpec:
                 f"mr_bits={self.mr_bits} is only meaningful with an mr "
                 f"correction, not {self.correction!r}"
             )
-        # int32 budget: |packed partial sum| must stay below 2**31.  The three
-        # terms are the high / middle / low result fields of the packed word
-        # after accumulating ``n_pairs`` products.
-        max_a = (1 << self.bits_a) - 1
+        # int32 budget: |packed partial sum| must stay below 2**31, PER
+        # COLUMN — each column only ever sees a ``col_bits_a``-bit slice of
+        # the activation.  The three terms are the high / middle / low result
+        # fields of one column's packed word after accumulating ``n_pairs``
+        # products.
+        max_a = (1 << self.col_bits_a) - 1
         max_w = 1 << (self.bits_w - 1)
         top = self.n_pairs * max_a * max_w * (1 << (2 * self.p))
         mid = self.n_pairs * 2 * max_a * max_w * (1 << self.p)
         low = self.n_pairs * max_a * max_w
         total = top + mid + low
         if total >= 1 << 31:
+            per_col = " per column" if self.n_columns > 1 else ""
             raise ValueError(
                 f"{self._describe()} overflows the int32 accumulator budget: "
-                f"the accumulated packed sum spans {total.bit_length()} bits "
-                f"but the int32 accumulator provides 31 value bits; reduce "
-                f"n_pairs (={self.n_pairs}) or the field spacing p (={self.p})"
+                f"the accumulated packed sum spans {total.bit_length()} bits"
+                f"{per_col} but the int32 accumulator provides 31 value bits; "
+                f"reduce n_pairs (={self.n_pairs}), the field spacing p "
+                f"(={self.p}), or raise n_columns (={self.n_columns})"
             )
         # The accumulated middle (dot-product) field must fit the bits the
         # extraction reads back: ``p`` for exact-spacing schemes,
@@ -132,9 +174,10 @@ class PackedDotSpec:
             )
 
     def _describe(self) -> str:
+        cols = f", n_columns={self.n_columns}" if self.n_columns > 1 else ""
         return (
             f"PackedDotSpec(a{self.bits_a}w{self.bits_w}, p={self.p}, "
-            f"n_pairs={self.n_pairs}, {self.correction})"
+            f"n_pairs={self.n_pairs}, {self.correction}{cols})"
         )
 
     @property
@@ -147,8 +190,18 @@ class PackedDotSpec:
 
     @property
     def chunk(self) -> int:
-        """K elements consumed per extraction."""
+        """K elements consumed per extraction group (all columns together)."""
         return 2 * self.n_pairs
+
+    @property
+    def col_bits_a(self) -> int:
+        """Activation bits per column slice (top slice may carry fewer)."""
+        return -(-self.bits_a // self.n_columns)
+
+    def column_shift(self, j: int) -> int:
+        """Bit offset of column ``j``'s slice in the full activation — and
+        therefore the recombination shift of its extracted dot field."""
+        return j * self.col_bits_a
 
     @property
     def extract_width(self) -> int:
@@ -156,8 +209,9 @@ class PackedDotSpec:
 
     @property
     def delta(self) -> int:
-        """Per-product padding in the paper's notation: spacing − result width."""
-        return self.p - (self.bits_a + self.bits_w)
+        """Per-product padding in the paper's notation: spacing − result
+        width (per column: a column's products are col_bits_a × bits_w)."""
+        return self.p - (self.col_bits_a + self.bits_w)
 
     @property
     def provably_exact(self) -> bool:
@@ -168,25 +222,33 @@ class PackedDotSpec:
         is exact iff additionally the accumulated low field stays below
         ``2**(p-1)`` — then its spill into the squeezed middle field is
         fully absorbed by the rounding while the high-field contamination
-        is subtracted exactly.  The biased schemes are never exact."""
+        is subtracted exactly.  The biased schemes are never exact.  Column
+        recombination preserves exactness: the slice identity
+        ``a = Σ_j a_j · 2^(j·col_bits_a)`` is exact and the dot product is
+        linear in the activation, so the recombined sum is exact whenever
+        every column's extraction is."""
         if self.correction == "full":
             return True
         if self.correction == "mr+full":
-            max_a = (1 << self.bits_a) - 1
+            max_a = (1 << self.col_bits_a) - 1
             max_w = 1 << (self.bits_w - 1)
             return self.n_pairs * max_a * max_w < 1 << (self.p - 1)
         return False
 
     def name(self) -> str:
-        """Stable human-readable plan id, e.g. ``a4w4-p10-n16-mr+full``."""
+        """Stable human-readable plan id, e.g. ``a4w4-p10-n16-mr+full`` or
+        ``a8w8-p11-n1-full-c4`` for a column-packed plan."""
+        cols = f"-c{self.n_columns}" if self.n_columns > 1 else ""
         return (
             f"a{self.bits_a}w{self.bits_w}-p{self.p}-n{self.n_pairs}"
-            f"-{self.correction}"
+            f"-{self.correction}{cols}"
         )
 
     def density_vs_int8(self) -> float:
-        """Multiplies saved vs one-multiply-per-product (2 products/mult)."""
-        return 2.0
+        """Multiplies saved vs one-multiply-per-product: each packed word
+        computes 2 products, but every pair position costs ``n_columns``
+        words."""
+        return 2.0 / self.n_columns
 
 
 # Optimal 32-bit-budget presets (derived in DESIGN.md §2 / EXPERIMENTS §Perf).
@@ -235,6 +297,23 @@ def contamination_term(xa_chunk: jax.Array, ws_chunk: jax.Array,
     ) & mask
 
 
+def contamination_terms(xa: jax.Array, ws: jax.Array,
+                        spec: PackedDotSpec) -> jax.Array:
+    """Chunk-batched :func:`contamination_term`: every extraction group's
+    contamination in ONE masked dot_general.
+
+    ``xa``: (m, n_chunks, n_pairs, 2); ``ws``: (n_chunks, n_pairs, 2, n);
+    returns (n_chunks, m, n).
+    """
+    mask = jnp.int32(contamination_mask(spec))
+    return jax.lax.dot_general(
+        xa[..., 1] & mask,        # (m, n_chunks, n_pairs)
+        ws[..., 0, :] & mask,     # (n_chunks, n_pairs, n)
+        (((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.int32,
+    ) & mask
+
+
 def extract_accumulated_field(
     partial: jax.Array, spec: PackedDotSpec, contam: jax.Array | None = None
 ) -> jax.Array:
@@ -263,15 +342,12 @@ def extract_accumulated_field(
     return e
 
 
-def _pack_words(x_u: jax.Array, w_s: jax.Array, spec: PackedDotSpec):
-    """Pair along K: A = a_even + a_odd<<p ; W = w_odd + w_even<<p."""
-    m, k = x_u.shape
-    _, n = w_s.shape
-    xa = x_u.astype(jnp.int32).reshape(m, k // 2, 2)
-    ws = w_s.astype(jnp.int32).reshape(k // 2, 2, n)
-    a_words = xa[:, :, 0] + (xa[:, :, 1] << spec.p)
-    w_words = ws[:, 1, :] + (ws[:, 0, :] << spec.p)
-    return a_words, w_words
+def slice_column(x_u: jax.Array, spec: PackedDotSpec, j: int) -> jax.Array:
+    """Column ``j``'s unsigned activation bit-slice (col_bits_a bits)."""
+    if spec.n_columns == 1:
+        return x_u.astype(jnp.int32)
+    mask = jnp.int32((1 << spec.col_bits_a) - 1)
+    return (x_u.astype(jnp.int32) >> spec.column_shift(j)) & mask
 
 
 def _pad_k(x_u: jax.Array, w_s: jax.Array, mult: int):
@@ -288,6 +364,54 @@ def _pad_k(x_u: jax.Array, w_s: jax.Array, mult: int):
     return x_u, w_s
 
 
+def packed_tile_matmul(x_u: jax.Array, w_s: jax.Array,
+                       spec: PackedDotSpec) -> jax.Array:
+    """The ENTIRE packed-dot tile compute, shared verbatim by the jnp
+    reference and the Pallas kernel body (so the two are bit-identical by
+    construction): (m, k) unsigned × (k, n) signed → (m, n) int32, with
+    ``k`` a multiple of ``spec.chunk``.
+
+    Per column: pack the activation slice's pair words, contract ALL
+    extraction groups in one chunk-batched dot_general (n_pairs wide
+    multiply-accumulates per packed word — no per-chunk python unroll, so
+    n_pairs=1 column plans like a8w8 don't explode into hundreds of rank-1
+    dots), extract every group's middle field, sum the fields (int32
+    addition is associative mod 2**32) and recombine at the slice offset.
+    Multi-column plans reuse the SAME packed weight words for every stream.
+    """
+    m, k = x_u.shape
+    n = w_s.shape[1]
+    n_chunks = k // spec.chunk
+    ws = w_s.astype(jnp.int32).reshape(k // 2, 2, n)
+    w_words = (ws[:, 1, :] + (ws[:, 0, :] << spec.p)).reshape(
+        n_chunks, spec.n_pairs, n
+    )
+    wsc = ws.reshape(n_chunks, spec.n_pairs, 2, n)
+    acc = jnp.zeros((m, n), dtype=jnp.int32)
+    for j in range(spec.n_columns):
+        xa = slice_column(x_u, spec, j).reshape(m, k // 2, 2)
+        a_words = (xa[:, :, 0] + (xa[:, :, 1] << spec.p)).reshape(
+            m, n_chunks, spec.n_pairs
+        )
+        partial = jax.lax.dot_general(   # (n_chunks, m, n), batched chunks
+            a_words,
+            w_words,
+            (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.int32,
+        )
+        contam = (
+            contamination_terms(
+                xa.reshape(m, n_chunks, spec.n_pairs, 2), wsc, spec
+            )
+            if spec.uses_mr else None
+        )
+        field = extract_accumulated_field(partial, spec, contam)
+        col = jnp.sum(field, axis=0)
+        shift = spec.column_shift(j)
+        acc = acc + (col << shift if shift else col)
+    return acc
+
+
 def ref_packed_matmul(
     x_u: jax.Array, w_s: jax.Array, spec: PackedDotSpec = INT4_EXACT
 ) -> jax.Array:
@@ -296,25 +420,16 @@ def ref_packed_matmul(
     ``x_u``: (M, K) unsigned ints (0..2^bits_a-1) stored in any int dtype.
     ``w_s``: (K, N) signed ints.  Ragged K is zero-padded to ``spec.chunk``.
     Returns int32 (M, N).
+
+    Multi-column plans (``spec.n_columns > 1``) run one packed-word stream
+    per activation bit-slice against the SAME packed weights and recombine
+    each extracted dot field shifted by its slice offset — all in wrapping
+    int32 arithmetic, so kernel/ref/simulator stay bit-identical even where
+    a (caller-side) output overflow wraps.  The compute itself lives in
+    :func:`packed_tile_matmul`, shared with the kernel body.
     """
     x_u, w_s = _pad_k(x_u, w_s, spec.chunk)
-    m, k = x_u.shape
-    a_words, w_words = _pack_words(x_u, w_s, spec)
-    n = w_s.shape[1]
-    acc = jnp.zeros((m, n), dtype=jnp.int32)
-    xa = x_u.astype(jnp.int32).reshape(m, k // 2, 2)
-    ws = w_s.astype(jnp.int32).reshape(k // 2, 2, n)
-    for c in range(k // spec.chunk):
-        sl = slice(c * spec.n_pairs, (c + 1) * spec.n_pairs)
-        partial = jax.lax.dot_general(
-            a_words[:, sl],
-            w_words[sl, :],
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        contam = contamination_term(xa[:, sl], ws[sl], spec) if spec.uses_mr else None
-        acc = acc + extract_accumulated_field(partial, spec, contam)
-    return acc
+    return packed_tile_matmul(x_u, w_s, spec)
 
 
 def ref_quantized_matmul(x_u: jax.Array, w_s: jax.Array) -> jax.Array:

@@ -32,6 +32,20 @@ def main() -> None:
                              "dsp_tuned"])
     ap.add_argument("--error-budget", type=float, default=0.5,
                     help="dsp_tuned: max MAE per extraction a plan may incur")
+    def _plan_bits(arg: str) -> tuple[int, int]:
+        try:
+            a_bits, w_bits = (int(b) for b in arg.split(","))
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"--plan-bits wants two comma-separated ints 'A,W' "
+                f"(e.g. 8,8), got {arg!r}"
+            )
+        return a_bits, w_bits
+
+    ap.add_argument("--plan-bits", type=_plan_bits, default=(4, 4),
+                    metavar="A,W",
+                    help="dsp_tuned: operand widths to plan for, e.g. 8,8 "
+                         "(8-bit widths serve multi-DSP column-packed plans)")
     ap.add_argument("--autotune-plans", action="store_true",
                     help="dsp_tuned: wall-clock block-size sweep per layer "
                          "shape (slower engine build, measured ranking)")
@@ -48,6 +62,7 @@ def main() -> None:
         prefill_chunk=args.prefill_chunk, quant_mode=args.quant,
         seed=args.seed, error_budget=args.error_budget,
         autotune_plans=args.autotune_plans,
+        plan_bits=args.plan_bits,
     ))
     if engine.plan_table:
         plans = {r.name for r in engine.plan_table.values()}

@@ -25,11 +25,14 @@ DSP-packing (decode is weight-bandwidth-bound).  ``int8``/``dsp_packed``
 select the corresponding per-call arithmetic paths.
 
 ``quant_mode = "dsp_tuned"`` goes further: the ``repro.tuning`` planner
-enumerates every legal packing plan for ``plan_bits``, scores each by
-simulated error, and picks per layer the fastest plan whose MAE fits
-``error_budget``; weights are quantized once onto each layer's plan and
-decode runs per-layer pair-packed arithmetic.  The chosen table is exposed
-as ``engine.plan_table`` (path → ``tuning.PlanReport``).
+enumerates every legal packing plan for ``plan_bits`` — including
+multi-DSP *column-packed* plans (``n_columns > 1``), which spread one dot
+product across several packed int32 words and are the only legal plans for
+``plan_bits=(8, 8)`` — scores each by simulated error, and picks per layer
+the fastest plan whose MAE fits ``error_budget``; weights are quantized
+once onto each layer's plan and decode runs per-layer pair-packed
+arithmetic.  The chosen table is exposed as ``engine.plan_table`` (path →
+``tuning.PlanReport``).
 
 Termination goes through a single code path (``_finish_slot``): EOS,
 per-request ``max_new`` and the cache-capacity bound all free the slot,

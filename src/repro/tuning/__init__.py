@@ -11,12 +11,13 @@ and ``tuner`` (budgeted selection, per-layer tables).
 from .autotune import BlockTiming, autotune_block, candidate_blocks, default_timer
 from .plans import (
     DEFAULT_MAX_MR_BITS,
+    DEFAULT_N_COLUMNS,
     DEFAULT_N_PAIRS,
     enumerate_packing_configs,
     enumerate_specs,
     min_exact_p,
 )
-from .score import SpecScore, config_error_stats, spec_error_stats
+from .score import SpecScore, config_error_stats, plan_cost_proxy, spec_error_stats
 from .tuner import (
     DEFAULT_ERROR_BUDGET,
     PlanReport,
@@ -31,12 +32,14 @@ __all__ = [
     "candidate_blocks",
     "default_timer",
     "DEFAULT_MAX_MR_BITS",
+    "DEFAULT_N_COLUMNS",
     "DEFAULT_N_PAIRS",
     "enumerate_packing_configs",
     "enumerate_specs",
     "min_exact_p",
     "SpecScore",
     "config_error_stats",
+    "plan_cost_proxy",
     "spec_error_stats",
     "DEFAULT_ERROR_BUDGET",
     "PlanReport",

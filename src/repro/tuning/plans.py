@@ -11,7 +11,11 @@ materializes that family for both compute models in the repo:
   is emitted per accumulation count (wider spacing only wastes bits: the
   error profile is independent of ``p`` once the middle field fits).  For
   the mr schemes every overpacked spacing down to ``max_mr_bits`` below the
-  exact minimum is emitted — each trades error for packing density.
+  exact minimum is emitted — each trades error for packing density.  The
+  multi-DSP *column* axis (``n_columns``) is searched on top: spreading one
+  dot product across several packed words lifts the per-word int32 budget,
+  so 8-bit operands — which admit NO single-word plan — get provably exact
+  plans, at a cost the scorer charges per extra word.
 
 * :func:`enumerate_packing_configs` — every legal :class:`PackingConfig`
   under the DSP48E2 port budgets (the hardware-truth simulation), over a
@@ -31,20 +35,29 @@ __all__ = [
     "enumerate_packing_configs",
     "DEFAULT_N_PAIRS",
     "DEFAULT_MAX_MR_BITS",
+    "DEFAULT_N_COLUMNS",
 ]
 
 DEFAULT_N_PAIRS = (1, 2, 4, 8, 16, 32)
 DEFAULT_MAX_MR_BITS = 4
+# Multi-DSP column counts searched per plan (the wide-datapath related
+# work's missing axis): 1 = classic single-word packing; >1 spreads one dot
+# product across several packed int32 words, lifting the per-word budget.
+DEFAULT_N_COLUMNS = (1, 2, 4)
 
 
-def min_exact_p(a_bits: int, w_bits: int, n_pairs: int) -> int:
+def min_exact_p(a_bits: int, w_bits: int, n_pairs: int,
+                n_columns: int = 1) -> int:
     """Smallest spacing whose accumulated middle field never overflows.
 
     The middle field holds ``Σ (a_even·w_even + a_odd·w_odd)`` over
     ``n_pairs`` packed words; its magnitude is bounded by
     ``n_pairs · 2 · a_max · |w_min|`` and the signed field needs one more
-    bit than that magnitude."""
-    max_a = (1 << a_bits) - 1
+    bit than that magnitude.  With column packing each word only carries a
+    ``ceil(a_bits / n_columns)``-bit activation slice, so ``a_max`` (and
+    hence the minimal spacing) shrinks per column."""
+    col_bits_a = -(-a_bits // n_columns)
+    max_a = (1 << col_bits_a) - 1
     max_w = 1 << (w_bits - 1)
     return (n_pairs * 2 * max_a * max_w).bit_length() + 1
 
@@ -56,39 +69,57 @@ def enumerate_specs(
     n_pairs_choices: tuple[int, ...] = DEFAULT_N_PAIRS,
     max_mr_bits: int = DEFAULT_MAX_MR_BITS,
     min_p: int = 2,
+    n_columns_choices: tuple[int, ...] = DEFAULT_N_COLUMNS,
 ) -> tuple[PackedDotSpec, ...]:
     """Every legal pair-packed plan for ``(a_bits, w_bits)``.
 
     Legality is delegated to ``PackedDotSpec.__post_init__`` (the int32
-    accumulator and field budgets), so "the enumerator emits it" and "the
-    kernel accepts it" are the same predicate by construction.  The result
-    may be empty — e.g. 8-bit operands admit no exact plan inside int32 —
-    and callers are expected to handle that.
+    accumulator and field budgets, applied per column), so "the enumerator
+    emits it" and "the kernel accepts it" are the same predicate by
+    construction.  Column counts beyond the operand width, or yielding the
+    same slice width as a smaller count, are skipped (identical plans).
+    The result may still be empty for exotic width/choice combinations —
+    callers are expected to handle that — but the column axis means every
+    width pair up to a8w8 now has at least one provably exact plan.
     """
     specs: list[PackedDotSpec] = []
-    for n_pairs in n_pairs_choices:
-        p_exact = min_exact_p(a_bits, w_bits, n_pairs)
-        for correction in corrections:
-            if correction in ("naive", "full"):
-                try:
-                    specs.append(
-                        PackedDotSpec(a_bits, w_bits, p_exact, n_pairs, correction)
-                    )
-                except ValueError:
-                    pass  # exceeds the int32 budget at this n_pairs
-            else:  # mr / mr+full: squeeze the spacing below the exact minimum
-                for mr_bits in range(1, max_mr_bits + 1):
-                    p = p_exact - mr_bits
-                    if p < min_p:
-                        continue
+    seen_slice_widths: set[int] = set()
+    for n_requested in n_columns_choices:
+        if n_requested > a_bits:
+            continue
+        col_bits_a = -(-a_bits // n_requested)
+        if col_bits_a in seen_slice_widths:
+            continue  # same slice width: same plan, regardless of count
+        seen_slice_widths.add(col_bits_a)
+        # canonical count for this slice width — e.g. requesting 4 columns
+        # of a 6-bit activation means 2-bit slices, which only need THREE
+        # columns (the spec constructor rejects trailing-empty columns)
+        n_columns = -(-a_bits // col_bits_a)
+        for n_pairs in n_pairs_choices:
+            p_exact = min_exact_p(a_bits, w_bits, n_pairs, n_columns)
+            for correction in corrections:
+                if correction in ("naive", "full"):
                     try:
                         specs.append(
-                            PackedDotSpec(
-                                a_bits, w_bits, p, n_pairs, correction, mr_bits
-                            )
+                            PackedDotSpec(a_bits, w_bits, p_exact, n_pairs,
+                                          correction, n_columns=n_columns)
                         )
                     except ValueError:
-                        pass
+                        pass  # exceeds the int32 budget at this n_pairs
+                else:  # mr / mr+full: squeeze spacing below the exact minimum
+                    for mr_bits in range(1, max_mr_bits + 1):
+                        p = p_exact - mr_bits
+                        if p < min_p:
+                            continue
+                        try:
+                            specs.append(
+                                PackedDotSpec(
+                                    a_bits, w_bits, p, n_pairs, correction,
+                                    mr_bits, n_columns=n_columns,
+                                )
+                            )
+                        except ValueError:
+                            pass
     return tuple(specs)
 
 

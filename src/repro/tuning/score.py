@@ -35,12 +35,29 @@ __all__ = [
     "spec_error_stats",
     "spec_operand_grid",
     "config_error_stats",
+    "plan_cost_proxy",
 ]
 
 # Exhaustive matmul probes are capped at this many rows/columns; beyond it
 # the operand grid is sampled (the paper's exhaustive tables stop at 4-bit
 # pairs for the same reason: 16^4 is tractable, 16^8 is not).
 EXHAUSTIVE_LIMIT = 4096
+
+
+def plan_cost_proxy(spec: PackedDotSpec) -> float:
+    """Relative int32 multiply-accumulate work per K element (lower=faster).
+
+    One packed multiply per ``chunk`` K elements — times ``n_columns``,
+    because a multi-DSP column plan spends one packed word PER COLUMN per
+    pair position (more words ≈ more DSPs on the FPGA, more int32 lanes on
+    the VPU).  The mr restore adds half a multiply for its contamination
+    dot (its operands are ``mr_bits``-masked, but the MXU does not care),
+    again per column.  Fewer extractions per K is the whole throughput
+    story of longer accumulation chains, so the proxy ranks exactly like
+    wall-clock on every shape we have measured; wall-clock
+    (``tuner.rank_plans(autotune=True)``) remains the source of truth for
+    the benchmark harness."""
+    return spec.n_columns * (1.5 if spec.uses_mr else 1.0) / spec.chunk
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,13 +11,14 @@ search over an accuracy/throughput frontier.  The pipeline is
         measurement is off (engine build time), by an arithmetic cost proxy
       → select per layer (plan_linear_layers)
 
-The cost proxy counts int32 dot-general work per K element: one packed
-multiply per ``chunk`` K elements, plus half a multiply for the mr
-contamination dot (its operands are ``mr_bits``-masked, but the MXU does
-not care).  Fewer extractions per K is the whole throughput story of
-longer accumulation chains, so the proxy ranks exactly like wall-clock on
-every shape we have measured; wall-clock (``autotune=True``) remains the
-source of truth for the benchmark harness.
+The cost proxy (``score.plan_cost_proxy``) counts int32 dot-general work
+per K element: one packed multiply per ``chunk`` K elements — times the
+plan's ``n_columns`` (a multi-DSP column plan spends one word per column
+per pair position) — plus half a multiply for the mr contamination dot.
+Fewer extractions per K is the whole throughput story of longer
+accumulation chains, so the proxy ranks exactly like wall-clock on every
+shape we have measured; wall-clock (``autotune=True``) remains the source
+of truth for the benchmark harness.
 """
 
 from __future__ import annotations
@@ -28,7 +29,7 @@ from typing import Callable, Sequence
 from ..kernels.ref import INT4_EXACT, PackedDotSpec
 from .autotune import autotune_block
 from .plans import enumerate_specs
-from .score import SpecScore, spec_error_stats
+from .score import SpecScore, plan_cost_proxy, spec_error_stats
 
 __all__ = [
     "PlanReport",
@@ -73,6 +74,7 @@ class PlanReport:
             "n_pairs": self.spec.n_pairs,
             "correction": self.spec.correction,
             "mr_bits": self.spec.mr_bits,
+            "n_columns": self.spec.n_columns,
             "provably_exact": self.spec.provably_exact,
             "mae_per_extraction": self.mae_per_extraction,
             "ep_percent": self.ep,
@@ -84,11 +86,6 @@ class PlanReport:
         }
 
 
-def _cost_proxy(spec: PackedDotSpec) -> float:
-    """Relative int32 multiply-accumulate work per K element (lower=faster)."""
-    return (1.5 if spec.uses_mr else 1.0) / spec.chunk
-
-
 def _report(score: SpecScore) -> PlanReport:
     return PlanReport(
         spec=score.spec,
@@ -96,7 +93,7 @@ def _report(score: SpecScore) -> PlanReport:
         mae_per_extraction=score.mae_per_extraction,
         ep=score.ep,
         wce=score.wce,
-        cost_proxy=_cost_proxy(score.spec),
+        cost_proxy=plan_cost_proxy(score.spec),
         exhaustive=score.exhaustive,
     )
 

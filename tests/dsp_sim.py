@@ -1,0 +1,122 @@
+"""Third compute model for the differential suites: a numpy int64 DSP
+simulation of the pair-packed dot path, built on the ``core.packing``
+primitives (``PackingConfig`` offsets, ``pack_activations``/``pack_weights``,
+``mul_lsbs``, ``sign_extend``) with the int32 accumulator modeled
+EXPLICITLY — every packed partial sum is wrapped to 32 bits before
+extraction, exactly like the jnp/Pallas int32 lanes wrap.
+
+This is deliberately an independent implementation: it shares no packing or
+extraction code with ``kernels/ref.py`` (which the Pallas kernel reuses), so
+"simulator == ref == kernel" in the fuzz/parity suites is a real three-way
+cross-check, not one code path asserted against itself.  The packing layout
+is expressed through a :class:`PackingConfig` (the paper's Eqn. 4 notation):
+one pair-packed word is the outer product of the operand vectors
+``(a_even, a_odd)`` × ``(w_odd, w_even)`` at offsets ``(0, p)`` each, whose
+shared middle field at offset ``p`` accumulates the pair's dot-product
+contribution.  Multi-DSP column plans run one such word stream per
+activation bit-slice and recombine extracted fields at the slice offsets.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.packing import (
+    PackingConfig,
+    mul_lsbs,
+    pack_activations,
+    pack_weights,
+    sign_extend,
+)
+from repro.kernels.ref import PackedDotSpec
+
+__all__ = ["pair_packing_config", "simulate_packed_matmul"]
+
+
+def pair_packing_config(spec: PackedDotSpec) -> PackingConfig:
+    """The :class:`PackingConfig` of ONE column's pair-packed word.
+
+    ``a_offsets = w_offsets = (0, p)`` puts the outer product's two middle
+    results on the same offset ``p`` — the dot-product trick — with the
+    cross terms at 0 and 2p.  Activation widths are the per-column slice
+    width, weights the full signed width.
+    """
+    ca = spec.col_bits_a
+    return PackingConfig(
+        a_widths=(ca, ca),
+        w_widths=(spec.bits_w, spec.bits_w),
+        a_offsets=(0, spec.p),
+        w_offsets=(0, spec.p),
+        delta=spec.delta,
+    )
+
+
+def _wrap32(v: np.ndarray) -> np.ndarray:
+    """Model the int32 accumulator: keep 32 bits, two's complement."""
+    return sign_extend(v, 32)
+
+
+def _extract(spec: PackedDotSpec, partial32: np.ndarray,
+             contam: np.ndarray | None) -> np.ndarray:
+    """Middle-field extraction per the spec's correction scheme (int64
+    mirror of the semantics, written independently of ``ref``)."""
+    we = spec.extract_width
+    if spec.rounds_half_up:
+        t = ((partial32 >> np.int64(spec.p - 1)) + np.int64(1)) >> np.int64(1)
+    else:  # naive floor extraction
+        t = partial32 >> np.int64(spec.p)
+    e = sign_extend(t, we)
+    if spec.uses_mr:
+        e = sign_extend(e - (contam << np.int64(we - spec.mr_bits)), we)
+    return e
+
+
+def simulate_packed_matmul(spec: PackedDotSpec, x_u: np.ndarray,
+                           w_s: np.ndarray) -> np.ndarray:
+    """(M, K) unsigned × (K, N) signed → (M, N) int32, the DSP-sim way.
+
+    Ragged K is zero-padded to ``spec.chunk`` like the other two models.
+    """
+    x = np.asarray(x_u, dtype=np.int64)
+    w = np.asarray(w_s, dtype=np.int64)
+    m, k = x.shape
+    n = w.shape[1]
+    pad = (-k) % spec.chunk
+    if pad:
+        x = np.pad(x, ((0, 0), (0, pad)))
+        w = np.pad(w, ((0, pad), (0, 0)))
+        k += pad
+    cfg = pair_packing_config(spec)
+    mr_mask = np.int64((1 << spec.mr_bits) - 1)
+
+    # Packed weight words are shared by every column: W = w_odd + w_even<<p.
+    ws = w.reshape(k // 2, 2, n)
+    w_words = pack_weights(cfg, np.stack([ws[:, 1, :], ws[:, 0, :]], axis=-1))
+
+    acc = np.zeros((m, n), dtype=np.int64)
+    ca = spec.col_bits_a
+    col_mask = np.int64((1 << ca) - 1)
+    for j in range(spec.n_columns):
+        xj = (x >> np.int64(j * ca)) & col_mask
+        xa = xj.reshape(m, k // 2, 2)
+        a_words = pack_activations(cfg, xa)  # A = a_even + a_odd<<p
+        for c in range(k // spec.chunk):
+            sl = slice(c * spec.n_pairs, (c + 1) * spec.n_pairs)
+            # n_pairs wide multiply-accumulates into ONE int32 word:
+            partial = np.einsum(
+                "mp,pn->mn", a_words[:, sl], w_words[sl, :], dtype=np.int64
+            )
+            partial32 = _wrap32(partial)
+            contam = None
+            if spec.uses_mr:
+                # Σ a_odd·w_even mod 2**mr_bits — the high field's LSBs
+                # (paper Eqns. 8/9), recomputed exactly via mul_lsbs.
+                contam = np.zeros((m, n), dtype=np.int64)
+                for pair in range(sl.start, sl.stop):
+                    contam = contam + mul_lsbs(
+                        xa[:, pair, 1][:, None], ws[pair, 0, :][None, :],
+                        spec.mr_bits,
+                    )
+                contam &= mr_mask
+            acc = acc + (_extract(spec, partial32, contam) << np.int64(j * ca))
+    return _wrap32(acc).astype(np.int32)

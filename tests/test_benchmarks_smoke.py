@@ -1,0 +1,144 @@
+"""Benchmark smoke tests: every ``benchmarks/*.py`` entry point runs at
+tiny shapes through the ``benchmarks.run`` dispatcher, so the CSV contract
+(``name,us_per_call,derived``) and the BENCH_*.json schemas — including the
+new a8w8 column-packed row — cannot silently rot.
+
+The heavy benchmarks (engine builds, autotune sweeps) are shrunk by
+monkeypatching their module-level shape constants — the documented tuning
+knobs — and carry the ``slow`` marker; the pure-numpy paper tables run in
+the fast lane.  JSON goes to pytest temp dirs, never the repo root.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import run as bench_run  # noqa: E402
+
+
+def test_run_dispatcher_knows_every_module(capsys):
+    """`--only` parsing covers exactly the modules run.py dispatches."""
+    from benchmarks import (  # noqa: F401 — import check is the test
+        fig9_density,
+        kernel_bench,
+        roofline,
+        serving_bench,
+        table1_packing,
+        table2_per_result,
+        table3_addpack,
+        tuning_bench,
+    )
+
+    assert callable(bench_run.main)
+
+
+def _csv_rows(capsys):
+    out = capsys.readouterr().out
+    rows = [ln for ln in out.splitlines() if "," in ln]
+    for row in rows:
+        name, us, _ = row.split(",", 2)
+        float(us)  # the us_per_call column must stay numeric
+    return rows
+
+
+def test_table1_emits_error_stats(capsys):
+    from benchmarks import table1_packing
+
+    table1_packing.run()
+    rows = _csv_rows(capsys)
+    assert any(r.startswith("table1/xilinx_int4_naive") for r in rows)
+    assert any("MAE=" in r for r in rows)
+
+
+def test_table2_runs(capsys):
+    from benchmarks import table2_per_result
+
+    table2_per_result.run()
+    assert _csv_rows(capsys)
+
+
+def test_table3_emits_addpack_stats(capsys):
+    from benchmarks import table3_addpack
+
+    table3_addpack.run()
+    rows = _csv_rows(capsys)
+    assert any("WCE=" in r for r in rows)
+    assert any("guard_bit_variant" in r and "exact=True" in r for r in rows)
+
+
+def test_fig9_emits_densities(capsys):
+    from benchmarks import fig9_density
+
+    fig9_density.run()
+    rows = _csv_rows(capsys)
+    assert any("rho=" in r for r in rows)
+
+
+def test_roofline_handles_empty_dryrun_dir(tmp_path, monkeypatch, capsys):
+    from benchmarks import roofline
+
+    monkeypatch.chdir(tmp_path)
+    rows = roofline.run(out_dir=str(tmp_path / "nothing"))
+    assert rows == []
+    assert (tmp_path / "artifacts" / "roofline.json").exists()
+
+
+@pytest.mark.slow
+def test_kernel_bench_runs_at_tiny_shapes(capsys):
+    from benchmarks import kernel_bench
+
+    kernel_bench.run()
+    rows = _csv_rows(capsys)
+    assert any(r.startswith("kernel/packed_int4_exact") for r in rows)
+    assert any(r.startswith("kernel/flash_attention") for r in rows)
+
+
+@pytest.mark.slow
+def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
+    from benchmarks import serving_bench
+
+    monkeypatch.setattr(serving_bench, "SLOTS", 2)
+    monkeypatch.setattr(serving_bench, "MAX_LEN", 64)
+    monkeypatch.setattr(serving_bench, "PROMPT_LEN", 12)
+    monkeypatch.setattr(serving_bench, "CHUNK", 8)
+    monkeypatch.setattr(serving_bench, "DECODE_STEPS", 2)
+    out = tmp_path / "BENCH_serving.json"
+    result = serving_bench.run(out_path=str(out))
+    blob = json.loads(out.read_text())
+    assert blob == result
+    assert {"config", "prefill", "decode"} <= set(blob)
+    assert blob["prefill"]["chunked_tok_s"] > 0
+    assert blob["decode"]["int4_packed_tok_s"] > 0
+    assert _csv_rows(capsys)
+
+
+@pytest.mark.slow
+def test_tuning_bench_schema_has_a8w8_column_row(tmp_path, monkeypatch, capsys):
+    """The acceptance row: BENCH_tuning.json carries an a8w8 column-packed
+    entry next to the int8 dense baseline."""
+    from benchmarks import tuning_bench
+
+    monkeypatch.setattr(tuning_bench, "DECODE_STEPS", 2)
+    monkeypatch.setattr(tuning_bench, "MAX_LEN", 64)
+    monkeypatch.setattr(tuning_bench, "KERNEL_SHAPE", (8, 64, 32))
+    monkeypatch.setattr(tuning_bench, "KERNEL_BLOCKS", ((8, 32, 32),))
+    out = tmp_path / "BENCH_tuning.json"
+    result = tuning_bench.run(out_path=str(out))
+    blob = json.loads(out.read_text())
+    assert blob == result
+    assert {"config", "plan_table", "kernel_timings", "a8w8_column_packed",
+            "decode"} <= set(blob)
+    a8 = blob["a8w8_column_packed"]
+    assert a8["bits_a"] == a8["bits_w"] == 8
+    assert a8["n_columns"] > 1 and a8["provably_exact"]
+    assert a8["us_per_call"] > 0 and a8["int8_dense_us_per_call"] > 0
+    # every plan-table row carries the column axis now
+    assert all("n_columns" in row for row in blob["plan_table"])
+    assert blob["decode"]["dsp_tuned_tok_s"] > 0
+    assert _csv_rows(capsys)

@@ -1,0 +1,201 @@
+"""Differential fuzz suite: the three compute models of the packed dot path
+cross-checked on matched specs (paper §V/§VI arithmetic, all correction
+schemes, single- and multi-DSP-column plans):
+
+* the ``core.packing``-primitive DSP simulator (``tests/dsp_sim.py``) —
+  numpy int64 with an explicitly wrapped int32 accumulator;
+* the jnp reference ``kernels.ref.ref_packed_matmul``;
+* the Pallas kernel ``kernels.packed_matmul.packed_matmul``.
+
+Structure:
+
+* ``TestSimulatorVsReference`` — ``DIFF_FUZZ_CASES`` (default 200) seeded
+  random cases: random spec from the enumerator's full emission over six
+  width pairs (including asymmetric a8w4/a4w8 and the column-packed a8w8
+  family), random ragged shape, full-range operands; asserts BIT parity
+  between simulator and reference, plus the analytic worst-case error bound
+  vs the exact integer matmul.  The first ``SMOKE_CASES`` run in the fast
+  lane; the long tail carries the ``slow`` marker (CI runs it in the
+  scheduled/labelled slow lane).
+* ``TestKernelInTheLoop`` — a deterministic spec subset (every scheme ×
+  column count) through the actual Pallas kernel: kernel == ref == sim,
+  bit-for-bit.  Kept small because each (spec, shape) pair is a separate
+  interpret-mode compile.
+* ``TestMeasuredErrorVsScorePrediction`` — seeded fuzz measurements of MAE
+  per extraction vs ``tuning.score``'s prediction for the same plan.  For
+  plans the scorer PROVES exact (algebraically or by exhaustive
+  enumeration) the assertion is strict: measured error must be zero.  For
+  sampled predictions the measurement must agree within a documented
+  sampling margin — both the prediction and the fuzz measurement are
+  finite-sample estimates of the same mean, so exact dominance is not a
+  meaningful invariant, but large excursions would flag a real model
+  mismatch.
+
+Every case is seeded through ``np.random.default_rng((tag, case))`` so CI
+failures reproduce locally by case id.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from dsp_sim import simulate_packed_matmul
+
+from repro.kernels import ref
+from repro.kernels.packed_matmul import packed_matmul
+from repro.tuning import enumerate_specs
+from repro.tuning.score import spec_error_stats
+
+N_CASES = int(os.environ.get("DIFF_FUZZ_CASES", "200"))
+SMOKE_CASES = 12  # unmarked prefix: always runs, even in the fast CI lane
+
+WIDTH_PAIRS = ((2, 2), (4, 4), (4, 8), (6, 6), (8, 4), (8, 8))
+POOL = [s for a, w in WIDTH_PAIRS for s in enumerate_specs(a, w)]
+COLUMN_POOL = [s for s in POOL if s.n_columns > 1]
+
+
+def _column_scale(spec):
+    return sum(1 << spec.column_shift(j) for j in range(spec.n_columns))
+
+
+def _draw_case(case: int):
+    """Seeded (spec, x, w) draw; every other case forces a column plan so
+    the new axis gets half the fuzz volume."""
+    rng = np.random.default_rng((0xD5B, case))
+    pool = COLUMN_POOL if case % 2 else POOL
+    spec = pool[int(rng.integers(0, len(pool)))]
+    m = int(rng.integers(1, 9))
+    n = int(rng.integers(1, 17))
+    k = int(rng.integers(1, 3 * spec.chunk + 2))  # ragged K, crosses chunks
+    x = rng.integers(0, 1 << spec.bits_a, (m, k)).astype(np.int32)
+    w = rng.integers(
+        -(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)
+    ).astype(np.int32)
+    return spec, x, w
+
+
+def _analytic_error_bound(spec, k: int) -> int:
+    """Worst-case |packed − exact| for a (M, k)·(k, N) matmul under
+    ``spec``: per extraction, per column, the schemes err by at most 1
+    (naive/full rounding) or ``2**mr_bits`` (squeezed-field spill), and
+    column j's error recombines scaled by ``2**(j·col_bits_a)``."""
+    n_extractions = -(-k // spec.chunk)
+    per_extraction = (1 << spec.mr_bits) if spec.uses_mr else 1
+    return n_extractions * per_extraction * _column_scale(spec)
+
+
+_CASE_PARAMS = [
+    pytest.param(i, marks=() if i < SMOKE_CASES else pytest.mark.slow)
+    for i in range(N_CASES)
+]
+
+
+class TestSimulatorVsReference:
+    @pytest.mark.parametrize("case", _CASE_PARAMS)
+    def test_sim_bit_equals_ref(self, case):
+        spec, x, w = _draw_case(case)
+        sim = simulate_packed_matmul(spec, x, w)
+        got = np.asarray(ref.ref_packed_matmul(x, w, spec))
+        np.testing.assert_array_equal(
+            sim, got, err_msg=f"case {case}: {spec.name()}"
+        )
+        # and neither model drifts past the analytic worst case
+        exact = np.asarray(ref.ref_quantized_matmul(x, w))
+        bound = _analytic_error_bound(spec, x.shape[1])
+        assert np.abs(got - exact).max() <= bound, (case, spec.name())
+        if spec.provably_exact:
+            np.testing.assert_array_equal(got, exact)
+
+
+def _kernel_representatives():
+    """One plan per (scheme, n_columns) combination the enumerator emits —
+    kept small because every (spec, shape) is a separate kernel compile."""
+    seen, reps = set(), []
+    for spec in POOL:
+        key = (spec.correction, spec.n_columns)
+        if key not in seen:
+            seen.add(key)
+            reps.append(spec)
+    return reps
+
+
+class TestKernelInTheLoop:
+    """The Pallas kernel joins the differential: one representative plan
+    per (scheme, n_columns) combination the enumerator emits."""
+
+    @pytest.mark.parametrize(
+        "spec", _kernel_representatives(), ids=lambda s: s.name()
+    )
+    def test_three_way_parity(self, spec):
+        rng = np.random.default_rng((0xD5C, spec.p, spec.n_pairs))
+        m, n = 5, 9
+        k = 2 * spec.chunk + 1  # ragged
+        x = rng.integers(0, 1 << spec.bits_a, (m, k)).astype(np.int32)
+        w = rng.integers(
+            -(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)
+        ).astype(np.int32)
+        kern = np.asarray(
+            packed_matmul(x, w, spec=spec, block=(8, 16, spec.chunk),
+                          interpret=True)
+        )
+        got = np.asarray(ref.ref_packed_matmul(x, w, spec))
+        sim = simulate_packed_matmul(spec, x, w)
+        np.testing.assert_array_equal(kern, got, err_msg=spec.name())
+        np.testing.assert_array_equal(sim, got, err_msg=spec.name())
+
+
+class TestMeasuredErrorVsScorePrediction:
+    """Fuzz-measured MAE per extraction vs the scorer's prediction.
+
+    ``REPRESENTATIVES`` spans every scheme at both column regimes.  For
+    each, ``_measure`` aggregates error over several seeded matmuls
+    (hundreds-to-thousands of output samples), normalized per extraction
+    exactly like ``SpecScore.mae_per_extraction``."""
+
+    REPRESENTATIVES = [
+        spec for spec in POOL
+        if (spec.bits_a, spec.bits_w) in ((4, 4), (8, 8))
+    ][::7]  # deterministic thinning: every 7th plan of the a4w4/a8w8 family
+
+    @staticmethod
+    def _measure(spec, n_draws: int = 8):
+        abs_err_sum, n_outputs, n_extr = 0.0, 0, 0
+        for draw in range(n_draws):
+            rng = np.random.default_rng((0xD5D, spec.p, spec.n_pairs, draw))
+            m, n = 6, 12
+            k = 2 * spec.chunk
+            x = rng.integers(0, 1 << spec.bits_a, (m, k)).astype(np.int32)
+            w = rng.integers(
+                -(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)
+            ).astype(np.int32)
+            got = np.asarray(ref.ref_packed_matmul(x, w, spec))
+            exact = np.asarray(ref.ref_quantized_matmul(x, w))
+            abs_err_sum += float(np.abs(got - exact).sum())
+            n_outputs += got.size
+            n_extr = k // spec.chunk
+        return abs_err_sum / n_outputs / n_extr
+
+    @pytest.mark.parametrize(
+        "spec", REPRESENTATIVES, ids=lambda s: s.name()
+    )
+    def test_measured_mae_within_prediction(self, spec):
+        score = spec_error_stats(spec)
+        measured = self._measure(spec)
+        proven_exact = spec.provably_exact or (
+            score.exhaustive and score.mae == 0.0
+        )
+        if proven_exact:
+            # a proof is a proof: one wrong bit anywhere fails the fuzz
+            assert measured == 0.0, spec.name()
+        else:
+            # both numbers estimate the same per-extraction mean; 1.5x plus
+            # a small absolute term covers the finite-sample noise of the
+            # fuzz draw (seeded: deterministic, so no flakes)
+            predicted = score.mae_per_extraction
+            assert measured <= 1.5 * predicted + 0.05, (
+                f"{spec.name()}: measured {measured:.4f} vs "
+                f"predicted {predicted:.4f}"
+            )

@@ -1,28 +1,35 @@
 """Exhaustive kernel-parity matrix: the Pallas kernel is bit-exact vs the
 ``core.packing``/``core.correction``-validated ground truth for EVERY plan
 the enumerator emits — all schemes (naive/full/mr/mr+full), all operand
-widths (2/4/6/8 bit), non-default and ragged block/problem shapes.
+widths (2/4/6/8 bit), all multi-DSP column counts, non-default and ragged
+block/problem shapes.
 
 Three layers of assurance, replacing the old single-spec spot checks:
 
-1. every emitted plan: kernel == jnp ref, bit-for-bit, on a ragged shape
-   (the ref itself is validated against the exact integer matmul and the
-   DSP48 simulation elsewhere);
+1. every emitted plan: kernel == jnp ref == ``core.packing``-based DSP
+   simulator (``tests/dsp_sim.py``), bit-for-bit, on a ragged shape — a
+   genuine three-way cross-check since the simulator shares no packing or
+   extraction code with the kernel/ref pair;
 2. exactness where the plan algebra promises it: every ``full`` plan equals
-   the mathematically exact integer matmul; every ``naive`` plan is biased
-   by at most −1 per extraction; every mr plan's error is bounded;
-3. block-shape sweep: representative plans per scheme across non-default
-   and ragged (M, K, N) grids, including blocks larger than the problem.
+   the mathematically exact integer matmul (including the column-packed
+   a8w8 plans that lift the int32 ceiling); every ``naive`` plan is biased
+   by at most −1 per extraction per column (scaled by the column's
+   recombination shift); every mr plan's error is bounded;
+3. block-shape sweep: representative plans per scheme — and column-packed
+   representatives — across non-default and ragged (M, K, N) grids,
+   including blocks larger than the problem.
 
-Plus the plan-construction failure surface: requesting an (n_pairs, δ)
-combination that overflows the int32 accumulator (or a field) fails AT
-CONSTRUCTION with an error naming the violated budget — never deep in the
-kernel.
+Plus the plan-construction failure surface: requesting an (n_pairs, δ,
+n_columns) combination that overflows the int32 accumulator (or a field)
+fails AT CONSTRUCTION with an error naming the violated budget — never
+deep in the kernel.
 """
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+from dsp_sim import simulate_packed_matmul
 
 from repro.kernels import ref
 from repro.kernels.packed_matmul import packed_matmul
@@ -43,24 +50,39 @@ def _operands(m, k, n, spec):
     return jnp.asarray(x), jnp.asarray(w)
 
 
-def _assert_parity(spec, shape, block):
+def _column_scale(spec):
+    """Worst-case recombination multiplier of one unit of per-column
+    extraction error: Σ_j 2^(j·col_bits_a)."""
+    return sum(1 << spec.column_shift(j) for j in range(spec.n_columns))
+
+
+def _assert_parity(spec, shape, block, simulator=True):
     m, k, n = shape
     x, w = _operands(m, k, n, spec)
     got = packed_matmul(x, w, spec=spec, block=block, interpret=True)
     want = ref.ref_packed_matmul(x, w, spec)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if simulator:
+        sim = simulate_packed_matmul(spec, np.asarray(x), np.asarray(w))
+        np.testing.assert_array_equal(sim, np.asarray(got))
     return np.asarray(got), x, w
 
 
 class TestEveryEmittedPlan:
     """Acceptance gate: parity holds for every plan the enumerator emits."""
 
-    def test_enumerator_emits_plans_for_subbyte_widths(self):
-        for a_bits, w_bits in ((2, 2), (4, 4), (6, 6)):
+    def test_enumerator_emits_plans_for_every_width(self):
+        for a_bits, w_bits in WIDTH_PAIRS:
             assert enumerate_specs(a_bits, w_bits), (a_bits, w_bits)
-        # 8-bit operands admit no plan inside the int32 accumulator — the
-        # emptiness is itself the enumerator's (tested) answer
-        assert enumerate_specs(8, 8) == ()
+
+    def test_a8w8_needs_columns_and_has_provably_exact_plans(self):
+        # single-word packing still admits NO 8-bit plan inside int32 …
+        assert enumerate_specs(8, 8, n_columns_choices=(1,)) == ()
+        # … and the column axis is exactly what lifts that ceiling
+        a8 = enumerate_specs(8, 8)
+        assert a8 and all(s.n_columns > 1 for s in a8)
+        exact = [s for s in a8 if s.provably_exact]
+        assert exact, "a8w8 must have at least one provably exact column plan"
 
     @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name())
     def test_kernel_bit_equals_ground_truth(self, spec):
@@ -70,14 +92,18 @@ class TestEveryEmittedPlan:
         exact = np.asarray(ref.ref_quantized_matmul(x, w))
         err = got - exact
         n_extractions = -(-shape[1] // spec.chunk)
+        scale = _column_scale(spec)
         if spec.correction == "full":
             np.testing.assert_array_equal(got, exact)
         elif spec.correction == "naive":
-            # the white-paper bias: at most -1 per extraction, never positive
-            assert err.max() <= 0 and err.min() >= -n_extractions
+            # the white-paper bias: at most -1 per extraction per column
+            # (column j's bias recombines scaled by 2^(j·col_bits_a)),
+            # never positive
+            assert err.max() <= 0 and err.min() >= -n_extractions * scale
         else:  # mr corrections: restored error is bounded per extraction by
-            # the low-field spill into the squeezed middle field
-            bound = n_extractions * (1 << spec.mr_bits)
+            # the low-field spill into the squeezed middle field, again
+            # scaled by the column recombination
+            bound = n_extractions * (1 << spec.mr_bits) * scale
             assert np.abs(err).max() <= bound, spec.name()
 
 
@@ -90,6 +116,13 @@ class TestBlockShapeMatrix:
         "mr": PackedDotSpec(4, 4, 10, 16, "mr", 3),
         "mr+full": PackedDotSpec(4, 4, 10, 16, "mr+full", 3),
     }
+    # Column-packed representatives: the high-n_pairs exact a4w4 plan and
+    # the a8w8 plan that exists ONLY thanks to columns.
+    COLUMN_REPRESENTATIVE = [
+        PackedDotSpec(4, 4, 11, 16, "full", n_columns=2),
+        PackedDotSpec(8, 8, 11, 1, "full", n_columns=4),
+        PackedDotSpec(8, 8, 10, 1, "mr+full", 1, n_columns=4),
+    ]
 
     @pytest.mark.parametrize("scheme", CORRECTIONS)
     @pytest.mark.parametrize(
@@ -100,6 +133,17 @@ class TestBlockShapeMatrix:
     )
     def test_parity_across_blocks_and_ragged_shapes(self, scheme, block, shape):
         _assert_parity(self.REPRESENTATIVE[scheme], shape, block)
+
+    @pytest.mark.parametrize(
+        "spec", COLUMN_REPRESENTATIVE, ids=lambda s: s.name()
+    )
+    @pytest.mark.parametrize("block", [(32, 64, 128), (16, 16, 64)])
+    @pytest.mark.parametrize("shape", [(96, 200, 72), (33, 130, 17)])
+    def test_column_parity_across_blocks_and_ragged_shapes(
+        self, spec, block, shape
+    ):
+        """Three-way parity for column-packed plans on ragged grids."""
+        _assert_parity(spec, shape, block)
 
     def test_block_larger_than_problem(self):
         _assert_parity(self.REPRESENTATIVE["full"], (8, 24, 8), (128, 128, 128))
@@ -134,9 +178,25 @@ class TestConstructionTimeBudgets:
         with pytest.raises(ValueError, match="restored middle field"):
             PackedDotSpec(4, 4, p=5, n_pairs=64, correction="mr", mr_bits=1)
 
-    def test_int8_has_no_legal_plan_and_says_why(self):
-        with pytest.raises(ValueError, match="int32 accumulator budget"):
+    def test_int8_has_no_legal_single_column_plan_and_says_why(self):
+        with pytest.raises(ValueError, match="raise n_columns"):
             PackedDotSpec(bits_a=8, bits_w=8, p=17, n_pairs=1, correction="full")
+        # the very combination the error suggests is legal — and exact
+        spec = PackedDotSpec(8, 8, p=11, n_pairs=1, correction="full",
+                             n_columns=4)
+        assert spec.provably_exact
+
+    def test_n_columns_validated_at_construction(self):
+        with pytest.raises(ValueError, match="n_columns=0"):
+            PackedDotSpec(4, 4, 11, 4, n_columns=0)
+        with pytest.raises(ValueError, match="at least one activation bit"):
+            PackedDotSpec(4, 4, 11, 4, n_columns=5)
+
+    def test_per_column_budget_named_in_error(self):
+        # 2 columns of 4-bit slices are NOT enough for a8w8 at n_pairs=8
+        with pytest.raises(ValueError, match="per column"):
+            PackedDotSpec(8, 8, p=17, n_pairs=8, correction="full",
+                          n_columns=2)
 
     def test_mr_bits_consistency_enforced(self):
         with pytest.raises(ValueError, match="mr_bits >= 1"):

@@ -8,6 +8,12 @@ Invariants:
   * approximate correction never increases the error rate vs naive
   * packed addition with guard bits is exact; without guards WCE == 1 in
     modular lane arithmetic
+  * ``addpack.accumulate`` with ``guard_bits=1`` is exact for ANY lane-width
+    mix that fits the 48-bit accumulator (paper §VII/Fig. 8), for any number
+    of accumulated terms whose per-chunk lane sums fit their lane — and the
+    same claim holds through the Pallas ``addpack_accumulate`` kernel
+  * with ``guard_bits=0`` one packed add errs by at most 1 per lane (in
+    modular lane arithmetic) for any lane-width mix, lowest lane exact
 """
 
 import numpy as np
@@ -17,6 +23,7 @@ from proptest import booleans, given, integers, sampled_from, tuples
 
 from repro.core.addpack import (
     AddPackConfig,
+    accumulate,
     lane_add_expected,
     packed_lane_add,
 )
@@ -129,6 +136,88 @@ def test_addpack_guard_bits_exact(width, lanes, guard, seed):
     np.testing.assert_array_equal(
         packed_lane_add(cfg, x, y), lane_add_expected(cfg, x, y)
     )
+
+
+@given(
+    n_lanes=integers(2, 6), t_steps=integers(1, 11), seed=integers(0, 2**31)
+)
+def test_addpack_accumulate_guard_bit_exact_for_any_lane_mix(
+    n_lanes, t_steps, seed
+):
+    """§VII/Fig. 8: one guard bit between lanes makes ``accumulate`` exact
+    for ANY lane-width mix fitting 48 bits.  The guard absorbs the chunk's
+    worst-case carry (chunk = 2**guard_bits = 2 packed adds between
+    extractions), so no lane ever corrupts its neighbour; terms are drawn
+    from the quarter range so each lane's own 2-term chunk sum fits its
+    width — the regime the extraction reads back exactly."""
+    rng = np.random.default_rng(seed)
+    widths = tuple(int(rng.integers(3, 13)) for _ in range(n_lanes))
+    if sum(widths) + (len(widths) - 1) > 48:
+        return  # lane mix exceeds the accumulator; nothing to test
+    cfg = AddPackConfig(widths, guard_bits=1)
+    terms = np.stack(
+        [
+            rng.integers(-(1 << (w - 2)), 1 << (w - 2), (17, t_steps))
+            for w in widths
+        ],
+        axis=-1,
+    )
+    got = accumulate(cfg, terms)
+    np.testing.assert_array_equal(got, terms.sum(-2))
+
+
+@given(
+    n_lanes=integers(2, 5), seed=integers(0, 2**31)
+)
+def test_addpack_no_guard_wce_one_for_any_lane_mix(n_lanes, seed):
+    """Without guards a packed add errs by at most 1 per lane — the carry
+    out of the lane below corrupts exactly the LSB — for ANY width mix;
+    the lowest lane has nothing below it and stays exact."""
+    rng = np.random.default_rng(seed)
+    widths = tuple(int(rng.integers(3, 11)) for _ in range(n_lanes))
+    if sum(widths) > 48:
+        return
+    cfg = AddPackConfig(widths, guard_bits=0)
+    x = np.stack(
+        [rng.integers(-(1 << (w - 1)), 1 << (w - 1), 256) for w in widths],
+        axis=-1,
+    )
+    y = np.stack(
+        [rng.integers(-(1 << (w - 1)), 1 << (w - 1), 256) for w in widths],
+        axis=-1,
+    )
+    got = packed_lane_add(cfg, x, y)
+    want = lane_add_expected(cfg, x, y)
+    for i, w in enumerate(widths):
+        diff = np.abs(got[:, i] - want[:, i])
+        mod = np.minimum(diff, (1 << w) - diff)  # modular lane distance
+        assert mod.max() <= 1, (widths, i)
+    assert (got[:, 0] == want[:, 0]).all()
+
+
+@given(t_steps=sampled_from([1, 2, 3, 4, 8]), seed=integers(0, 2**31))
+def test_addpack_kernel_matches_ref_and_core_accumulate(t_steps, seed):
+    """The §VII claim exercised through the Pallas kernel: with its one
+    guard bit, ``addpack_accumulate`` (two 14-bit lanes per int32 word) is
+    bit-exact vs plain per-lane sums AND vs ``core.addpack.accumulate`` on
+    the equivalent two-lane config, for half-range terms (2-term chunk sums
+    fit the lane)."""
+    from repro.kernels.addpack_acc import (
+        GUARD_BITS,
+        LANE_BITS,
+        addpack_accumulate,
+        ref_addpack_accumulate,
+    )
+
+    rng = np.random.default_rng(seed)
+    lim = 1 << (LANE_BITS - 2)
+    terms = rng.integers(-lim, lim, (t_steps, 2, 256)).astype(np.int32)
+    got = np.asarray(addpack_accumulate(terms, block_n=256, interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(ref_addpack_accumulate(terms)))
+    cfg = AddPackConfig((LANE_BITS, LANE_BITS), guard_bits=GUARD_BITS,
+                        total_bits=32)
+    core = accumulate(cfg, terms.transpose(2, 0, 1))  # (N, T, lane) → (N, lane)
+    np.testing.assert_array_equal(got, core.T)
 
 
 @given(seed=integers(0, 2**31))

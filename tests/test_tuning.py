@@ -49,16 +49,40 @@ class TestEnumeration:
 
     def test_exact_schemes_carry_no_mr_bits(self):
         for spec in enumerate_specs(4, 4):
+            p_min = min_exact_p(4, 4, spec.n_pairs, spec.n_columns)
             if spec.correction in ("naive", "full"):
-                assert spec.mr_bits == 0 and spec.p == min_exact_p(
-                    4, 4, spec.n_pairs
-                )
+                assert spec.mr_bits == 0 and spec.p == p_min
             else:
-                assert spec.mr_bits == min_exact_p(4, 4, spec.n_pairs) - spec.p
+                assert spec.mr_bits == p_min - spec.p
 
-    def test_six_bit_only_overpacked(self):
-        specs = enumerate_specs(6, 6)
-        assert specs and all(s.uses_mr for s in specs)
+    def test_six_bit_single_column_only_overpacked(self):
+        """Without columns 6-bit operands only fit squeezed (mr) plans;
+        the column axis unlocks exact-spacing 6-bit plans."""
+        single = enumerate_specs(6, 6, n_columns_choices=(1,))
+        assert single and all(s.uses_mr for s in single)
+        multi = enumerate_specs(6, 6)
+        assert any(s.correction == "full" and s.n_columns > 1 for s in multi)
+
+    def test_column_counts_skip_duplicate_slice_widths(self):
+        """n_columns beyond bits_a, or repeating a slice width, would emit
+        the identical plan twice — the enumerator skips them."""
+        specs = enumerate_specs(2, 2, n_columns_choices=(1, 2, 4))
+        assert {s.n_columns for s in specs} == {1, 2}  # 4 > bits_a
+        names = [s.name() for s in specs]
+        assert len(names) == len(set(names))
+
+    def test_a8w8_plans_exist_and_are_column_packed(self):
+        specs = enumerate_specs(8, 8)
+        assert specs and all(s.n_columns > 1 for s in specs)
+        assert any(s.provably_exact for s in specs)
+
+    def test_cost_proxy_charges_columns(self):
+        from repro.tuning import plan_cost_proxy
+        from repro.kernels.ref import PackedDotSpec
+
+        c1 = PackedDotSpec(4, 4, 11, 4, "full")
+        c2 = PackedDotSpec(4, 4, 11, 4, "full", n_columns=2)
+        assert plan_cost_proxy(c2) == 2 * plan_cost_proxy(c1)
 
 
 class TestScoring:
@@ -84,11 +108,16 @@ class TestScoring:
 
 class TestSelection:
     def test_budget_filters(self):
-        """Budget 0 admits only PROVABLY exact plans — a sampled grid that
-        happened to observe zero error is not proof of exactness."""
+        """Budget 0 admits only PROVEN exact plans — algebraically
+        (``spec.provably_exact``) or by exhaustive enumeration of the
+        extraction's full operand space.  A sampled grid that happened to
+        observe zero error is neither, and stays floored out."""
         exact_only = rank_plans(4, 4, error_budget=0.0)
         assert exact_only and all(r.mae_per_extraction == 0 for r in exact_only)
-        assert all(r.spec.provably_exact for r in exact_only)
+        assert all(
+            r.spec.provably_exact or (r.exhaustive and r.mae == 0)
+            for r in exact_only
+        )
         sampled_zero = [
             r for r in rank_plans(4, 4, error_budget=0.5)
             if r.mae == 0 and not r.spec.provably_exact and not r.exhaustive
@@ -107,8 +136,17 @@ class TestSelection:
                 assert r.mae_per_extraction <= budget
 
     def test_unsatisfiable_budget_raises_with_guidance(self):
+        # restricted to single-column plans, 6-bit operands only have
+        # squeezed (inexact) plans, so a zero budget is unsatisfiable
+        single = enumerate_specs(6, 6, n_columns_choices=(1,))
         with pytest.raises(ValueError, match="error budget"):
-            select_plan(6, 6, error_budget=0.0)
+            select_plan(6, 6, error_budget=0.0, specs=single)
+
+    def test_budget_zero_a8w8_selects_exact_column_plan(self):
+        """The headline: 8-bit operands are exactly servable via columns."""
+        best = select_plan(8, 8, error_budget=0.0)
+        assert best.spec.n_columns > 1 and best.spec.provably_exact
+        assert best.mae_per_extraction == 0.0
 
     def test_report_json_roundtrips(self):
         import json
@@ -197,6 +235,19 @@ class TestServingIntegration:
         ))
         assert eng.plan_table
         assert any(r.spec != INT4_EXACT for r in eng.plan_table.values())
+        out = eng.generate([[5, 6, 7], [8, 9]], max_new=4)
+        assert all(len(t) == 4 for t in out.values())
+
+    def test_engine_serves_a8w8_column_plans_end_to_end(self):
+        """plan_bits=(8, 8): every selected plan is column-packed (no
+        single-word a8w8 plan exists) and decode runs it end to end."""
+        eng = Engine(CFG, PARAMS, ServeConfig(
+            n_slots=2, max_len=32, prefill_chunk=4, quant_mode="dsp_tuned",
+            plan_bits=(8, 8), error_budget=0.0,
+        ))
+        assert eng.plan_table
+        assert all(r.spec.n_columns > 1 and r.spec.provably_exact
+                   for r in eng.plan_table.values())
         out = eng.generate([[5, 6, 7], [8, 9]], max_new=4)
         assert all(len(t) == 4 for t in out.values())
 
