@@ -5,12 +5,29 @@ from __future__ import annotations
 import time
 
 
+def _block(result) -> None:
+    """Block on device results so async dispatch can't fake a win.
+
+    ``jax.block_until_ready`` walks arbitrary pytrees and passes through
+    non-JAX values (numpy arrays, floats), so wall-clock rows measure the
+    computation, not the dispatch.  Guarded import keeps the pure-numpy
+    paper tables importable without JAX initialized.
+    """
+    try:
+        import jax
+
+        jax.block_until_ready(result)
+    except ImportError:  # pragma: no cover - jax is a hard dep in practice
+        pass
+
+
 def time_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     for _ in range(warmup):
-        fn(*args)
+        _block(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
-        fn(*args)
+        result = fn(*args)
+    _block(result)
     return (time.perf_counter() - t0) / iters * 1e6
 
 

@@ -74,14 +74,28 @@ def apply_linear(params, x: jax.Array, spec: LinearSpec = LinearSpec()) -> jax.A
     w = params["w"]
     mode = spec.mode
     if is_dsp_tuned_leaf(w):
-        if w.values.ndim == 2:
+        if w.payload.ndim == 2:
             # serving decode path: this layer's tuned plan rides on the leaf
             # (static aux), weights were quantized once at engine build
             x2, lead = _flatten_batch(x.astype(jnp.float32))
-            y = ops.dsp_tuned_matmul_f32(
-                x2, w.values, w.scale, spec=w.spec,
-                block=w.block or (128, 128, 128), use_kernel=spec.use_kernel,
-            ).reshape(*lead, w.values.shape[-1]).astype(x.dtype)
+            n_out = w.scale.shape[-1]
+            if w.prepacked:
+                # prepacked fast path: words/zp built once, nothing repacks;
+                # proven-exact plans additionally take the f32-GEMM shortcut
+                # (bit-identical — see ops.dsp_tuned_matmul_prepacked_f32)
+                y = ops.dsp_tuned_matmul_prepacked_f32(
+                    x2, w.words, w.wsc, w.zp_row, w.scale, w.w_f32,
+                    spec=w.spec, block=w.block_for(x2.shape[0]),
+                    use_kernel=spec.use_kernel,
+                    exact_f32=w.w_f32 is not None and not spec.use_kernel,
+                )
+            else:
+                y = ops.dsp_tuned_matmul_f32(
+                    x2, w.values, w.scale, spec=w.spec,
+                    block=w.block or (128, 128, 128),
+                    use_kernel=spec.use_kernel,
+                )
+            y = y.reshape(*lead, n_out).astype(x.dtype)
         else:
             # stacked leaves outside a layer scan: dequantize at use
             y = x @ materialize_weight(w, x.dtype)
@@ -90,13 +104,19 @@ def apply_linear(params, x: jax.Array, spec: LinearSpec = LinearSpec()) -> jax.A
         return y
     if is_packed_leaf(w):
         if mode == "int4_packed" and w["packed"].ndim == 2:
-            # serving decode path: weights were nibble-packed once at engine
-            # build (`quantize_for_serving`); run the production packed
-            # kernel straight off the stored nibbles — no per-call repack
             x2, lead = _flatten_batch(x.astype(jnp.float32))
-            y = ops.int4_matmul_f32(
-                x2, w["packed"], w["scale"], use_kernel=spec.use_kernel
-            ).reshape(*lead, w["packed"].shape[-1]).astype(x.dtype)
+            if "w_f32" in w and not spec.use_kernel:
+                # prepacked fast path: the nibble grid was decoded once at
+                # engine build; the f32 GEMM computes the exact int8×int4
+                # matmul (bit-identical to the unpack+int-dot path)
+                y = ops.int4_prepacked_matmul_f32(x2, w["w_f32"], w["scale"])
+            else:
+                # run the production packed kernel straight off the stored
+                # nibbles — no per-call repack
+                y = ops.int4_matmul_f32(
+                    x2, w["packed"], w["scale"], use_kernel=spec.use_kernel
+                )
+            y = y.reshape(*lead, w["packed"].shape[-1]).astype(x.dtype)
         else:
             # packed-storage representation under a float compute mode:
             # nibbles live in HBM, dequantize at the point of use (fused

@@ -13,13 +13,28 @@ picks, per weight, the fastest pair-packed plan inside an error budget, and
 the weight is quantized ONCE to the plan's signed integer grid and stored in
 a :class:`DspTunedLeaf` — a registered pytree node that carries the plan
 (spec + block) as static aux data, so jitted serving programs specialize on
-the plan without retracing per call.  Decode then runs the paper's packed
-arithmetic straight off the stored integers, no per-step re-quantization.
-Plans may be multi-DSP column-packed (``spec.n_columns > 1``), which is
-what makes ``ServeConfig.plan_bits=(8, 8)`` servable: 8-bit operands have
-no single-word plan inside int32, but a column plan spreads each dot
-product across several packed words (weights still store one int8 per
-value — the column slicing happens on the activations inside the kernel).
+the plan without retracing per call.
+
+The leaf separates STORAGE from COMPUTE operands (the prepacked decode fast
+path):
+
+* storage — ``payload``: the signed plan grid nibble-packed two values per
+  uint8 byte when ``bits_w <= 4`` (sub-byte storage, 2× denser than the old
+  int8 store), plain int8 otherwise.  ``values`` decodes it on demand.
+* compute — ``words``/``wsc``: the pair-packed int32 weight words (and, for
+  mr plans only, the contamination operands) from
+  ``kernels.ref.pack_weight_words``, built ONCE at engine build so no decode
+  step ever repacks; ``zp_row``: the precomputed zero-point correction
+  ``zp·Σ_k w``; ``w_f32``: the signed grid cast to f32 — on backends whose
+  integer dots lower to scalar loops (CPU), *provably exact* plans run the
+  identical integer matmul through the fast f32 GEMM unit, bit-for-bit
+  (``ref.exact_int_matmul_fits_f32``).
+
+The storage-vs-HBM tradeoff is explicit: ``payload`` is what a checkpoint /
+HBM-resident copy costs (0.5–1 byte per value), the prepacked operands are
+a decode-speed cache costing extra device bytes (4 bytes per value for
+``words``, +4 for ``w_f32``, +8 for mr ``wsc``).  ``prepack=False`` keeps
+storage only.
 
 Norms, biases, embeddings and 1-D leaves stay bf16 (gather tables and
 vector ops gain nothing from nibble packing).
@@ -27,7 +42,6 @@ vector ops gain nothing from nibble packing).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Iterator
 
 import jax
@@ -35,14 +49,17 @@ import jax.numpy as jnp
 
 from ..kernels import ref
 from ..kernels.ref import INT4_EXACT, PackedDotSpec
-from .quantize import quantize_signed
+from .quantize import quantize_signed, zero_point_correction
 
 __all__ = [
     "quantize_params_for_serving",
     "quantize_for_serving",
+    "fuse_projection_weights",
     "is_packed_leaf",
     "is_dsp_tuned_leaf",
     "iter_packable_weights",
+    "pack_signed_nibbles",
+    "unpack_signed_nibbles",
     "DspTunedLeaf",
     "SERVING_MODES",
 ]
@@ -66,30 +83,146 @@ def is_dsp_tuned_leaf(p) -> bool:
     return isinstance(p, DspTunedLeaf)
 
 
+# ---- sub-byte storage -----------------------------------------------------
+
+
+def pack_signed_nibbles(v: jax.Array) -> jax.Array:
+    """(…, K, N) signed ints in [-8, 7] → (…, K//2, N) uint8 nibbles.
+
+    The generalization of ``ref.pack_int4_weights`` to any leading batch
+    shape — the storage layout of every ``bits_w <= 4`` plan grid."""
+    v = jnp.asarray(v, jnp.int8)
+    k = v.shape[-2]
+    if k % 2:
+        raise ValueError("K must be even to pack nibbles")
+    lo = v[..., 0::2, :] & 0xF
+    hi = v[..., 1::2, :] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_signed_nibbles(packed: jax.Array) -> jax.Array:
+    """(…, K//2, N) uint8 → (…, K, N) int8, sign-extended — the exact
+    inverse of :func:`pack_signed_nibbles` on the signed grid."""
+    b = packed.astype(jnp.int8)
+    lo = (b << 4) >> 4  # arithmetic shift sign-extends the low nibble
+    hi = b >> 4
+    k2, n = packed.shape[-2:]
+    out = jnp.stack([lo, hi], axis=-2)  # (..., K/2, 2, N)
+    return out.reshape(packed.shape[:-2] + (2 * k2, n))
+
+
+# ---- the tuned-plan leaf --------------------------------------------------
+
+
 @jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
 class DspTunedLeaf:
     """A matmul weight quantized once to a tuned packing plan.
 
-    ``values``: (…, d_in, d_out) signed ints on the plan's ``bits_w`` grid
-    (stored int8 — the pair packer consumes plain integers; sub-byte
-    *storage* nibble packing composes later and is a ROADMAP open item).
-    ``scale``: (…, 1, d_out) f32 per-output-channel dequantization scale.
-    ``spec``/``block``: the plan — static aux data, part of the pytree
-    treedef, so a jitted program is specialized per plan.
+    Constructed from ``values`` ((…, d_in, d_out) signed ints on the plan's
+    ``bits_w`` grid) and ``scale`` ((…, 1, d_out) f32); stores the nibble/
+    int8 ``payload`` plus, when ``prepack=True`` (the default), the
+    device-resident prepacked compute operands described in the module
+    docstring.  ``spec``/``block``/``decode_block`` are static aux data —
+    part of the treedef, so jitted programs specialize per plan.
+    ``exact`` marks plans PROVEN error-free (algebraically or by exhaustive
+    enumeration), unlocking the f32-GEMM fast path where it is bit-safe.
     """
 
-    values: Any
-    scale: Any
-    spec: PackedDotSpec
-    block: tuple[int, int, int] | None = None
+    def __init__(self, values=None, scale=None, spec: PackedDotSpec = None,
+                 block=None, *, decode_block=None, exact: bool | None = None,
+                 payload=None, words=None, wsc=None, zp_row=None, w_f32=None,
+                 prepack: bool = True):
+        if spec is None:
+            raise ValueError("DspTunedLeaf needs its PackedDotSpec")
+        self.scale = scale
+        self.spec = spec
+        self.block = tuple(block) if block is not None else None
+        self.decode_block = (
+            tuple(decode_block) if decode_block is not None else None
+        )
+        self.exact = spec.provably_exact if exact is None else bool(exact)
+        if payload is None:
+            if values is None:
+                raise ValueError("DspTunedLeaf needs values or payload")
+            values = jnp.asarray(values)
+            if spec.bits_w <= 4 and values.shape[-2] % 2 == 0:
+                payload = pack_signed_nibbles(values)
+            else:
+                payload = values.astype(jnp.int8)
+        self.payload = payload
+        self.words = words
+        self.wsc = wsc
+        self.zp_row = zp_row
+        self.w_f32 = w_f32
+        if prepack and words is None and values is not None:
+            self._prepack(values)
+
+    @property
+    def nibble_packed(self) -> bool:
+        return self.payload.dtype == jnp.uint8
+
+    @property
+    def values(self) -> jax.Array:
+        """The signed plan-grid integers, decoded from storage (int8)."""
+        if self.nibble_packed:
+            return unpack_signed_nibbles(self.payload)
+        return self.payload
+
+    def _prepack(self, values) -> None:
+        """Build the compute operands once (engine build time)."""
+        v32 = values.astype(jnp.int32)
+        zp = 1 << (self.spec.bits_a - 1)
+
+        def one(m):
+            packed = ref.pack_weight_words(m, self.spec)
+            return packed.words, packed.wsc, zero_point_correction(m, zp)
+
+        if v32.ndim == 2:
+            self.words, self.wsc, self.zp_row = one(v32)
+        else:
+            lead = v32.shape[:-2]
+            flat = v32.reshape((-1,) + v32.shape[-2:])
+            if self.spec.uses_mr:
+                words, wsc, zp_row = jax.vmap(one)(flat)
+                self.wsc = wsc.reshape(lead + wsc.shape[1:])
+            else:
+                words, _, zp_row = jax.vmap(lambda m: one(m))(flat)
+            self.words = words.reshape(lead + words.shape[1:])
+            self.zp_row = zp_row.reshape(lead + zp_row.shape[1:])
+        # the f32 shortcut is only bit-safe when the plan is proven exact
+        # AND every partial sum fits the f32 mantissa
+        k = v32.shape[-2]
+        max_a = (1 << self.spec.bits_a) - 1
+        max_w = 1 << (self.spec.bits_w - 1)
+        if self.exact and ref.exact_int_matmul_fits_f32(k, max_a, max_w):
+            self.w_f32 = values.astype(jnp.float32)
+
+    @property
+    def prepacked(self) -> bool:
+        return self.words is not None
+
+    def block_for(self, m: int):
+        """Phase-appropriate tuned block: decode GEMVs (small m) get the
+        decode-tuned block, prefill the general one."""
+        from ..kernels.packed_matmul import DECODE_BLOCK
+
+        if m <= DECODE_BLOCK[0] and self.decode_block is not None:
+            return self.decode_block
+        return self.block
 
     def tree_flatten(self):
-        return (self.values, self.scale), (self.spec, self.block)
+        children = (self.payload, self.scale, self.words, self.wsc,
+                    self.zp_row, self.w_f32)
+        aux = (self.spec, self.block, self.decode_block, self.exact)
+        return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], *aux)
+        leaf = cls.__new__(cls)
+        (leaf.payload, leaf.scale, leaf.words, leaf.wsc, leaf.zp_row,
+         leaf.w_f32) = children
+        leaf.spec, leaf.block, leaf.decode_block, leaf.exact = aux
+        return leaf
 
 
 def iter_packable_weights(
@@ -119,22 +252,100 @@ def iter_packable_weights(
             yield from iter_packable_weights(v, min_dim, p)
 
 
-def _pack_matrix(w: jax.Array) -> dict:
-    """(…, d_in, d_out) float -> packed int4 nibbles + per-channel scale."""
+# ---- projection fusion ----------------------------------------------------
+
+
+def fuse_projection_weights(params, fuse_attn: bool = True,
+                            fuse_mlp: bool = True):
+    """Engine-build fusion of same-input projections (packed modes only).
+
+    Attention's q/k/v and SwiGLU's up/gate each consume the same activation;
+    concatenating their weights along the output axis at build time turns
+    three (two) GEMVs per decode step into one, and — because both weight
+    and activation quantization are per-output-channel / per-row — the fused
+    quantized matmul is BIT-IDENTICAL per column to the unfused one.  Only
+    self-attention blocks are fused (cross-attention's q and k/v read
+    different inputs), recognized structurally: a dict holding wq/wk/wv
+    sub-dicts under any key except ``xattn``.  Biases concatenate alongside.
+
+    ``fuse_attn``/``fuse_mlp`` gate the two fusion sites independently: on
+    backends where the fused qkv output must be re-sliced through the head
+    reshape (CPU XLA), attention fusion can cost more than the saved GEMV
+    dispatches, while up|gate fusion is a pure win — the serving engine maps
+    its ``fuse_projections`` config onto these switches.
+    """
+
+    def is_linear(d):
+        return isinstance(d, dict) and "w" in d and hasattr(d["w"], "ndim")
+
+    def walk(tree):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for k, v in tree.items():
+            if (
+                fuse_attn
+                and k != "xattn"
+                and isinstance(v, dict)
+                and all(is_linear(v.get(n)) for n in ("wq", "wk", "wv"))
+            ):
+                v = dict(v)
+                parts = [v.pop("wq"), v.pop("wk"), v.pop("wv")]
+                fused = {"w": jnp.concatenate([p["w"] for p in parts], axis=-1)}
+                if all("b" in p for p in parts):
+                    fused["b"] = jnp.concatenate(
+                        [p["b"] for p in parts], axis=-1
+                    )
+                out[k] = {"wqkv": fused, **{n: walk(s) for n, s in v.items()}}
+            elif (
+                fuse_mlp
+                and isinstance(v, dict)
+                and all(is_linear(v.get(n)) for n in ("up", "gate", "down"))
+                and v["up"]["w"].shape == v["gate"]["w"].shape
+            ):
+                v = dict(v)
+                up, gate = v.pop("up"), v.pop("gate")
+                fused = {"w": jnp.concatenate([up["w"], gate["w"]], axis=-1)}
+                if "b" in up and "b" in gate:
+                    fused["b"] = jnp.concatenate([up["b"], gate["b"]], axis=-1)
+                out[k] = {"upgate": fused, **{n: walk(s) for n, s in v.items()}}
+            else:
+                out[k] = walk(v)
+        return out
+
+    return walk(params)
+
+
+def _pack_matrix(w: jax.Array, prepack: bool = False) -> dict:
+    """(…, d_in, d_out) float -> packed int4 nibbles + per-channel scale.
+
+    ``prepack=True`` (engine build) additionally stores ``w_f32`` — the
+    int4 grid decoded once and cast to f32 — so the decode fast path runs
+    the exact int8×int4 matmul through the f32 GEMM unit instead of
+    unpacking nibbles and looping an integer dot every step."""
     lead = w.shape[:-2]
     d_in, d_out = w.shape[-2:]
     w2 = w.reshape((-1, d_in, d_out)).astype(jnp.float32)
     q = jax.vmap(lambda m: quantize_signed(m, bits=4, axis=0))(w2)
     packed = jax.vmap(ref.pack_int4_weights)(q.values)
-    return {
+    leaf = {
         "packed": packed.reshape(lead + (d_in // 2, d_out)),
         "scale": q.scale.reshape(lead + (1, d_out)).astype(jnp.float32),
     }
+    if prepack and ref.exact_int_matmul_fits_f32(d_in, 128, 8):
+        leaf["w_f32"] = (
+            q.values.astype(jnp.float32).reshape(lead + (d_in, d_out))
+        )
+    return leaf
 
 
 def _tune_matrix(w: jax.Array, spec: PackedDotSpec,
-                 block: tuple[int, int, int] | None) -> DspTunedLeaf:
-    """(…, d_in, d_out) float -> plan-grid signed ints + per-channel scale."""
+                 block: tuple[int, int, int] | None,
+                 decode_block: tuple[int, int, int] | None = None,
+                 exact: bool | None = None,
+                 prepack: bool = True) -> DspTunedLeaf:
+    """(…, d_in, d_out) float -> plan-grid signed ints + per-channel scale
+    (+ the prepacked compute operands when ``prepack``)."""
     lead = w.shape[:-2]
     d_in, d_out = w.shape[-2:]
     w2 = w.reshape((-1, d_in, d_out)).astype(jnp.float32)
@@ -144,6 +355,9 @@ def _tune_matrix(w: jax.Array, spec: PackedDotSpec,
         scale=q.scale.reshape(lead + (1, d_out)).astype(jnp.float32),
         spec=spec,
         block=block,
+        decode_block=decode_block,
+        exact=exact,
+        prepack=prepack,
     )
 
 
@@ -151,10 +365,7 @@ def dequantize_packed(p: dict, dtype=jnp.bfloat16) -> jax.Array:
     """Graph-level unpack: two arithmetic shifts + scale.  On real TPU the
     Pallas kernel (`kernels/int4_matmul.py`) does this inside VMEM; the
     jnp path is the portable equivalent with the same HBM byte profile."""
-    b = p["packed"].astype(jnp.int8)
-    lo = (b << 4) >> 4  # arithmetic shifts sign-extend the nibbles
-    hi = b >> 4
-    w = jnp.stack([lo, hi], axis=-2)  # (..., K/2, 2, N)
+    w = unpack_signed_nibbles(p["packed"])
     shape = p["packed"].shape[:-2] + (2 * p["packed"].shape[-2], p["packed"].shape[-1])
     return (w.reshape(shape).astype(jnp.float32) * p["scale"]).astype(dtype)
 
@@ -186,28 +397,38 @@ def _convert_tree(params, paths_to_convert: dict, convert):
     return walk(params)
 
 
-def quantize_params_for_serving(params, min_dim: int = MIN_DIM):
+def quantize_params_for_serving(params, min_dim: int = MIN_DIM,
+                                prepack: bool = False):
     """Replace every large matmul weight leaf 'w' (and MoE expert stacks)
     with its packed representation.  Tree structure changes: callers use
-    the transformed tree for sharding/eval_shape as well."""
+    the transformed tree for sharding/eval_shape as well.
+
+    ``prepack=False`` (default) stores nibbles only — the checkpoint/HBM
+    density representation; the engine passes ``prepack=True`` to also
+    build the decode-speed operands."""
     targets = {p: None for p, _ in iter_packable_weights(params, min_dim)}
-    return _convert_tree(params, targets, lambda w, _: _pack_matrix(w))
+    return _convert_tree(
+        params, targets, lambda w, _: _pack_matrix(w, prepack=prepack)
+    )
 
 
 def quantize_for_serving(params, mode: str = "int4_packed",
-                         min_dim: int = MIN_DIM, plans=None):
+                         min_dim: int = MIN_DIM, plans=None,
+                         prepack: bool = True):
     """Engine-build-time weight conversion step.
 
     ``int4_packed`` packs every large matmul weight to nibbles *once*; the
-    decode path (`packed_linear.apply_linear`) then runs the paper's packed
-    matmul kernel directly on the stored nibbles every step — no per-call
-    re-quantization.
+    decode path (`packed_linear.apply_linear`) then runs the packed matmul
+    straight off the stored representation every step — no per-call
+    re-quantization, and (with ``prepack``, the engine default) no per-step
+    unpacking either.
 
     ``dsp_tuned`` quantizes each weight to its tuned plan (``plans``: a
     ``{tree_path: PlanReport-or-spec}`` table from
     ``tuning.plan_linear_layers``; paths missing from the table fall back
-    to the exact int4 preset) and stores :class:`DspTunedLeaf` leaves, so
-    decode runs per-layer pair-packed arithmetic off stored integers.
+    to the exact int4 preset) and stores :class:`DspTunedLeaf` leaves —
+    nibble/int8 payload plus prepacked pair words — so decode runs
+    per-layer pair-packed arithmetic off operands packed once.
 
     The other modes keep float weights (``int8`` and ``dsp_packed``
     quantize at the point of use through their ``LinearSpec.mode``
@@ -216,20 +437,28 @@ def quantize_for_serving(params, mode: str = "int4_packed",
     if mode not in SERVING_MODES:
         raise ValueError(f"serving mode {mode!r} not in {SERVING_MODES}")
     if mode == "int4_packed":
-        return quantize_params_for_serving(params, min_dim=min_dim)
+        return quantize_params_for_serving(
+            params, min_dim=min_dim, prepack=prepack
+        )
     if mode == "dsp_tuned":
         plans = plans or {}
         targets = {}
         for p, _ in iter_packable_weights(params, min_dim):
             plan = plans.get(p)
             if plan is None:
-                spec, block = INT4_EXACT, None
+                spec, block, dblock, exact = INT4_EXACT, None, None, None
             elif isinstance(plan, PackedDotSpec):
-                spec, block = plan, None
+                spec, block, dblock, exact = plan, None, None, None
             else:  # tuning.PlanReport
                 spec, block = plan.spec, plan.block
-            targets[p] = (spec, block)
+                dblock = getattr(plan, "decode_block", None)
+                exact = plan.mae == 0 and (
+                    plan.exhaustive or plan.spec.provably_exact
+                )
+            targets[p] = (spec, block, dblock, exact)
         return _convert_tree(
-            params, targets, lambda w, sb: _tune_matrix(w, sb[0], sb[1])
+            params, targets,
+            lambda w, t: _tune_matrix(w, t[0], t[1], t[2], t[3],
+                                      prepack=prepack),
         )
     return params

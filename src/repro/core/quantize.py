@@ -63,11 +63,16 @@ def quantize_signed(x: jax.Array, bits: int = 4, axis=-1) -> QuantizedTensor:
 
 
 def quantize_unsigned(x: jax.Array, bits: int = 4, axis=-1) -> QuantizedTensor:
-    """Offset-binary quantization: values in ``[0, 2^b - 1]``, zp at mid."""
+    """Offset-binary quantization: values in ``[0, 2^b - 1]``, zp at mid.
+
+    The payload is uint8: an int8 store would saturate the upper half of the
+    8-bit offset-binary range (float→int8 conversion clamps at 127, so every
+    value above the zero point collapsed — a silent a8 activation bug the
+    prepacked kernel's fused-quantize parity check caught)."""
     zp = 1 << (bits - 1)
     qmax = zp - 1
     scale = _absmax_scale(x, axis, qmax)
-    q = jnp.clip(jnp.round(x / scale) + zp, 0, (1 << bits) - 1).astype(jnp.int8)
+    q = jnp.clip(jnp.round(x / scale) + zp, 0, (1 << bits) - 1).astype(jnp.uint8)
     return QuantizedTensor(q, scale, bits=bits, zero_point=zp)
 
 

@@ -3,6 +3,12 @@
 Handles shape padding to block multiples, scale/zero-point bookkeeping and
 backend dispatch (``interpret=True`` everywhere except real TPUs), and
 exposes a float-in/float-out ``packed_linear_apply`` used by the model zoo.
+
+The ``*_prepacked`` entries are the serving decode fast path: weights
+arrive as operands packed ONCE at engine build (``core.packed_params``), so
+a decode step does no per-call weight packing, no zero-point reduction and
+no M-padding to MXU tiles — the historical packed-decode tax was a ~64x
+padded GEMV plus a full weight repack per K-step per step.
 """
 
 from __future__ import annotations
@@ -19,16 +25,19 @@ from ..core.quantize import (
 )
 from . import ref
 from .int4_matmul import int4_matmul
-from .packed_matmul import packed_matmul
-from .ref import INT4_EXACT, PackedDotSpec
+from .packed_matmul import default_block_for, packed_matmul, packed_matmul_prepacked
 
 __all__ = [
     "auto_interpret",
     "packed_matmul_f32",
     "dsp_tuned_matmul_f32",
+    "dsp_tuned_matmul_prepacked_f32",
     "int4_matmul_f32",
+    "int4_prepacked_matmul_f32",
     "quantized_matmul_ref",
 ]
+
+from .ref import INT4_EXACT, PackedDotSpec
 
 
 def auto_interpret() -> bool:
@@ -91,14 +100,10 @@ def dsp_tuned_matmul_f32(
 ) -> jax.Array:
     """float (M, K) × pre-quantized signed (K, N) through a tuned plan.
 
-    The serving-side companion of ``packed_matmul_f32``: weights were
-    quantized ONCE at engine build (``packed_params.quantize_for_serving``
-    with mode ``dsp_tuned``) onto ``spec``'s signed grid, so every decode
-    step only quantizes the activations and runs the packed integer path —
-    no per-call weight re-quantization.  Multi-DSP column plans
-    (``spec.n_columns > 1``, e.g. every a8w8 plan) need no special casing
-    here: activations quantize to the full ``spec.bits_a`` grid and the
-    kernel slices them into column streams internally.
+    The per-call companion of :func:`dsp_tuned_matmul_prepacked_f32` for
+    weights that are quantized but not prepacked (weights repacked into
+    words on every call) — kept for stacked leaves outside a layer scan and
+    for benchmarking the repacking tax itself.
     """
     xq = quantize_unsigned(x, bits=spec.bits_a, axis=-1)
     wv = w_values.astype(jnp.int32)
@@ -113,29 +118,139 @@ def dsp_tuned_matmul_f32(
     return acc.astype(jnp.float32) * xq.scale * w_scale
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "block", "interpret", "use_kernel", "exact_f32"),
+)
+def dsp_tuned_matmul_prepacked_f32(
+    x: jax.Array,
+    words: jax.Array,
+    wsc: jax.Array | None,
+    zp_row: jax.Array,
+    w_scale: jax.Array,
+    w_f32: jax.Array | None,
+    spec: PackedDotSpec,
+    block: tuple[int, int, int] | None = None,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+    exact_f32: bool = False,
+) -> jax.Array:
+    """float (M, K) × PREPACKED tuned-plan weights → f32 (M, N).
+
+    The serving decode fast path: ``words``/``wsc``/``zp_row``/``w_f32``
+    were built once at engine build (``DspTunedLeaf``), so the per-step work
+    is activation quantization plus the compute stage — nothing repacks.
+
+    ``exact_f32`` (only legal when the plan is PROVEN exact and the operand
+    bound fits the f32 mantissa — the leaf's ``w_f32`` existence encodes
+    both) evaluates the identical integer matmul on the f32 GEMM unit:
+    bit-for-bit the packed kernel's output, at dense-float speed on
+    backends whose integer dots lower to scalar loops.
+
+    With the kernel path, the activation quantize is fused into the kernel
+    prologue (``x_scale``/``x_zp``): the int activation tensor never stages
+    through HBM.
+    """
+    m = x.shape[0]
+    if exact_f32 and w_f32 is not None:
+        # quantize_unsigned without the uint8 round-trip (values are exact
+        # small integers either way; the clip never binds — |x/scale| is
+        # bounded by zp-1 by construction); the f32 GEMM then computes the
+        # exact packed-plan matmul — see the docstring
+        zp = 1 << (spec.bits_a - 1)
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        x_scale = jnp.maximum(amax, 1e-8) / (zp - 1)
+        q = jnp.round(x / x_scale) + zp
+        acc = q @ w_f32  # exact: fits the f32 mantissa
+        acc = acc - zp_row.astype(jnp.float32)[None, :]
+        return acc * x_scale * w_scale
+    if use_kernel:
+        # fused-quantize prologue: pass raw f32 + per-row scale to the kernel
+        zp = 1 << (spec.bits_a - 1)
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        x_scale = jnp.maximum(amax, 1e-8) / (zp - 1)
+        acc = packed_matmul_prepacked(
+            x.astype(jnp.float32), words, wsc, spec=spec,
+            block=block or default_block_for(m, spec),
+            interpret=auto_interpret() if interpret is None else interpret,
+            x_scale=x_scale, x_zp=zp,
+        )
+        out_scale = x_scale
+    else:
+        xq = quantize_unsigned(x, bits=spec.bits_a, axis=-1)
+        acc = ref.ref_packed_matmul_prepacked(
+            xq.values.astype(jnp.int32), ref.PackedWeightWords(words, wsc),
+            spec,
+        )
+        out_scale = xq.scale
+    acc = acc - zp_row[None, :]
+    return acc.astype(jnp.float32) * out_scale * w_scale
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "use_kernel"))
 def int4_matmul_f32(
     x: jax.Array,
     w_packed: jax.Array,
     w_scale: jax.Array,
-    block=(128, 128, 128),
+    block=None,
     interpret: bool | None = None,
     use_kernel: bool = True,
 ) -> jax.Array:
-    """float (M, K) × packed int4 (K//2, N) → f32, int8 activations."""
+    """float (M, K) × packed int4 (K//2, N) → f32, int8 activations.
+
+    The ref path runs unpadded (an (M, K, N) problem needs no MXU tile
+    grid); the kernel path pads to a decode-aware block — small-M GEMV
+    blocks for decode shapes instead of 128-row tiles that used to pad a
+    2-slot decode ~64x in M.
+    """
     m, k = x.shape
     xq = quantize_signed(x, bits=8, axis=-1)
-    bm, bn, bk = block
-    xv = _pad_to(_pad_to(xq.values, bm, 0), bk, 1)
-    wv = _pad_to(_pad_to(w_packed, bk // 2, 0), bn, 1)
     if use_kernel:
+        if block is None:
+            block = default_block_for(m)
+        bm, bn, bk = block
+        xv = _pad_to(_pad_to(xq.values, bm, 0), bk, 1)
+        wv = _pad_to(_pad_to(w_packed, bk // 2, 0), bn, 1)
         acc = int4_matmul(
             xv, wv, block=block,
             interpret=auto_interpret() if interpret is None else interpret,
         )[:m, : w_packed.shape[1]]
     else:
-        acc = ref.ref_int4_matmul(xv, wv)[:m, : w_packed.shape[1]]
+        acc = ref.ref_int4_matmul(xq.values, w_packed)
     return acc.astype(jnp.float32) * xq.scale * w_scale
+
+
+def _quantize_signed_f32(x: jax.Array, bits: int):
+    """``quantize_signed`` without the int8 round-trip: the quantized grid
+    values are computed (and kept) in f32 — they are exact small integers,
+    so the downstream f32 GEMM sees bit-identical operands while decode
+    skips two dtype conversions per linear.  The clip is omitted because it
+    never binds: ``|x / scale| <= qmax`` by the scale's construction, so
+    ``round`` already lands inside the signed grid."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    return jnp.round(x / scale), scale
+
+
+@jax.jit
+def int4_prepacked_matmul_f32(
+    x: jax.Array,
+    w_f32: jax.Array,
+    w_scale: jax.Array,
+) -> jax.Array:
+    """float (M, K) × int4 grid decoded once to f32 (K, N) → f32 (M, N).
+
+    The int4_packed serving fast path: ``w_f32`` holds the nibble grid
+    decoded at engine build.  With int8 activations every partial sum is an
+    integer below 2**24 (guarded at build via
+    ``ref.exact_int_matmul_fits_f32``), so the f32 GEMM computes the exact
+    int8×int4 integer matmul — bit-identical to ``ref.ref_int4_matmul`` on
+    the stored nibbles — while hitting the dense-float unit.
+    """
+    q, scale = _quantize_signed_f32(x, bits=8)
+    acc = q @ w_f32
+    return acc * scale * w_scale
 
 
 def quantized_matmul_ref(x: jax.Array, w: jax.Array, bits: int = 4) -> jax.Array:

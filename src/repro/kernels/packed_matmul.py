@@ -41,11 +41,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import ref
-from .ref import PackedDotSpec, INT4_EXACT
+from .ref import PackedDotSpec, PackedWeightWords, INT4_EXACT
 
-__all__ = ["packed_matmul", "DEFAULT_BLOCK"]
+__all__ = [
+    "packed_matmul",
+    "packed_matmul_prepacked",
+    "DEFAULT_BLOCK",
+    "DECODE_BLOCK",
+    "default_block_for",
+]
 
 DEFAULT_BLOCK = (128, 128, 128)  # (bm, bn, bk) — MXU/VPU aligned
+# Decode GEMVs carry a handful of rows (the serving slot count); a 128-row
+# M block would pad them ~16-64x.  The small-M default keeps the grid square
+# in N/K while the M axis hugs the real batch.
+DECODE_BLOCK = (8, 128, 128)
+
+
+def default_block_for(m: int, spec: PackedDotSpec | None = None):
+    """Phase-appropriate default block: small-M GEMV blocks for decode-sized
+    ``m``, the MXU-aligned default otherwise.  ``spec`` (when given) bumps
+    ``bk`` up to one whole extraction chunk."""
+    block = DECODE_BLOCK if m <= DECODE_BLOCK[0] else DEFAULT_BLOCK
+    if spec is not None and block[2] % spec.chunk:
+        block = (block[0], block[1], spec.chunk * -(-block[2] // spec.chunk))
+    return block
 
 
 def _kernel(x_ref, w_ref, out_ref, *, spec: PackedDotSpec):
@@ -115,4 +135,151 @@ def packed_matmul(
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
         interpret=interpret,
     )(x_u, w_s)
+    return out[:m, :n]
+
+
+# ---- prepacked entry ------------------------------------------------------
+
+
+def _quantize_tile(x, scale_ref, zp: int):
+    """Fused activation-quantize prologue: f32 tile → offset-binary ints.
+
+    The per-row scale is the global row absmax (computed once outside — a
+    (m, 1) reduction), so quantizing tile-by-tile inside the kernel is
+    exactly the staged quantization; the int activation tensor never round
+    -trips through HBM."""
+    q = jnp.round(x / scale_ref[...]) + zp
+    return jnp.clip(q, 0, 2 * zp - 1).astype(jnp.int32)
+
+
+def _prepacked_kernel(x_ref, w_ref, *rest, spec: PackedDotSpec,
+                      x_zp: int | None):
+    """One (bm, bk) × (bk//chunk, n_pairs, bn) step off prepacked words."""
+    if spec.uses_mr:
+        if x_zp is not None:
+            wsc_ref, scale_ref, out_ref = rest
+        else:
+            wsc_ref, out_ref = rest
+            scale_ref = None
+        wsc = wsc_ref[...].astype(jnp.int32)
+    else:
+        if x_zp is not None:
+            scale_ref, out_ref = rest
+        else:
+            (out_ref,) = rest
+            scale_ref = None
+        wsc = None
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    x = (
+        _quantize_tile(x, scale_ref, x_zp)
+        if scale_ref is not None
+        else x.astype(jnp.int32)
+    )
+    words = w_ref[...].astype(jnp.int32)  # (bk//chunk, n_pairs, bn)
+    # compute stage shared VERBATIM with the jnp reference
+    out_ref[...] += ref.packed_tile_matmul_prepacked(x, words, wsc, spec)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "block", "interpret", "x_zp")
+)
+def packed_matmul_prepacked(
+    x: jax.Array,
+    words: jax.Array,
+    wsc: jax.Array | None = None,
+    spec: PackedDotSpec = INT4_EXACT,
+    block: tuple[int, int, int] | None = None,
+    interpret: bool = True,
+    x_scale: jax.Array | None = None,
+    x_zp: int | None = None,
+) -> jax.Array:
+    """(M, K) activations × prepacked weight words → (M, N) int32.
+
+    The serving-side kernel entry: weights arrive as
+    :func:`ref.pack_weight_words` output (packed ONCE at engine build), so
+    no K-step ever rebuilds ``w_words`` or the ``wsc`` contamination stream.
+    Bit-identical to ``packed_matmul(x, w, spec)`` by construction — the
+    compute stage is the same code.
+
+    ``x_scale``/``x_zp`` fuse the activation quantize into the kernel
+    prologue: ``x`` is then the raw f32 activation and ``x_scale`` its
+    per-row quantization scale ((M, 1), the row absmax over the FULL K), so
+    decode does no f32→int staging round-trip through HBM.  Without them
+    ``x`` must already hold offset-binary unsigned ints.
+    """
+    m, k = x.shape
+    n_chunks, n_pairs, n = words.shape
+    kw = n_chunks * spec.chunk
+    if k > kw:
+        raise ValueError(f"activation K={k} exceeds packed weights' K={kw}")
+    if (x_scale is None) != (x_zp is None):
+        raise ValueError("fused quantize needs both x_scale and x_zp")
+    if block is None:
+        block = default_block_for(m, spec)
+    bm, bn, bk = block
+    if bk % spec.chunk:
+        raise ValueError(
+            f"block bk={bk} must be a multiple of spec.chunk={spec.chunk} "
+            f"({spec.name()})"
+        )
+    # One K grid covers both operands: a multiple of bk no smaller than
+    # either the activation's K or the words' K (an x shorter than the
+    # packed weights, e.g. a truncated activation, pads up to the words; a
+    # bk-rounded x pads the words with zero chunks — both bit-transparent).
+    kp = -(-max(x.shape[1], kw) // bk) * bk
+    if x.shape[1] < kp:
+        x = jnp.pad(x, ((0, 0), (0, kp - x.shape[1])))
+    if kp > kw:
+        pad_chunks = (kp - kw) // spec.chunk
+        words = jnp.pad(words, ((0, pad_chunks), (0, 0), (0, 0)))
+        if wsc is not None:
+            wsc = jnp.pad(wsc, ((0, pad_chunks), (0, 0), (0, 0), (0, 0)))
+        n_chunks += pad_chunks
+    x = _pad_axis(x, bm, 0)
+    words = _pad_axis(words, bn, 2)
+    if wsc is not None:
+        wsc = _pad_axis(wsc, bn, 3)
+    mp, kp = x.shape
+    np_ = words.shape[2]
+    bkc = bk // spec.chunk  # word-chunks per K step
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bkc, n_pairs, bn), lambda i, j, kk: (kk, 0, j)),
+    ]
+    operands = [x, words]
+    if spec.uses_mr:
+        if wsc is None:
+            raise ValueError(
+                f"{spec.name()} is an mr plan: packed_matmul_prepacked needs "
+                "the wsc contamination operands from pack_weight_words"
+            )
+        in_specs.append(
+            pl.BlockSpec((bkc, n_pairs, 2, bn), lambda i, j, kk: (kk, 0, 0, j))
+        )
+        operands.append(wsc)
+    if x_scale is not None:
+        x_scale = x_scale.astype(jnp.float32)
+        pad_m = (-x_scale.shape[0]) % bm
+        if pad_m:  # pad with ones: padded rows must not divide by zero
+            x_scale = jnp.pad(
+                x_scale, ((0, pad_m), (0, 0)), constant_values=1.0
+            )
+        in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)))
+        operands.append(x_scale)
+    out = pl.pallas_call(
+        functools.partial(_prepacked_kernel, spec=spec, x_zp=x_zp),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(*operands)
     return out[:m, :n]

@@ -26,6 +26,7 @@ equality*, errors included.
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,7 @@ import numpy as np
 
 __all__ = [
     "PackedDotSpec",
+    "PackedWeightWords",
     "CORRECTIONS",
     "INT4_EXACT",
     "INT4_NAIVE",
@@ -43,9 +45,13 @@ __all__ = [
     "contamination_term",
     "contamination_terms",
     "slice_column",
+    "pack_weight_words",
     "packed_tile_matmul",
+    "packed_tile_matmul_prepacked",
     "ref_packed_matmul",
+    "ref_packed_matmul_prepacked",
     "ref_quantized_matmul",
+    "exact_int_matmul_fits_f32",
     "pack_int4_weights",
     "unpack_int4_weights",
     "ref_int4_matmul",
@@ -364,12 +370,62 @@ def _pad_k(x_u: jax.Array, w_s: jax.Array, mult: int):
     return x_u, w_s
 
 
-def packed_tile_matmul(x_u: jax.Array, w_s: jax.Array,
-                       spec: PackedDotSpec) -> jax.Array:
-    """The ENTIRE packed-dot tile compute, shared verbatim by the jnp
-    reference and the Pallas kernel body (so the two are bit-identical by
-    construction): (m, k) unsigned × (k, n) signed → (m, n) int32, with
-    ``k`` a multiple of ``spec.chunk``.
+class PackedWeightWords(NamedTuple):
+    """Weights packed ONCE for reuse across many packed matmuls.
+
+    ``words``: (n_chunks, n_pairs, n) int32 — each pair's packed word
+    ``w_even + (w_odd << p)`` grouped into extraction chunks.
+    ``wsc``: (n_chunks, n_pairs, 2, n) int32 contamination operands, built
+    ONLY for mr corrections (the masked high-field dot needs the raw paired
+    weights); ``None`` for exact-spacing plans — non-mr plans pay no
+    reshape/traffic for an operand stream they never read.
+    """
+
+    words: jax.Array
+    wsc: jax.Array | None
+
+    @property
+    def k(self) -> int:
+        """Contraction length the words cover (a multiple of the chunk)."""
+        return self.words.shape[-3] * 2 * self.words.shape[-2]
+
+
+def pack_weight_words(w_s: jax.Array, spec: PackedDotSpec) -> PackedWeightWords:
+    """The PACK stage of the packed matmul: (k, n) signed ints → reusable
+    :class:`PackedWeightWords`.  Ragged ``k`` is zero-padded to a whole
+    number of extraction chunks (bit-transparent — see :func:`_pad_k`).
+
+    This is the "pack once" half of the paper's economics: operands are
+    packed a single time (at quantize/engine-build time in serving) and the
+    words are reused by every subsequent matmul, instead of being rebuilt
+    from the stored integers on every K-step of every call.
+    """
+    k, n = w_s.shape
+    pad = (-k) % spec.chunk
+    if pad:
+        w_s = jnp.pad(w_s, ((0, pad), (0, 0)))
+        k += pad
+    n_chunks = k // spec.chunk
+    ws = w_s.astype(jnp.int32).reshape(k // 2, 2, n)
+    words = (ws[:, 1, :] + (ws[:, 0, :] << spec.p)).reshape(
+        n_chunks, spec.n_pairs, n
+    )
+    wsc = ws.reshape(n_chunks, spec.n_pairs, 2, n) if spec.uses_mr else None
+    return PackedWeightWords(words, wsc)
+
+
+def packed_tile_matmul_prepacked(
+    x_u: jax.Array,
+    words: jax.Array,
+    wsc: jax.Array | None,
+    spec: PackedDotSpec,
+) -> jax.Array:
+    """The COMPUTE stage: already-packed weight words × unsigned activations.
+
+    Shared verbatim by the jnp reference and BOTH Pallas kernel bodies (the
+    repacking and the prepacked entry), so all of them are bit-identical by
+    construction.  ``x_u``: (m, k) with ``k = n_chunks * spec.chunk``;
+    ``words``/``wsc`` as produced by :func:`pack_weight_words`.
 
     Per column: pack the activation slice's pair words, contract ALL
     extraction groups in one chunk-batched dot_general (n_pairs wide
@@ -380,13 +436,12 @@ def packed_tile_matmul(x_u: jax.Array, w_s: jax.Array,
     Multi-column plans reuse the SAME packed weight words for every stream.
     """
     m, k = x_u.shape
-    n = w_s.shape[1]
-    n_chunks = k // spec.chunk
-    ws = w_s.astype(jnp.int32).reshape(k // 2, 2, n)
-    w_words = (ws[:, 1, :] + (ws[:, 0, :] << spec.p)).reshape(
-        n_chunks, spec.n_pairs, n
-    )
-    wsc = ws.reshape(n_chunks, spec.n_pairs, 2, n)
+    n_chunks, n_pairs, n = words.shape
+    if spec.uses_mr and wsc is None:
+        raise ValueError(
+            f"{spec.name()} is an mr plan: the prepacked compute stage needs "
+            "the contamination operands (pack_weight_words builds them)"
+        )
     acc = jnp.zeros((m, n), dtype=jnp.int32)
     for j in range(spec.n_columns):
         xa = slice_column(x_u, spec, j).reshape(m, k // 2, 2)
@@ -395,7 +450,7 @@ def packed_tile_matmul(x_u: jax.Array, w_s: jax.Array,
         )
         partial = jax.lax.dot_general(   # (n_chunks, m, n), batched chunks
             a_words,
-            w_words,
+            words,
             (((2,), (1,)), ((1,), (0,))),
             preferred_element_type=jnp.int32,
         )
@@ -410,6 +465,19 @@ def packed_tile_matmul(x_u: jax.Array, w_s: jax.Array,
         shift = spec.column_shift(j)
         acc = acc + (col << shift if shift else col)
     return acc
+
+
+def packed_tile_matmul(x_u: jax.Array, w_s: jax.Array,
+                       spec: PackedDotSpec) -> jax.Array:
+    """Pack + compute in one call (the per-call path): (m, k) unsigned ×
+    (k, n) signed → (m, n) int32, ``k`` a multiple of ``spec.chunk``.
+
+    Kept as the kernel-body entry for callers whose weights change every
+    call (training-style use); serving packs once via
+    :func:`pack_weight_words` and runs only the compute stage per step.
+    """
+    packed = pack_weight_words(w_s, spec)
+    return packed_tile_matmul_prepacked(x_u, packed.words, packed.wsc, spec)
 
 
 def ref_packed_matmul(
@@ -430,6 +498,41 @@ def ref_packed_matmul(
     """
     x_u, w_s = _pad_k(x_u, w_s, spec.chunk)
     return packed_tile_matmul(x_u, w_s, spec)
+
+
+def ref_packed_matmul_prepacked(
+    x_u: jax.Array,
+    packed: PackedWeightWords,
+    spec: PackedDotSpec = INT4_EXACT,
+) -> jax.Array:
+    """jnp prepacked matmul: consume :func:`pack_weight_words` output.
+
+    Bit-identical to ``ref_packed_matmul(x_u, w_s, spec)`` for the weights
+    the words were packed from (the compute stage is shared code); ``x_u``'s
+    K is zero-padded up to the words' chunk grid."""
+    k = x_u.shape[1]
+    pad = packed.k - k
+    if pad < 0:
+        raise ValueError(
+            f"activation K={k} exceeds the packed weights' K={packed.k}"
+        )
+    if pad:
+        x_u = jnp.pad(x_u, ((0, 0), (0, pad)))
+    return packed_tile_matmul_prepacked(x_u, packed.words, packed.wsc, spec)
+
+
+def exact_int_matmul_fits_f32(k: int, max_a: int, max_w: int) -> bool:
+    """Whether an integer matmul with |a| <= max_a, |w| <= max_w over a
+    K-long contraction is EXACT when evaluated in f32.
+
+    Every partial sum is an integer of magnitude <= k * max_a * max_w; f32
+    represents all integers up to 2**24 exactly, so as long as that bound
+    fits, an f32 GEMM (which hits the fast dense path on CPU/GPU backends
+    where int dots lower to scalar loops) returns bit-identical integers to
+    the int32 dot.  The serving fast path uses this to run *exact* packed
+    plans through the float unit without changing a single output bit.
+    """
+    return k * max_a * max_w < 1 << 24
 
 
 def ref_quantized_matmul(x_u: jax.Array, w_s: jax.Array) -> jax.Array:

@@ -48,7 +48,20 @@ def main() -> None:
                          "(8-bit widths serve multi-DSP column-packed plans)")
     ap.add_argument("--autotune-plans", action="store_true",
                     help="dsp_tuned: wall-clock block-size sweep per layer "
-                         "shape (slower engine build, measured ranking)")
+                         "shape and per serving phase (slower engine build, "
+                         "measured ranking; decode GEMVs get their own "
+                         "small-M blocks)")
+    ap.add_argument("--no-prepack", dest="prepack", action="store_false",
+                    help="skip building device-resident prepacked weight "
+                         "operands at engine build (storage-only leaves; "
+                         "decode falls back to per-step packing)")
+    ap.add_argument("--fuse", dest="fuse_projections", default="none",
+                    choices=["none", "mlp", "all"],
+                    help="engine-build projection fusion for packed modes: "
+                         "'mlp' fuses up|gate, 'all' also fuses q|k|v "
+                         "(fused splits cost more than they save inside the "
+                         "scanned CPU decode step — default 'none'; flip on "
+                         "for TPU)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -63,11 +76,20 @@ def main() -> None:
         seed=args.seed, error_budget=args.error_budget,
         autotune_plans=args.autotune_plans,
         plan_bits=args.plan_bits,
+        prepack=args.prepack,
+        fuse_projections=args.fuse_projections,
     ))
     if engine.plan_table:
         plans = {r.name for r in engine.plan_table.values()}
         print(f"[serve] tuned packing plans (budget {args.error_budget}): "
               + ", ".join(sorted(plans)))
+        if args.autotune_plans:
+            per_phase = {
+                f"{r.name}: prefill {r.block} / decode {r.decode_block}"
+                for r in engine.plan_table.values()
+            }
+            print("[serve] per-phase tuned blocks: "
+                  + "; ".join(sorted(per_phase)))
     sampling = SamplingParams(args.temperature, args.top_k, args.top_p)
 
     rng = np.random.default_rng(0)

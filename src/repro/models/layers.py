@@ -115,10 +115,23 @@ def attention(
     hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     spec = cfg.quant
 
-    q = constrain(_split_heads(apply_linear(params["wq"], x, spec), nh, hd), "heads")
-    src = x if kv_x is None else kv_x
-    k = constrain(_split_heads(apply_linear(params["wk"], src, spec), nkv, hd), "heads")
-    v = constrain(_split_heads(apply_linear(params["wv"], src, spec), nkv, hd), "heads")
+    if "wqkv" in params:
+        # engine-build fused projection (packed_params.fuse_projection_weights):
+        # one GEMV for q/k/v per decode step; per-output-channel quantization
+        # makes the fused matmul bit-identical per column to the unfused one.
+        # Cross-attention never fuses (q and k/v read different inputs).
+        assert kv_x is None, "fused qkv is self-attention only"
+        qkv = apply_linear(params["wqkv"], x, spec)
+        qe = nh * hd
+        q, k, v = jnp.split(qkv, (qe, qe + nkv * hd), axis=-1)
+        q = constrain(_split_heads(q, nh, hd), "heads")
+        k = constrain(_split_heads(k, nkv, hd), "heads")
+        v = constrain(_split_heads(v, nkv, hd), "heads")
+    else:
+        q = constrain(_split_heads(apply_linear(params["wq"], x, spec), nh, hd), "heads")
+        src = x if kv_x is None else kv_x
+        k = constrain(_split_heads(apply_linear(params["wk"], src, spec), nkv, hd), "heads")
+        v = constrain(_split_heads(apply_linear(params["wv"], src, spec), nkv, hd), "heads")
 
     if kv_x is None:
         q = rope(q, positions, cfg.rope_theta)
@@ -264,6 +277,12 @@ def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32, d_ff: int | None = None) 
 
 
 def mlp(params: Params, x: jax.Array, spec: LinearSpec) -> jax.Array:
+    if "upgate" in params:
+        # engine-build fused up|gate (packed_params.fuse_projection_weights):
+        # one GEMV instead of two, bit-identical per output column
+        ug = constrain(apply_linear(params["upgate"], x, spec), "hidden")
+        up, gate = jnp.split(ug, 2, axis=-1)
+        return apply_linear(params["down"], jax.nn.silu(gate) * up, spec)
     if "gate" not in params:  # 2-matrix GELU variant (whisper/starcoder)
         return gelu_mlp(params, x, spec)
     up = constrain(apply_linear(params["up"], x, spec), "hidden")

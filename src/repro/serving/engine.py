@@ -50,7 +50,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.packed_linear import LinearSpec
-from ..core.packed_params import SERVING_MODES, quantize_for_serving
+from ..core.packed_params import (
+    SERVING_MODES,
+    fuse_projection_weights,
+    quantize_for_serving,
+)
 from ..models import transformer as T
 from ..models.config import ModelConfig
 from .sampling import SamplingParams, sample_tokens, slot_key
@@ -70,6 +74,17 @@ class ServeConfig:
     # (see core.packed_params.quantize_for_serving)
     quant_mode: str = "native"
     use_kernel: bool = False   # Pallas kernels vs jnp refs (CPU tests use ref)
+    # engine-build weight preprocessing for the packed decode fast path:
+    # prepack builds device-resident packed operands once (words / zp rows /
+    # f32-exact grids); fuse_projections concatenates same-input projections
+    # so a decode step runs one GEMV where it ran several (bit-identical per
+    # output column — quantization is per-channel).  "mlp" fuses up|gate,
+    # "all" also fuses q|k|v.  Off by default: inside the scanned decode
+    # step on CPU XLA the post-fusion splits cost more than the saved GEMV
+    # dispatches (isolated layers DO win — this is a backend-specific call;
+    # flip it on for TPU runs).
+    prepack: bool = True
+    fuse_projections: bool | str = "none"
     # dsp_tuned plan search: operand widths, MAE-per-extraction budget and
     # whether to wall-clock-autotune block sizes (off by default: the cost
     # proxy ranks identically and engine build stays fast)
@@ -87,6 +102,11 @@ class ServeConfig:
             raise ValueError(
                 f"quant_mode {self.quant_mode!r} not in {SERVING_MODES}"
             )
+        if self.fuse_projections not in (True, False, "none", "mlp", "all"):
+            raise ValueError(
+                f"fuse_projections {self.fuse_projections!r} not in "
+                "(True, False, 'none', 'mlp', 'all')"
+            )
 
 
 class Engine:
@@ -102,6 +122,14 @@ class Engine:
                     use_kernel=serve_cfg.use_kernel,
                 ),
             )
+            fuse = serve_cfg.fuse_projections
+            if fuse not in (False, "none"):
+                # fused same-input GEMVs — bit-identical per output column
+                # under per-channel quantization
+                # (core.packed_params.fuse_projection_weights)
+                params = fuse_projection_weights(
+                    params, fuse_attn=fuse in (True, "all"), fuse_mlp=True
+                )
             if serve_cfg.quant_mode == "dsp_tuned":
                 from ..tuning import plan_linear_layers
 
@@ -110,12 +138,18 @@ class Engine:
                     params, a_bits=a_bits, w_bits=w_bits,
                     error_budget=serve_cfg.error_budget,
                     autotune=serve_cfg.autotune_plans,
+                    # non-kernel serving runs proven-exact plans through the
+                    # f32-GEMM shortcut — rank those first (see rank_plans)
+                    exact_first=not serve_cfg.use_kernel,
                 )
                 params = quantize_for_serving(
-                    params, "dsp_tuned", plans=self.plan_table
+                    params, "dsp_tuned", plans=self.plan_table,
+                    prepack=serve_cfg.prepack,
                 )
             else:
-                params = quantize_for_serving(params, serve_cfg.quant_mode)
+                params = quantize_for_serving(
+                    params, serve_cfg.quant_mode, prepack=serve_cfg.prepack
+                )
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
@@ -157,6 +191,14 @@ class Engine:
         self._base_key = jax.random.PRNGKey(serve_cfg.seed)
         self.scheduler = Scheduler()
         self._sample = jax.jit(sample_tokens)
+        # Device-resident decode state: steady-state decode advances tokens/
+        # positions ON DEVICE and only syncs the sampled token back, so a
+        # step does ONE host->device transfer worth of dispatch instead of
+        # seven (~0.5 ms/step of device_put on CPU).  The numpy arrays above
+        # stay authoritative for scheduling logic; ``_dev_dirty`` marks host
+        # -side mutations (admission, finishes) that must be re-pushed.
+        self._dev_state = None
+        self._dev_dirty = True
 
     # ---- jitted steps ---------------------------------------------------
     @staticmethod
@@ -229,17 +271,40 @@ class Engine:
             params["lm_head"], hidden, self.cfg.quant
         ).astype(jnp.float32)
 
+    def _push_state(self) -> None:
+        """Host → device refresh of the decode state (admission/finish)."""
+        self._dev_state = jax.device_put({
+            "tokens": self.last_token,
+            "positions": self.positions,
+            "active": self.active,
+            "keys": self._keys,
+            "temperature": self._temperature,
+            "top_k": self._top_k,
+            "top_p": self._top_p,
+        })
+        self._dev_dirty = False
+
     @partial(jax.jit, static_argnums=(0,))
-    def _decode_step(self, params, cache, tokens, positions, keys,
-                     temperature, top_k, top_p):
+    def _decode_step(self, params, cache, state):
+        """One decode step off the device-resident state; tokens/positions
+        advance on device (active rows only — mirroring the host loop), so
+        steady-state decode does no host→device transfers at all."""
+        tokens, positions = state["tokens"], state["positions"]
         logits, new_cache, _ = T.forward(
             params, self.cfg, tokens[:, None], positions=positions[:, None],
             cache=cache,
         )
         nxt = sample_tokens(
-            logits[:, -1], keys, positions, temperature, top_k, top_p
+            logits[:, -1], state["keys"], positions, state["temperature"],
+            state["top_k"], state["top_p"],
         )
-        return new_cache, nxt
+        active = state["active"]
+        new_state = dict(
+            state,
+            tokens=jnp.where(active, nxt, tokens),
+            positions=positions + active.astype(positions.dtype),
+        )
+        return new_cache, new_state, nxt
 
     # ---- request lifecycle ----------------------------------------------
     def submit(self, prompt: list[int], max_new: int | None = None,
@@ -328,6 +393,7 @@ class Engine:
             rid = self._maybe_finish(slot, tok)
             if rid is not None:
                 finished.append(rid)
+        self._dev_dirty = True  # admission rewrote slot state on the host
         return finished
 
     def _maybe_finish(self, slot: int, tok: int) -> int | None:
@@ -356,16 +422,17 @@ class Engine:
         if not self.active.any():
             return finished
         t0 = time.monotonic()
-        self.cache, nxt = self._decode_step(
-            self.params, self.cache,
-            jnp.asarray(self.last_token), jnp.asarray(self.positions),
-            jnp.asarray(self._keys), jnp.asarray(self._temperature),
-            jnp.asarray(self._top_k), jnp.asarray(self._top_p),
+        if self._dev_dirty:
+            self._push_state()
+        self.cache, self._dev_state, nxt = self._decode_step(
+            self.params, self.cache, self._dev_state
         )
         nxt = np.asarray(nxt)
         active_slots = np.flatnonzero(self.active)
         self.scheduler.note_decode(len(active_slots), time.monotonic() - t0)
+        n_finished = len(finished)
         for slot in active_slots:
+            # numpy mirrors advance exactly like the device state did
             self.positions[slot] += 1
             tok = int(nxt[slot])
             self.scheduler.requests[int(self._slot_rid[slot])].tokens.append(tok)
@@ -373,6 +440,8 @@ class Engine:
             rid = self._maybe_finish(slot, tok)
             if rid is not None:
                 finished.append(rid)
+        if len(finished) > n_finished:
+            self._dev_dirty = True  # freed slots changed the active mask
         return finished
 
     def generate(self, prompts: list[list[int]], max_new: int | None = None,

@@ -8,7 +8,16 @@ enumerators), ``score`` (error metrics), ``autotune`` (block-size sweep)
 and ``tuner`` (budgeted selection, per-layer tables).
 """
 
-from .autotune import BlockTiming, autotune_block, candidate_blocks, default_timer
+from .autotune import (
+    DECODE_BLOCKS,
+    DEFAULT_BLOCKS,
+    PHASE_BLOCKS,
+    BlockTiming,
+    autotune_block,
+    autotune_phase_blocks,
+    candidate_blocks,
+    default_timer,
+)
 from .plans import (
     DEFAULT_MAX_MR_BITS,
     DEFAULT_N_COLUMNS,
@@ -29,8 +38,12 @@ from .tuner import (
 __all__ = [
     "BlockTiming",
     "autotune_block",
+    "autotune_phase_blocks",
     "candidate_blocks",
     "default_timer",
+    "DECODE_BLOCKS",
+    "DEFAULT_BLOCKS",
+    "PHASE_BLOCKS",
     "DEFAULT_MAX_MR_BITS",
     "DEFAULT_N_COLUMNS",
     "DEFAULT_N_PAIRS",

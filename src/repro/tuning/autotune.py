@@ -24,7 +24,16 @@ import numpy as np
 from ..kernels.packed_matmul import packed_matmul
 from ..kernels.ref import PackedDotSpec
 
-__all__ = ["BlockTiming", "candidate_blocks", "autotune_block", "default_timer"]
+__all__ = [
+    "BlockTiming",
+    "candidate_blocks",
+    "autotune_block",
+    "autotune_phase_blocks",
+    "default_timer",
+    "DEFAULT_BLOCKS",
+    "DECODE_BLOCKS",
+    "PHASE_BLOCKS",
+]
 
 # MXU/VPU-aligned sweep grid; filtered per spec/problem by candidate_blocks.
 DEFAULT_BLOCKS = (
@@ -37,6 +46,23 @@ DEFAULT_BLOCKS = (
     (64, 64, 512),
     (32, 128, 128),
 )
+
+# Decode-phase sweep grid: a decode step is a GEMV over the slot batch
+# (M of 1-16), so M blocks hug the batch instead of padding it 8-64x up to
+# an MXU tile; N/K blocks still sweep the weight-streaming axis.
+DECODE_BLOCKS = (
+    (8, 128, 128),
+    (8, 128, 256),
+    (8, 256, 128),
+    (8, 64, 256),
+    (16, 128, 128),
+    (16, 256, 128),
+)
+
+# The serving engine runs the same kernel in two regimes with very different
+# M; each phase is tuned independently and the tuned plan carries one block
+# per phase (tuner.PlanReport.block / .decode_block).
+PHASE_BLOCKS = {"prefill": DEFAULT_BLOCKS, "decode": DECODE_BLOCKS}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,11 +86,16 @@ def candidate_blocks(
     m: int,
     k: int,
     n: int,
-    blocks: Sequence[tuple[int, int, int]] = DEFAULT_BLOCKS,
+    blocks: Sequence[tuple[int, int, int]] | None = None,
+    phase: str = "prefill",
 ) -> list[tuple[int, int, int]]:
     """Filter the sweep grid to blocks legal for ``spec`` and not absurdly
     oversized for the problem (> 2x padding waste on any axis is dropped,
-    unless nothing survives — then the smallest legal block is kept)."""
+    unless nothing survives — then the smallest legal block is kept).
+    ``phase`` selects the default grid (decode sweeps small-M GEMV blocks)
+    when ``blocks`` is not given."""
+    if blocks is None:
+        blocks = PHASE_BLOCKS[phase]
     legal = [b for b in blocks if b[2] % spec.chunk == 0]
     snug = [
         b for b in legal
@@ -87,13 +118,19 @@ def autotune_block(
     warmup: int = 1,
     iters: int = 3,
     seed: int = 0,
+    phase: str = "prefill",
+    prepacked: bool = False,
 ) -> list[BlockTiming]:
     """Time every candidate block on a ``shape = (m, k, n)`` problem.
 
     Returns timings sorted fastest-first.  The kernel output is cross-checked
     bit-exact against the first block's result — a mistuned block may only
-    be slow, never wrong."""
+    be slow, never wrong.  ``phase`` picks the candidate grid when
+    ``blocks`` is omitted; ``prepacked=True`` times the serving profile
+    (weights packed ONCE outside the timed region, the prepacked kernel
+    entry inside it) instead of the pack-per-call kernel."""
     from ..kernels.ops import auto_interpret
+    from ..kernels.packed_matmul import packed_matmul_prepacked
 
     m, k, n = shape
     if interpret is None:
@@ -106,12 +143,25 @@ def autotune_block(
         rng.integers(-(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)),
         jnp.int32,
     )
-    cands = candidate_blocks(spec, m, k, n, blocks or DEFAULT_BLOCKS)
+    if prepacked:
+        from ..kernels import ref as _ref
+
+        packed = _ref.pack_weight_words(w, spec)
+    cands = candidate_blocks(spec, m, k, n, blocks, phase=phase)
     timings: list[BlockTiming] = []
     reference = None
     for block in cands:
-        def run(block=block):
-            return packed_matmul(x, w, spec=spec, block=block, interpret=interpret)
+        if prepacked:
+            def run(block=block):
+                return packed_matmul_prepacked(
+                    x, packed.words, packed.wsc, spec=spec, block=block,
+                    interpret=interpret,
+                )
+        else:
+            def run(block=block):
+                return packed_matmul(
+                    x, w, spec=spec, block=block, interpret=interpret
+                )
 
         out = np.asarray(run())
         if reference is None:
@@ -120,3 +170,23 @@ def autotune_block(
             np.testing.assert_array_equal(out, reference)
         timings.append(BlockTiming(block, timer(run, warmup=warmup, iters=iters)))
     return sorted(timings, key=lambda t: t.us_per_call)
+
+
+def autotune_phase_blocks(
+    spec: PackedDotSpec,
+    shapes: dict[str, tuple[int, int, int]],
+    **kwargs,
+) -> dict[str, BlockTiming]:
+    """Best block PER SERVING PHASE: ``shapes`` maps a phase name
+    ("prefill"/"decode") to its (m, k, n) probe — a chunked-prefill M and a
+    slot-batch GEMV M tune very differently, so each phase sweeps its own
+    candidate grid and the tuned plan carries one block per phase.
+
+    Times the prepacked serving profile (the entry decode actually runs).
+    """
+    return {
+        phase: autotune_block(
+            spec, shape, phase=phase, prepacked=True, **kwargs
+        )[0]
+        for phase, shape in shapes.items()
+    }

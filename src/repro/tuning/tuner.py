@@ -27,7 +27,7 @@ import dataclasses
 from typing import Callable, Sequence
 
 from ..kernels.ref import INT4_EXACT, PackedDotSpec
-from .autotune import autotune_block
+from .autotune import autotune_block, autotune_phase_blocks
 from .plans import enumerate_specs
 from .score import SpecScore, plan_cost_proxy, spec_error_stats
 
@@ -59,6 +59,11 @@ class PlanReport:
     exhaustive: bool
     block: tuple[int, int, int] | None = None
     us_per_call: float | None = None
+    # per-phase tuning: decode GEMVs (M = slot count) and chunked prefill
+    # (M = slots × chunk) want different blocks — each phase is swept on its
+    # own grid (autotune.PHASE_BLOCKS) and recorded separately
+    decode_block: tuple[int, int, int] | None = None
+    decode_us_per_call: float | None = None
 
     @property
     def name(self) -> str:
@@ -83,6 +88,9 @@ class PlanReport:
             "exhaustive_grid": self.exhaustive,
             "block": list(self.block) if self.block else None,
             "us_per_call": self.us_per_call,
+            "decode_block": list(self.decode_block) if self.decode_block
+            else None,
+            "decode_us_per_call": self.decode_us_per_call,
         }
 
 
@@ -125,25 +133,42 @@ def rank_plans(
     n_extractions: int = 4,
     samples: int = 4096,
     seed: int = 0,
+    decode_shape: tuple[int, int, int] | None = None,
+    exact_first: bool = False,
 ) -> list[PlanReport]:
     """Score every enumerated plan, keep those inside the error budget and
     return them fastest-first.
 
     ``autotune=True`` measures wall-clock per candidate on ``shape``
     (required then) with the best block from the sweep; otherwise ranking
-    uses the arithmetic cost proxy.  Ties break toward lower error, then
-    wider spacing (cheaper restore)."""
+    uses the arithmetic cost proxy.  ``decode_shape`` additionally sweeps
+    the decode-phase grid (small-M GEMV blocks) on that shape, so prefill
+    and decode tune independently — the report carries one block per phase.
+    ``exact_first`` prefers PROVEN-exact plans at equal-or-worse cost proxy:
+    on backends whose integer dots lower to scalar loops (every non-TPU
+    jnp path), proven-exact plans run through the f32-GEMM shortcut
+    (``DspTunedLeaf.w_f32``) at dense-float speed, so they are faster in
+    wall-clock than the proxy's multiply count suggests — the serving
+    engine switches this on whenever it serves the non-kernel path.
+    Ties break toward lower error, then wider spacing (cheaper restore)."""
     if specs is None:
         specs = enumerate_specs(a_bits, w_bits)
     reports = [_scored(s, n_extractions, samples, seed) for s in specs]
     within = [r for r in reports if r.mae_per_extraction <= error_budget]
+    def _proven(r):
+        return r.mae == 0 and (r.exhaustive or r.spec.provably_exact)
+
     if autotune:
         if shape is None:
             raise ValueError("autotune=True needs a probe shape (m, k, n)")
         timed = []
         for r in within:
+            # time the serving profile: weights packed once outside the
+            # timed region, the prepacked kernel entry inside it — the code
+            # path apply_linear actually runs
             timings = autotune_block(
-                r.spec, shape, interpret=interpret, timer=timer, seed=seed
+                r.spec, shape, interpret=interpret, timer=timer, seed=seed,
+                prepacked=True,
             )
             best = timings[0]
             timed.append(
@@ -151,7 +176,39 @@ def rank_plans(
                     r, block=best.block, us_per_call=best.us_per_call
                 )
             )
-        return sorted(timed, key=lambda r: (r.us_per_call, r.mae_per_extraction))
+        # exact_first outranks wall-clock here too: off-TPU these timings
+        # run the Pallas interpreter, which never sees the f32-GEMM
+        # shortcut that makes proven-exact plans the fastest real path
+        timed.sort(
+            key=(lambda r: (not _proven(r), r.us_per_call,
+                            r.mae_per_extraction))
+            if exact_first
+            else (lambda r: (r.us_per_call, r.mae_per_extraction))
+        )
+        if decode_shape is not None:
+            # decode-phase sweep only for the prefill-ranked head: off-TPU
+            # these timings run the Pallas interpreter, and probing every
+            # in-budget plan on a second grid turns engine build from
+            # seconds into tens of minutes for no ranking benefit (plans
+            # outside the head fall back to default_block_for at runtime)
+            head = []
+            for r in timed[:3]:
+                phased = autotune_phase_blocks(
+                    r.spec, {"decode": decode_shape},
+                    interpret=interpret, timer=timer, seed=seed,
+                )
+                head.append(dataclasses.replace(
+                    r, decode_block=phased["decode"].block,
+                    decode_us_per_call=phased["decode"].us_per_call,
+                ))
+            timed = head + timed[3:]
+        return timed
+    if exact_first:
+        return sorted(
+            within,
+            key=lambda r: (not _proven(r), r.cost_proxy,
+                           r.mae_per_extraction, -r.spec.p),
+        )
     return sorted(
         within,
         key=lambda r: (r.cost_proxy, r.mae_per_extraction, -r.spec.p),
@@ -207,9 +264,15 @@ def plan_linear_layers(
         if shape_key not in by_shape:
             call_kwargs = kwargs
             if autotune and "shape" not in kwargs:
-                # probe each distinct weight shape at its own decode-like
-                # (m, k, n); a caller-supplied shape overrides for all
-                call_kwargs = dict(kwargs, shape=(8, d_in, d_out))
+                # probe each distinct weight shape per serving phase: a
+                # prefill-like M (chunked grid) and a decode-like GEMV M —
+                # the two phases tune to different blocks; a caller-supplied
+                # shape overrides the prefill probe for all layers
+                call_kwargs = dict(
+                    kwargs,
+                    shape=(128, d_in, d_out),
+                    decode_shape=(8, d_in, d_out),
+                )
             by_shape[shape_key] = select_plan(
                 a_bits, w_bits, error_budget=error_budget, **call_kwargs
             )

@@ -101,6 +101,10 @@ def test_kernel_bench_runs_at_tiny_shapes(capsys):
 
 @pytest.mark.slow
 def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
+    """Pins the prepacked-decode benchmark schema: the packed decode rows
+    declare the prepacked path, carry the vs-float ratios, and the
+    per-phase tuned blocks (small-M decode GEMV vs prefill grid) ride in
+    ``tuned_blocks``."""
     from benchmarks import serving_bench
 
     monkeypatch.setattr(serving_bench, "SLOTS", 2)
@@ -108,14 +112,48 @@ def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
     monkeypatch.setattr(serving_bench, "PROMPT_LEN", 12)
     monkeypatch.setattr(serving_bench, "CHUNK", 8)
     monkeypatch.setattr(serving_bench, "DECODE_STEPS", 2)
+    monkeypatch.setattr(serving_bench, "DECODE_TRIALS", 1)
     out = tmp_path / "BENCH_serving.json"
     result = serving_bench.run(out_path=str(out))
     blob = json.loads(out.read_text())
     assert blob == result
-    assert {"config", "prefill", "decode"} <= set(blob)
+    assert {"config", "prefill", "decode", "tuned_blocks"} <= set(blob)
     assert blob["prefill"]["chunked_tok_s"] > 0
-    assert blob["decode"]["int4_packed_tok_s"] > 0
+    dec = blob["decode"]
+    assert dec["decode_path"] == "prepacked"
+    assert dec["int4_packed_tok_s"] > 0 and dec["dsp_tuned_tok_s"] > 0
+    assert dec["int4_packed_vs_float"] > 0 and dec["dsp_tuned_vs_float"] > 0
+    for phase in ("prefill", "decode"):
+        row = blob["tuned_blocks"][phase]
+        assert len(row["block"]) == 3 and row["us_per_call"] > 0
+    # the decode phase tunes to a small-M GEMV block, prefill to a wide one
+    assert blob["tuned_blocks"]["decode"]["block"][0] <= 16
     assert _csv_rows(capsys)
+
+
+def test_fast_prepacked_engine_decodes(tmp_path):
+    """Fast-lane smoke: a tiny engine with prepacked weights builds and
+    decodes a few steps off the stored representation (no slow marker — on
+    every PR)."""
+    import jax
+    import numpy as np
+
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.serving import Engine, ServeConfig
+
+    cfg = ModelConfig(
+        name="prepack-smoke", family="dense", n_layers=1, d_model=32,
+        n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64, dtype="float32",
+    )
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(
+        n_slots=2, max_len=32, prefill_chunk=4, quant_mode="int4_packed",
+    ))
+    leaves = jax.tree_util.tree_flatten_with_path(eng.params)[0]
+    assert any("w_f32" in str(p) for p, _ in leaves)  # prepacked operands
+    out = eng.generate([[2, 3, 4], [5, 6]], max_new=4)
+    assert all(len(v) == 4 and np.isfinite(v).all() for v in out.values())
 
 
 @pytest.mark.slow

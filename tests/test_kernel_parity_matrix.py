@@ -31,8 +31,13 @@ import pytest
 
 from dsp_sim import simulate_packed_matmul
 
+from repro.core.quantize import quantize_unsigned
 from repro.kernels import ref
-from repro.kernels.packed_matmul import packed_matmul
+from repro.kernels.packed_matmul import (
+    default_block_for,
+    packed_matmul,
+    packed_matmul_prepacked,
+)
 from repro.kernels.ref import CORRECTIONS, PackedDotSpec
 from repro.tuning import enumerate_specs
 
@@ -153,6 +158,116 @@ class TestBlockShapeMatrix:
         x, w = _operands(8, 64, 8, spec)
         with pytest.raises(ValueError, match="multiple of spec.chunk"):
             packed_matmul(x, w, spec=spec, block=(8, 8, 48), interpret=True)
+
+
+class TestPrepackedParity:
+    """The prepacked fast path is bit-identical to the per-call kernel for
+    EVERY emitted plan: ``packed_matmul_prepacked(pack_weight_words(w)) ==
+    packed_matmul(w) == ref == simulator`` — packing weights once at engine
+    build must never change a single output bit."""
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name())
+    def test_prepacked_bit_equals_per_call(self, spec):
+        shape = (8, 2 * spec.chunk + 3, 16)
+        m, k, n = shape
+        x, w = _operands(m, k, n, spec)
+        want = np.asarray(ref.ref_packed_matmul(x, w, spec))
+        packed = ref.pack_weight_words(w, spec)
+        # the wsc contamination stream is materialized ONLY for mr plans
+        assert (packed.wsc is None) == (not spec.uses_mr)
+        got_ref = np.asarray(ref.ref_packed_matmul_prepacked(x, packed, spec))
+        got_kernel = np.asarray(packed_matmul_prepacked(
+            x, packed.words, packed.wsc, spec=spec,
+            block=(8, 16, spec.chunk), interpret=True,
+        ))
+        np.testing.assert_array_equal(got_ref, want)
+        np.testing.assert_array_equal(got_kernel, want)
+
+    @pytest.mark.parametrize(
+        "spec",
+        [
+            PackedDotSpec(4, 4, 11, 4, "full"),
+            PackedDotSpec(4, 4, 10, 16, "mr+full", 3),
+            PackedDotSpec(8, 8, 11, 1, "full", n_columns=4),
+        ],
+        ids=lambda s: s.name(),
+    )
+    def test_prepacked_three_way_with_simulator(self, spec):
+        m, k, n = 5, 3 * spec.chunk, 12
+        x, w = _operands(m, k, n, spec)
+        packed = ref.pack_weight_words(w, spec)
+        got = np.asarray(packed_matmul_prepacked(
+            x, packed.words, packed.wsc, spec=spec, interpret=True,
+        ))
+        sim = simulate_packed_matmul(spec, np.asarray(x), np.asarray(w))
+        np.testing.assert_array_equal(got, sim)
+
+    @pytest.mark.parametrize(
+        "spec",
+        [
+            PackedDotSpec(4, 4, 11, 4, "full"),
+            PackedDotSpec(4, 4, 10, 16, "mr+full", 3),
+            PackedDotSpec(8, 8, 11, 1, "full", n_columns=4),
+        ],
+        ids=lambda s: s.name(),
+    )
+    def test_fused_quantize_prologue_matches_staged(self, spec):
+        """The in-kernel activation quantize (f32 tile + row scale) equals
+        quantize-then-call bit for bit — no HBM staging round-trip."""
+        rng = np.random.default_rng(7)
+        m, k, n = 5, 2 * spec.chunk + 3, 12
+        w = jnp.asarray(rng.integers(
+            -(1 << (spec.bits_w - 1)), 1 << (spec.bits_w - 1), (k, n)
+        ), jnp.int32)
+        xf = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        xq = quantize_unsigned(xf, bits=spec.bits_a, axis=-1)
+        packed = ref.pack_weight_words(w, spec)
+        staged = np.asarray(packed_matmul_prepacked(
+            jnp.asarray(xq.values, jnp.int32), packed.words, packed.wsc,
+            spec=spec, interpret=True,
+        ))
+        fused = np.asarray(packed_matmul_prepacked(
+            xf, packed.words, packed.wsc, spec=spec, interpret=True,
+            x_scale=xq.scale, x_zp=xq.zero_point,
+        ))
+        np.testing.assert_array_equal(fused, staged)
+
+    def test_decode_default_block_is_small_m(self):
+        spec = PackedDotSpec(4, 4, 11, 4, "full")
+        assert default_block_for(2, spec)[0] == 8
+        assert default_block_for(128, spec)[0] == 128
+        # chunk-aligned bk even for long-chunk plans
+        mr = PackedDotSpec(4, 4, 10, 16, "mr+full", 3)  # chunk 32
+        assert default_block_for(2, mr)[2] % mr.chunk == 0
+
+    def test_activation_shorter_than_packed_weights(self):
+        """An x truncated well below the words' K — with a bk that does
+        not divide the words' grid — must still cover every weight chunk
+        (regression: the K grid used to truncate tail chunks here)."""
+        spec = PackedDotSpec(4, 4, 11, 4, "full")  # chunk 8
+        rng = np.random.default_rng(11)
+        k_w, k_x, n = 40, 19, 12
+        w = jnp.asarray(rng.integers(-8, 8, (k_w, n)), jnp.int32)
+        x = jnp.asarray(rng.integers(0, 16, (3, k_x)), jnp.int32)
+        packed = ref.pack_weight_words(w, spec)
+        want = np.asarray(ref.ref_packed_matmul(
+            jnp.pad(x, ((0, 0), (0, k_w - k_x))), w, spec
+        ))
+        for block in ((8, 16, 16), (8, 16, 8), (8, 16, 48)):
+            got = np.asarray(packed_matmul_prepacked(
+                x, packed.words, packed.wsc, spec=spec, block=block,
+                interpret=True,
+            ))
+            np.testing.assert_array_equal(got, want)
+
+    def test_mr_plan_requires_contamination_operands(self):
+        spec = PackedDotSpec(4, 4, 10, 16, "mr+full", 3)
+        x, w = _operands(4, spec.chunk, 8, spec)
+        packed = ref.pack_weight_words(w, spec)
+        with pytest.raises(ValueError, match="contamination"):
+            packed_matmul_prepacked(
+                x, packed.words, None, spec=spec, interpret=True
+            )
 
 
 class TestConstructionTimeBudgets:

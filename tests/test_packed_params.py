@@ -1,5 +1,7 @@
 """Packed serving weights: structure, byte density, numeric drift, and
-end-to-end forward equivalence within int4 quantization noise."""
+end-to-end forward equivalence within int4 quantization noise — plus the
+prepacked decode operands (sub-byte storage round-trip, pack-once words,
+projection fusion bit-identity)."""
 
 import jax
 import jax.numpy as jnp
@@ -7,10 +9,16 @@ import numpy as np
 import pytest
 
 from repro.core.packed_params import (
+    DspTunedLeaf,
     dequantize_packed,
+    fuse_projection_weights,
     is_packed_leaf,
+    pack_signed_nibbles,
+    quantize_for_serving,
     quantize_params_for_serving,
+    unpack_signed_nibbles,
 )
+from repro.kernels.ref import INT4_EXACT, INT4_MR_OVERPACKED
 from repro.models import transformer as T
 from repro.models.registry import get_config
 
@@ -60,3 +68,159 @@ def test_byte_density():
     raw = 128 * 128 * 2
     packed = p["packed"].size + p["scale"].size * 4
     assert packed < raw / 3.5  # ~4x minus scale overhead
+    # storage-only conversion carries no decode-speed cache
+    assert "w_f32" not in p
+
+
+# ---- sub-byte storage & prepacked leaves ---------------------------------
+
+
+def test_signed_nibble_roundtrip_exact():
+    """Nibble-packed storage decodes to the EXACT signed grid — every
+    int4 value, including the extremes, for 2-D and stacked shapes."""
+    rng = np.random.default_rng(3)
+    for shape in ((6, 5), (2, 8, 3)):
+        v = rng.integers(-8, 8, shape).astype(np.int8)
+        packed = pack_signed_nibbles(jnp.asarray(v))
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == shape[:-2] + (shape[-2] // 2, shape[-1])
+        np.testing.assert_array_equal(
+            np.asarray(unpack_signed_nibbles(packed)), v
+        )
+
+
+def test_nibble_pack_rejects_odd_k():
+    with pytest.raises(ValueError, match="even"):
+        pack_signed_nibbles(jnp.zeros((3, 4), jnp.int8))
+
+
+def test_dsp_tuned_leaf_nibble_storage_and_prepacked_operands():
+    rng = np.random.default_rng(4)
+    v = rng.integers(-8, 8, (64, 48)).astype(np.int8)
+    leaf = DspTunedLeaf(
+        values=jnp.asarray(v), scale=jnp.ones((1, 48), jnp.float32),
+        spec=INT4_EXACT,
+    )
+    # bits_w <= 4 stores nibbles (half the bytes of the old int8 store)...
+    assert leaf.nibble_packed and leaf.payload.shape == (32, 48)
+    # ...and decodes to the exact signed grid
+    np.testing.assert_array_equal(np.asarray(leaf.values), v)
+    # prepacked compute operands built once at construction
+    assert leaf.prepacked
+    assert leaf.words.shape == (64 // INT4_EXACT.chunk, INT4_EXACT.n_pairs, 48)
+    assert leaf.wsc is None  # full correction: no contamination stream
+    assert leaf.zp_row.shape == (48,)
+    assert leaf.w_f32 is not None  # INT4_EXACT is provably exact
+    zp = 1 << (INT4_EXACT.bits_a - 1)
+    np.testing.assert_array_equal(
+        np.asarray(leaf.zp_row), zp * v.astype(np.int64).sum(0)
+    )
+
+
+def test_dsp_tuned_leaf_mr_plan_carries_contamination_operands():
+    rng = np.random.default_rng(5)
+    v = rng.integers(-8, 8, (64, 8)).astype(np.int8)
+    leaf = DspTunedLeaf(
+        values=jnp.asarray(v), scale=jnp.ones((1, 8), jnp.float32),
+        spec=INT4_MR_OVERPACKED,
+    )
+    assert leaf.wsc is not None
+    # mr+full at n_pairs=16 is not provably exact -> no f32 shortcut
+    assert leaf.w_f32 is None
+
+
+def test_dsp_tuned_leaf_roundtrips_through_pytree():
+    leaf = DspTunedLeaf(
+        values=jnp.ones((32, 8), jnp.int8),
+        scale=jnp.ones((1, 8), jnp.float32), spec=INT4_EXACT,
+    )
+    flat, treedef = jax.tree_util.tree_flatten(leaf)
+    back = jax.tree_util.tree_unflatten(treedef, flat)
+    assert back.spec == leaf.spec and back.exact == leaf.exact
+    np.testing.assert_array_equal(
+        np.asarray(back.values), np.asarray(leaf.values)
+    )
+
+
+def test_quantize_for_serving_prepack_toggle():
+    params = {"w": jax.random.normal(KEY, (64, 48), jnp.float32)}
+    cold = quantize_for_serving(params, "dsp_tuned", min_dim=16,
+                                prepack=False)["w"]
+    hot = quantize_for_serving(params, "dsp_tuned", min_dim=16)["w"]
+    assert not cold.prepacked and hot.prepacked
+    np.testing.assert_array_equal(
+        np.asarray(cold.values), np.asarray(hot.values)
+    )
+    p4 = quantize_for_serving(params, "int4_packed", min_dim=16,
+                              prepack=True)["w"]
+    assert "w_f32" in p4
+    # the decode cache IS the decoded nibble grid
+    np.testing.assert_array_equal(
+        np.asarray(p4["w_f32"]),
+        np.asarray(unpack_signed_nibbles(p4["packed"])).astype(np.float32),
+    )
+
+
+# ---- projection fusion ----------------------------------------------------
+
+
+def _attn_mlp_params():
+    k1, k2, k3, k4, k5, k6 = jax.random.split(KEY, 6)
+    return {
+        "attn": {
+            "wq": {"w": jax.random.normal(k1, (64, 64), jnp.float32),
+                   "b": jnp.ones((64,), jnp.float32)},
+            "wk": {"w": jax.random.normal(k2, (64, 32), jnp.float32),
+                   "b": jnp.zeros((32,), jnp.float32)},
+            "wv": {"w": jax.random.normal(k3, (64, 32), jnp.float32),
+                   "b": jnp.ones((32,), jnp.float32)},
+            "wo": {"w": jax.random.normal(k4, (64, 64), jnp.float32)},
+        },
+        "mlp": {
+            "up": {"w": jax.random.normal(k5, (64, 128), jnp.float32)},
+            "gate": {"w": jax.random.normal(k6, (64, 128), jnp.float32)},
+            "down": {"w": jax.random.normal(k4, (128, 64), jnp.float32)},
+        },
+    }
+
+
+def test_fuse_projection_weights_structure():
+    fused = fuse_projection_weights(_attn_mlp_params())
+    assert set(fused["attn"]) == {"wqkv", "wo"}
+    assert fused["attn"]["wqkv"]["w"].shape == (64, 128)
+    assert fused["attn"]["wqkv"]["b"].shape == (128,)
+    assert set(fused["mlp"]) == {"upgate", "down"}
+    assert fused["mlp"]["upgate"]["w"].shape == (64, 256)
+
+
+def test_fuse_projection_weights_granular_switches():
+    p = _attn_mlp_params()
+    attn_only = fuse_projection_weights(p, fuse_mlp=False)
+    assert "wqkv" in attn_only["attn"] and "up" in attn_only["mlp"]
+    mlp_only = fuse_projection_weights(p, fuse_attn=False)
+    assert "wq" in mlp_only["attn"] and "upgate" in mlp_only["mlp"]
+
+
+def test_fuse_skips_cross_attention():
+    p = {"xattn": _attn_mlp_params()["attn"]}
+    fused = fuse_projection_weights(p)
+    assert "wq" in fused["xattn"] and "wqkv" not in fused["xattn"]
+
+
+def test_fused_quantized_matmul_bit_identical_per_column():
+    """Per-output-channel quantization makes the fused projection's columns
+    bit-identical to the separately quantized ones — the invariant the
+    engine-build fusion relies on."""
+    from repro.core.packed_linear import LinearSpec, apply_linear
+
+    p = _attn_mlp_params()
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 64), jnp.float32)
+    spec = LinearSpec(mode="int4_packed")
+    unf = quantize_for_serving(p, "int4_packed", min_dim=16)
+    fus = quantize_for_serving(fuse_projection_weights(p), "int4_packed",
+                               min_dim=16)
+    fused_out = np.asarray(apply_linear(fus["attn"]["wqkv"], x, spec))
+    for name, sl in (("wq", slice(0, 64)), ("wk", slice(64, 96)),
+                     ("wv", slice(96, 128))):
+        part = np.asarray(apply_linear(unf["attn"][name], x, spec))
+        np.testing.assert_array_equal(fused_out[:, sl], part)

@@ -16,6 +16,22 @@ from repro.core.quantize import (
 )
 
 
+def test_unsigned_8bit_uses_the_upper_half_of_the_range():
+    """Regression: an int8-stored offset-binary payload saturated every
+    8-bit value above the zero point at 127 (float->int8 conversion clamps)
+    — the whole upper half of the a8 grid collapsed.  The uint8 store must
+    reach it."""
+    x = jnp.asarray([[-1.0, -0.5, 0.25, 0.5, 1.0]], jnp.float32)
+    q = quantize_unsigned(x, bits=8, axis=-1)
+    v = np.asarray(q.values).astype(np.int32)
+    assert q.values.dtype == jnp.uint8
+    assert v.max() == 255 and v.min() == 1  # full offset-binary swing
+    # and the dequantized extremes come back (zp folding intact)
+    np.testing.assert_allclose(
+        np.asarray(q.dequantize()), np.asarray(x), atol=float(q.scale.max())
+    )
+
+
 @given(bits=integers(2, 8), seed=integers(0, 2**31))
 def test_signed_range_and_roundtrip(bits, seed):
     rng = np.random.default_rng(seed)

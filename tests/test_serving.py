@@ -108,6 +108,8 @@ def test_config_validation():
     with pytest.raises(ValueError):
         ServeConfig(quant_mode="float16")
     with pytest.raises(ValueError):
+        ServeConfig(fuse_projections="qkv")  # typo'd fusion site
+    with pytest.raises(ValueError):
         SamplingParams(temperature=-1)
     with pytest.raises(ValueError):
         SamplingParams(top_p=0.0)
@@ -211,6 +213,51 @@ def test_packed_params_are_packed_once():
     leaves = jax.tree_util.tree_flatten_with_path(eng.params)[0]
     assert any("packed" in str(p) for p, _ in leaves)
     assert eng.cfg.quant.mode == "int4_packed"
+    # engine build also prepared the decode fast-path operand
+    assert any("w_f32" in str(p) for p, _ in leaves)
+
+
+def test_prepack_toggle_is_bit_transparent():
+    """prepack=False (storage-only leaves, per-step packing) and the
+    default prepacked engine must emit identical token streams — the
+    fast path changes where work happens, never a bit of output."""
+    prompts = [[3, 7, 11, 2], [5, 9]]
+    for quant in ("int4_packed", "dsp_tuned"):
+        hot = _engine(slots=2, quant=quant).generate(prompts, max_new=6)
+        cold = _engine(slots=2, quant=quant, prepack=False).generate(
+            prompts, max_new=6
+        )
+        assert hot == cold, quant
+
+
+def test_dsp_tuned_prepacked_leaves_skip_per_step_packing():
+    eng = _engine(quant="dsp_tuned")
+    from repro.core.packed_params import is_dsp_tuned_leaf
+
+    def leaves(t):
+        if isinstance(t, dict) and not is_dsp_tuned_leaf(t):
+            for v in t.values():
+                yield from leaves(v)
+        elif is_dsp_tuned_leaf(t):
+            yield t
+
+    tuned = list(leaves(eng.params))
+    assert tuned
+    for leaf in tuned:
+        assert leaf.prepacked          # words built once at engine build
+        assert leaf.zp_row is not None  # zero-point row precomputed
+        assert leaf.nibble_packed       # int4 plans store sub-byte payload
+
+
+def test_projection_fusion_preserves_greedy_stream():
+    """Engine-build projection fusion is numerics-preserving: fused and
+    unfused packed engines emit identical greedy tokens."""
+    prompts = [[3, 7, 11, 2], [5, 9]]
+    base = _engine(slots=2, quant="int4_packed").generate(prompts, max_new=6)
+    for fuse in ("mlp", "all"):
+        got = _engine(slots=2, quant="int4_packed",
+                      fuse_projections=fuse).generate(prompts, max_new=6)
+        assert got == base, fuse
 
 
 # ---- non-dense families --------------------------------------------------
