@@ -1,0 +1,96 @@
+"""Benchmark regression gate for the CI slow lane.
+
+Reads ``BENCH_serving.json`` (fresh from the harness step that precedes it
+in the workflow) and fails the job when a headline serving ratio regresses
+below its floor:
+
+* ``decode.int4_packed_vs_float >= 1.0`` — prepacked packed decode holds
+  the float baseline's throughput.
+* ``decode.dsp_mixed_vs_uniform_int4 >= 1.0`` — the mixed-precision claim:
+  sensitivity-allocated per-layer widths serve at least as fast as the
+  uniform int4 baseline.
+
+Both floors carry a ``--slack`` (default 0.12), and the margin is doing
+real work: on CPU every exact packed plan runs the identical f32 GEMM as
+the float path through the ``w_f32`` shortcut plus a small quantize/
+zero-point overhead, so the TRUE ratio sits at parity-minus-epsilon —
+measured 0.94–1.0 with the per-step-median methodology, repeating within
+±2 %.  The slack sits well below that documented worst honest
+measurement (0.94 − 0.02 = 0.92 > 1.0 − 0.12 = 0.88), so a loaded
+nightly runner at the low end still passes.  The regression class this
+gate exists for is the catastrophic one — e.g. the pre-PR-4
+per-step-repacking path at 0.29x — and that it catches at any slack
+below 0.7.  ``--strict`` sets the slack to zero for quiet-machine (TPU)
+runs where the density claim is real.
+
+Exit status 0 when every gate holds, 1 with a per-gate report otherwise —
+``python -m benchmarks.check_bench`` after ``python -m benchmarks.run
+--only serving`` is the whole contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (dotted JSON path, floor) — the serving headline ratios under gate
+GATES = (
+    ("decode.int4_packed_vs_float", 1.0),
+    ("decode.dsp_mixed_vs_uniform_int4", 1.0),
+)
+DEFAULT_SLACK = 0.12
+
+
+def _lookup(blob: dict, dotted: str):
+    node = blob
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def check(bench_path: str, slack: float = DEFAULT_SLACK) -> list[str]:
+    """Gate failures for ``bench_path`` (empty list == all gates hold)."""
+    try:
+        with open(bench_path) as f:
+            blob = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{bench_path}: unreadable benchmark JSON ({e})"]
+    failures = []
+    for dotted, floor in GATES:
+        value = _lookup(blob, dotted)
+        if value is None:
+            failures.append(
+                f"{dotted}: missing from {bench_path} — the harness must "
+                "emit every gated ratio"
+            )
+        elif value < floor - slack:
+            failures.append(
+                f"{dotted}: {value:.4f} < floor {floor} - slack {slack}"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default="BENCH_serving.json",
+                    help="path to the serving benchmark JSON")
+    ap.add_argument("--slack", type=float, default=DEFAULT_SLACK,
+                    help="noise margin subtracted from each floor")
+    ap.add_argument("--strict", action="store_true",
+                    help="no noise margin (slack 0)")
+    args = ap.parse_args(argv)
+    slack = 0.0 if args.strict else args.slack
+    failures = check(args.bench, slack=slack)
+    for f in failures:
+        print(f"[check_bench] FAIL {f}")
+    if not failures:
+        for dotted, floor in GATES:
+            print(f"[check_bench] ok {dotted} (floor {floor}, slack {slack})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

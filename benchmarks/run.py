@@ -36,7 +36,18 @@ def main() -> None:
         "serving": serving_bench.run,
         "tuning": tuning_bench.run,
     }
-    selected = args.only.split(",") if args.only else list(mods)
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(selected) - set(mods))
+        if unknown:
+            # a typo'd --only must fail loudly, not skip benchmarks: a CI
+            # lane that silently produced no BENCH_*.json looks green
+            ap.error(
+                f"unknown benchmark name(s): {', '.join(unknown)} "
+                f"(valid: {', '.join(mods)})"
+            )
+    else:
+        selected = list(mods)
     for name in selected:
         mods[name]()
 

@@ -5,12 +5,19 @@ Measures the serving stack's claims:
 * **prefill** — the engine's batched chunked prefill (one ``T.forward`` per
   ``chunk`` tokens) against the seed's per-token scan (one forward per
   token, the pre-rebuild baseline, reimplemented here for comparison).
-* **decode** — steady-state decode tokens/s with float weights vs the two
+* **decode** — steady-state decode tokens/s with float weights vs the
   PREPACKED weight paths: ``int4_packed`` (nibble storage, operands decoded
-  once at engine build) and ``dsp_tuned`` (per-layer pair-packed plans,
-  weight words packed once).  Decode trials are interleaved round-robin
-  across the engines (same steps, same slots) so machine noise hits every
-  mode equally, and each mode reports its best trial.
+  once at engine build), ``dsp_tuned`` (per-layer pair-packed plans,
+  weight words packed once) and ``dsp_mixed`` (sensitivity-allocated
+  per-layer ``(a_bits, w_bits)`` — ``tuning.suggest_budget`` picks a
+  budget at which the bench model genuinely mixes widths; the row
+  carries vs-float AND vs-uniform-int4 ratios plus the allocation).
+  Decode steps are interleaved ONE STEP at a time across the engines and
+  each mode reports its MEDIAN per-step time: load bursts on a shared
+  machine inflate a few samples of every mode equally and the median
+  ignores them, where the old best-of-window methodology let a single
+  quiet window decide a mode's figure (observed ±15 % ratio swings at
+  these step costs; the per-step median repeats within ±2 %).
 * **per-phase tuned blocks** — one ``autotune_phase_blocks`` sweep on the
   bench's layer shape, pinning that prefill and decode tune independently
   (decode gets small-M GEMV blocks).
@@ -21,7 +28,9 @@ writes the raw numbers to ``BENCH_serving.json``.
 
 from __future__ import annotations
 
+import dataclasses
 import json
+import statistics
 import time
 from functools import partial
 
@@ -32,6 +41,11 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving import Engine, ServeConfig
+from repro.tuning import (
+    allocate_mixed_plans,
+    measure_layer_sensitivity,
+    suggest_budget,
+)
 
 from .bench_util import emit
 
@@ -43,8 +57,14 @@ SLOTS = 2
 MAX_LEN = 256
 PROMPT_LEN = 128
 CHUNK = 16
+# decode measurement volume: DECODE_STEPS * DECODE_TRIALS per-step samples
+# per mode (step-interleaved; must stay under the MAX_LEN slot budget)
 DECODE_STEPS = 32
-DECODE_TRIALS = 3  # interleaved best-of trials per decode mode
+DECODE_TRIALS = 6
+# dsp_mixed sensitivity pass: candidate width pairs + calibration volume
+# (smoke tests shrink these like the shape constants above)
+MIXED_WIDTHS = ((4, 4), (8, 4), (4, 8), (8, 8))
+CALIB_TOKENS = 32
 
 
 @partial(jax.jit, static_argnums=(1,))
@@ -98,12 +118,13 @@ def _bench_prefill_chunked(params, prompt) -> float:
     return len(prompt) / dt
 
 
-def _decode_engine(params, quant_mode: str) -> Engine:
+def _decode_engine(params, quant_mode: str, mixed_allocation=None,
+                   **cfg_kwargs) -> Engine:
     """An engine warmed into steady-state decode (slots full, jit traced)."""
     eng = Engine(CFG, params, ServeConfig(
         n_slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
-        max_new=MAX_LEN, quant_mode=quant_mode,
-    ))
+        max_new=MAX_LEN, quant_mode=quant_mode, **cfg_kwargs,
+    ), mixed_allocation=mixed_allocation)
     rng = np.random.default_rng(0)
     for _ in range(SLOTS):
         eng.submit(list(rng.integers(2, CFG.vocab_size, size=8)))
@@ -111,19 +132,38 @@ def _decode_engine(params, quant_mode: str) -> Engine:
     return eng
 
 
-def _bench_decode_modes(params, modes: list[str]) -> dict[str, float]:
-    """Steady-state decode tok/s per mode, trials interleaved round-robin
-    so slow-machine intervals penalize every mode equally."""
-    engines = {m: _decode_engine(params, m) for m in modes}
-    best = {m: 0.0 for m in modes}
-    for _ in range(DECODE_TRIALS):
+def _bench_decode_modes(engines: dict[str, Engine]) -> dict[str, float]:
+    """Steady-state decode tok/s per mode from MEDIAN per-step time over
+    step-interleaved samples (mode A step, mode B step, ... repeated):
+    every mode samples the same machine-load profile and the median
+    discards the burst outliers that made window-best figures swing."""
+    times: dict[str, list[float]] = {m: [] for m in engines}
+    for _ in range(DECODE_STEPS * DECODE_TRIALS):
         for mode, eng in engines.items():
             t0 = time.perf_counter()
-            for _ in range(DECODE_STEPS):
-                eng.step()
-            dt = time.perf_counter() - t0
-            best[mode] = max(best[mode], SLOTS * DECODE_STEPS / dt)
-    return best
+            eng.step()
+            times[mode].append(time.perf_counter() - t0)
+    return {
+        m: SLOTS / statistics.median(v) for m, v in times.items()
+    }
+
+
+def _mixed_allocation(params):
+    """The bench's mixed-precision operating point: one sensitivity pass
+    (the expensive stage — n_paths x n_widths probe forwards), then
+    ``suggest_budget`` starts at half the error a full demotion would add
+    and backs off until the greedy allocator demotes only the tolerant
+    layers — so the bench model serves a genuinely mixed per-layer width
+    assignment (the acceptance claim).  The allocation is handed to the
+    engine so the pass runs ONCE, not again inside the engine build."""
+    cfg_q = dataclasses.replace(
+        CFG, quant=dataclasses.replace(CFG.quant, mode="dsp_tuned")
+    )
+    sens = measure_layer_sensitivity(
+        params, cfg_q, widths=MIXED_WIDTHS, n_calib_tokens=CALIB_TOKENS
+    )
+    budget = suggest_budget(sens, widths=MIXED_WIDTHS, fraction=0.5)
+    return allocate_mixed_plans(sens, budget, widths=MIXED_WIDTHS)
 
 
 def _phase_tuned_blocks() -> dict:
@@ -149,11 +189,22 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
                                                     size=PROMPT_LEN))
     per_token = _bench_prefill_per_token(params, prompt)
     chunked = _bench_prefill_chunked(params, prompt)
-    decode = _bench_decode_modes(params, ["native", "int4_packed",
-                                          "dsp_tuned"])
+    mixed = _mixed_allocation(params)
+    engines = {
+        "native": _decode_engine(params, "native"),
+        "int4_packed": _decode_engine(params, "int4_packed"),
+        "dsp_tuned": _decode_engine(params, "dsp_tuned"),
+        "dsp_mixed": _decode_engine(
+            params, "dsp_mixed", mixed_allocation=mixed,
+            mixed_budget=mixed.budget,
+            width_candidates=MIXED_WIDTHS, calib_tokens=CALIB_TOKENS,
+        ),
+    }
+    decode = _bench_decode_modes(engines)
     dec_float = decode["native"]
     dec_packed = decode["int4_packed"]
     dec_tuned = decode["dsp_tuned"]
+    dec_mixed = decode["dsp_mixed"]
     tuned_blocks = _phase_tuned_blocks()
 
     result = {
@@ -170,12 +221,21 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
             # the packed rows run the PREPACKED fast path: weights packed /
             # decoded once at engine build, zero per-step repacking
             "decode_path": "prepacked",
+            "methodology": "per-step-interleaved-median",
             "float_tok_s": dec_float,
             "int4_packed_tok_s": dec_packed,
             "dsp_tuned_tok_s": dec_tuned,
+            "dsp_mixed_tok_s": dec_mixed,
             "int4_packed_vs_float": dec_packed / dec_float,
             "dsp_tuned_vs_float": dec_tuned / dec_float,
+            "dsp_mixed_vs_float": dec_mixed / dec_float,
+            # uniform-int4 = the int4_packed row (the nibble-prepacked
+            # uniform-width baseline the mixed allocator competes with)
+            "dsp_mixed_vs_uniform_int4": dec_mixed / dec_packed,
         },
+        # the per-layer width allocation behind the dsp_mixed row
+        # (assignments, distinct_widths, budget, cost vs uniform base)
+        "mixed": mixed.summary(),
         "tuned_blocks": tuned_blocks,
     }
     with open(out_path, "w") as f:
@@ -192,6 +252,10 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     emit("serving_decode_dsp_tuned", 1e6 / dec_tuned,
          f"{dec_tuned:.1f} tok/s (prepacked plans; "
          f"{dec_tuned / dec_float:.2f}x float)")
+    emit("serving_decode_dsp_mixed", 1e6 / dec_mixed,
+         f"{dec_mixed:.1f} tok/s ({mixed.distinct_widths} widths; "
+         f"{dec_mixed / dec_float:.2f}x float, "
+         f"{dec_mixed / dec_packed:.2f}x uniform-int4)")
     for phase, row in tuned_blocks.items():
         emit(f"serving_tuned_block_{phase}", row["us_per_call"],
              f"block={tuple(row['block'])}")

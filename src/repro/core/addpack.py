@@ -14,7 +14,6 @@ chunked accumulator that extracts lanes before any field can overflow.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

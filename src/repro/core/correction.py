@@ -17,7 +17,6 @@ Schemes
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import numpy as np
 
@@ -80,7 +79,6 @@ def mr_restore(
     """
     if cfg.delta >= 0:
         return fields
-    nlsb = -cfg.delta
     a = np.asarray(a, dtype=np.int64)
     w = np.asarray(w, dtype=np.int64)
     out = fields.copy()

@@ -67,12 +67,14 @@ __all__ = [
 MIN_DIM = 32  # don't pack tiny matrices (router tables etc. stay exact)
 
 # Weight-conversion modes accepted by the serving engine.  Storage packing
-# happens for ``int4_packed`` (nibbles) and ``dsp_tuned`` (per-layer plan
-# integers); ``int8``/``dsp_packed`` keep float weights and quantize at the
-# point of use (their arithmetic is selected via ``LinearSpec.mode``), and
+# happens for ``int4_packed`` (nibbles) and ``dsp_tuned``/``dsp_mixed``
+# (per-layer plan integers — ``dsp_mixed`` is ``dsp_tuned`` with a
+# sensitivity-allocated per-layer width map, see ``tuning.mixed``);
+# ``int8``/``dsp_packed`` keep float weights and quantize at the point of
+# use (their arithmetic is selected via ``LinearSpec.mode``), and
 # ``native``/``none`` serve the weights as-is.
 SERVING_MODES = ("native", "none", "int8", "int4_packed", "dsp_packed",
-                 "dsp_tuned")
+                 "dsp_tuned", "dsp_mixed")
 
 
 def is_packed_leaf(p) -> bool:
@@ -414,7 +416,7 @@ def quantize_params_for_serving(params, min_dim: int = MIN_DIM,
 
 def quantize_for_serving(params, mode: str = "int4_packed",
                          min_dim: int = MIN_DIM, plans=None,
-                         prepack: bool = True):
+                         prepack: bool = True, only_planned: bool = False):
     """Engine-build-time weight conversion step.
 
     ``int4_packed`` packs every large matmul weight to nibbles *once*; the
@@ -428,7 +430,14 @@ def quantize_for_serving(params, mode: str = "int4_packed",
     ``tuning.plan_linear_layers``; paths missing from the table fall back
     to the exact int4 preset) and stores :class:`DspTunedLeaf` leaves —
     nibble/int8 payload plus prepacked pair words — so decode runs
-    per-layer pair-packed arithmetic off operands packed once.
+    per-layer pair-packed arithmetic off operands packed once.  The plan
+    map is genuinely per layer: entries may carry different ``(a_bits,
+    w_bits)`` — each leaf quantizes onto ITS spec's grid and serves its
+    own arithmetic (the ``dsp_mixed`` mode is exactly this with a
+    sensitivity-allocated width map from ``tuning.mixed``).
+    ``only_planned=True`` converts ONLY the paths named in ``plans`` and
+    leaves every other weight float — the single-layer probe the
+    sensitivity pass runs.
 
     The other modes keep float weights (``int8`` and ``dsp_packed``
     quantize at the point of use through their ``LinearSpec.mode``
@@ -440,12 +449,14 @@ def quantize_for_serving(params, mode: str = "int4_packed",
         return quantize_params_for_serving(
             params, min_dim=min_dim, prepack=prepack
         )
-    if mode == "dsp_tuned":
+    if mode in ("dsp_tuned", "dsp_mixed"):
         plans = plans or {}
         targets = {}
         for p, _ in iter_packable_weights(params, min_dim):
             plan = plans.get(p)
             if plan is None:
+                if only_planned:
+                    continue
                 spec, block, dblock, exact = INT4_EXACT, None, None, None
             elif isinstance(plan, PackedDotSpec):
                 spec, block, dblock, exact = plan, None, None, None

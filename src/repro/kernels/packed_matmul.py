@@ -41,7 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import ref
-from .ref import PackedDotSpec, PackedWeightWords, INT4_EXACT
+from .ref import PackedDotSpec, INT4_EXACT
 
 __all__ = [
     "packed_matmul",

@@ -36,7 +36,6 @@ from ..models import transformer as T
 from ..models.registry import get_config, list_archs
 from ..optim.adamw import AdamWConfig, adamw_init
 from ..runtime.sharding import (
-    batch_pspec,
     cache_pspec,
     fsdp_axes,
     param_shardings,
@@ -314,8 +313,8 @@ def run_cell(
         }
         mem = _mem_dict(compiled.memory_analysis())
         n_params = sum(
-            math.prod(l.shape)
-            for l in jax.tree.leaves(
+            math.prod(leaf.shape)
+            for leaf in jax.tree.leaves(
                 jax.eval_shape(
                     lambda: T.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
                 )

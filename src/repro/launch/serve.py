@@ -29,23 +29,35 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--quant", default="native",
                     choices=["native", "int8", "int4_packed", "dsp_packed",
-                             "dsp_tuned"])
+                             "dsp_tuned", "dsp_mixed"])
     ap.add_argument("--error-budget", type=float, default=0.5,
                     help="dsp_tuned: max MAE per extraction a plan may incur")
-    def _plan_bits(arg: str) -> tuple[int, int]:
+    def _plan_bits(arg: str) -> tuple[int, int] | str:
+        if arg == "auto":
+            return "auto"
         try:
             a_bits, w_bits = (int(b) for b in arg.split(","))
         except ValueError:
             raise argparse.ArgumentTypeError(
                 f"--plan-bits wants two comma-separated ints 'A,W' "
-                f"(e.g. 8,8), got {arg!r}"
+                f"(e.g. 8,8) or 'auto', got {arg!r}"
             )
         return a_bits, w_bits
 
     ap.add_argument("--plan-bits", type=_plan_bits, default=(4, 4),
-                    metavar="A,W",
+                    metavar="A,W|auto",
                     help="dsp_tuned: operand widths to plan for, e.g. 8,8 "
-                         "(8-bit widths serve multi-DSP column-packed plans)")
+                         "(8-bit widths serve multi-DSP column-packed "
+                         "plans); 'auto' allocates widths per layer by "
+                         "measured sensitivity (= --quant dsp_mixed)")
+    ap.add_argument("--mixed-budget", type=float, default=0.05,
+                    help="dsp_mixed: model-level error budget (total added "
+                         "logit-KL on the calibration forward) the greedy "
+                         "per-layer width allocator may spend; 0 serves the "
+                         "uniform widest-candidate plan")
+    ap.add_argument("--calib-tokens", type=int, default=32,
+                    help="dsp_mixed: calibration tokens per sequence for "
+                         "the sensitivity pass (seeded from --seed)")
     ap.add_argument("--autotune-plans", action="store_true",
                     help="dsp_tuned: wall-clock block-size sweep per layer "
                          "shape and per serving phase (slower engine build, "
@@ -75,10 +87,22 @@ def main() -> None:
         prefill_chunk=args.prefill_chunk, quant_mode=args.quant,
         seed=args.seed, error_budget=args.error_budget,
         autotune_plans=args.autotune_plans,
-        plan_bits=args.plan_bits,
+        plan_bits="auto" if args.quant == "dsp_mixed" else args.plan_bits,
+        mixed_budget=args.mixed_budget,
+        calib_tokens=args.calib_tokens,
         prepack=args.prepack,
         fuse_projections=args.fuse_projections,
     ))
+    if engine.mixed_allocation is not None:
+        alloc = engine.mixed_allocation
+        print(f"[serve] mixed-precision allocation (budget "
+              f"{alloc.budget:.4g}, predicted error "
+              f"{alloc.predicted_error:.4g}, cost "
+              f"{alloc.cost_vs_uniform_base:.2f}x uniform "
+              f"a{alloc.base_bits[0]}w{alloc.base_bits[1]}):")
+        for path, (a, w) in sorted(alloc.assignments.items()):
+            print(f"[serve]   {path}: a{a}w{w} "
+                  f"({alloc.plans[path].name})")
     if engine.plan_table:
         plans = {r.name for r in engine.plan_table.values()}
         print(f"[serve] tuned packing plans (budget {args.error_budget}): "
@@ -106,7 +130,8 @@ def main() -> None:
         print(f"[serve] request {rid}: {len(toks)} tokens ({reason}) "
               f"-> {toks[:8]}...")
     stats = engine.stats()
-    print(f"[serve] {total_tokens} tokens in {dt:.2f}s (quant={args.quant}, "
+    print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
+          f"(quant={engine.scfg.quant_mode}, "
           f"prefill {stats['prefill_tok_s']:.1f} tok/s, "
           f"decode {stats['decode_tok_s']:.1f} tok/s, "
           f"mean ttft {stats['mean_ttft_s'] * 1e3:.0f}ms, "

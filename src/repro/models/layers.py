@@ -12,7 +12,6 @@ KV caches:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -19,8 +19,6 @@ Family → group structure:
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -34,6 +34,16 @@ once onto each layer's plan and decode runs per-layer pair-packed
 arithmetic.  The chosen table is exposed as ``engine.plan_table`` (path →
 ``tuning.PlanReport``).
 
+``quant_mode = "dsp_mixed"`` (or ``plan_bits="auto"``) adds the width axis
+to that search: a sensitivity pass (``tuning.mixed``) measures, per
+packable weight path, the logit damage of quantizing that layer alone at
+each candidate ``(a_bits, w_bits)`` on seeded calibration activations,
+and a greedy allocator assigns each layer its own width pair — narrow
+widths (more packed multiplications per int32 word, cheaper plans) for
+tolerant layers, wide plans for sensitive ones — under the model-level
+``mixed_budget``.  The allocation is exposed as
+``engine.mixed_allocation`` (a ``tuning.MixedAllocation``).
+
 Termination goes through a single code path (``_finish_slot``): EOS,
 per-request ``max_new`` and the cache-capacity bound all free the slot,
 record the finish reason and report the rid to the caller.
@@ -49,7 +59,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.packed_linear import LinearSpec
 from ..core.packed_params import (
     SERVING_MODES,
     fuse_projection_weights,
@@ -70,8 +79,8 @@ class ServeConfig:
     prefill_chunk: int = 16
     max_new: int = 64          # default per-request budget (submit can override)
     eos_token: int = 1
-    # weight path: native | int8 | int4_packed | dsp_packed | dsp_tuned
-    # (see core.packed_params.quantize_for_serving)
+    # weight path: native | int8 | int4_packed | dsp_packed | dsp_tuned |
+    # dsp_mixed (see core.packed_params.quantize_for_serving)
     quant_mode: str = "native"
     use_kernel: bool = False   # Pallas kernels vs jnp refs (CPU tests use ref)
     # engine-build weight preprocessing for the packed decode fast path:
@@ -87,10 +96,21 @@ class ServeConfig:
     fuse_projections: bool | str = "none"
     # dsp_tuned plan search: operand widths, MAE-per-extraction budget and
     # whether to wall-clock-autotune block sizes (off by default: the cost
-    # proxy ranks identically and engine build stays fast)
-    plan_bits: tuple[int, int] = (4, 4)
+    # proxy ranks identically and engine build stays fast).  plan_bits may
+    # be the string "auto" instead of a width pair: widths are then chosen
+    # PER LAYER by the sensitivity allocator (quant_mode "dsp_mixed" —
+    # a dsp_tuned-mode config with plan_bits="auto" is promoted to it).
+    plan_bits: tuple[int, int] | str = (4, 4)
     error_budget: float = 0.5
     autotune_plans: bool = False
+    # dsp_mixed: the model-level error budget (total added mean logit-KL on
+    # the calibration forward vs the uniform widest-candidate plan) the
+    # greedy width allocator may spend, the candidate width pairs it
+    # chooses from (None = tuning.mixed.DEFAULT_WIDTH_CANDIDATES), and the
+    # calibration volume (tokens per sequence; seeded from ``seed``)
+    mixed_budget: float = 0.05
+    width_candidates: tuple[tuple[int, int], ...] | None = None
+    calib_tokens: int = 32
     # default sampling (submit can override per request)
     temperature: float = 0.0
     top_k: int = 0
@@ -107,18 +127,65 @@ class ServeConfig:
                 f"fuse_projections {self.fuse_projections!r} not in "
                 "(True, False, 'none', 'mlp', 'all')"
             )
+        if self.plan_bits == "auto":
+            # "auto" means per-layer width allocation — that IS dsp_mixed
+            if self.quant_mode == "dsp_tuned":
+                object.__setattr__(self, "quant_mode", "dsp_mixed")
+            elif self.quant_mode != "dsp_mixed":
+                raise ValueError(
+                    'plan_bits="auto" needs quant_mode "dsp_tuned" or '
+                    f'"dsp_mixed", got {self.quant_mode!r}'
+                )
+        elif isinstance(self.plan_bits, str):
+            raise ValueError(
+                f"plan_bits {self.plan_bits!r} must be a (a_bits, w_bits) "
+                'pair or "auto"'
+            )
+        if self.mixed_budget < 0:
+            raise ValueError(
+                f"mixed_budget must be >= 0, got {self.mixed_budget}"
+            )
+        if self.quant_mode == "dsp_mixed" and self.autotune_plans:
+            # the width allocator selects plans by cost proxy only; a
+            # silent no-op here would let the flag lie about what ran
+            raise ValueError(
+                "autotune_plans is not supported with dsp_mixed: per-layer "
+                "width allocation ranks plans by the cost proxy (use "
+                "dsp_tuned for wall-clock block sweeps)"
+            )
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 mixed_allocation=None):
+        """``mixed_allocation`` (a ``tuning.MixedAllocation``) skips the
+        dsp_mixed engine-build sensitivity pass and serves the given
+        per-layer plan table instead — for callers that already measured
+        (the serving benchmark probes budgets before building).  Its paths
+        must match this engine's param tree (same fusion settings)."""
         self.plan_table = {}
+        self.mixed_allocation = None
+        if mixed_allocation is not None and serve_cfg.quant_mode != "dsp_mixed":
+            # dropping a caller-measured allocation would silently serve
+            # different plans than the caller benchmarked
+            raise ValueError(
+                "mixed_allocation was given but quant_mode is "
+                f"{serve_cfg.quant_mode!r}; it is only served under "
+                '"dsp_mixed"'
+            )
         if serve_cfg.quant_mode not in ("native", "none"):
             # switch the arithmetic mode but preserve the caller's other
-            # LinearSpec choices (dsp_spec correction scheme, act_bits)
+            # LinearSpec choices (dsp_spec correction scheme, act_bits).
+            # dsp_mixed leaves route through the dsp_tuned arithmetic —
+            # each DspTunedLeaf carries its own (per-layer) plan.
+            linear_mode = (
+                "dsp_tuned" if serve_cfg.quant_mode == "dsp_mixed"
+                else serve_cfg.quant_mode
+            )
             cfg = dataclasses.replace(
                 cfg,
                 quant=dataclasses.replace(
-                    cfg.quant, mode=serve_cfg.quant_mode,
+                    cfg.quant, mode=linear_mode,
                     use_kernel=serve_cfg.use_kernel,
                 ),
             )
@@ -130,7 +197,35 @@ class Engine:
                 params = fuse_projection_weights(
                     params, fuse_attn=fuse in (True, "all"), fuse_mlp=True
                 )
-            if serve_cfg.quant_mode == "dsp_tuned":
+            if serve_cfg.quant_mode == "dsp_mixed":
+                if mixed_allocation is None:
+                    from ..tuning.mixed import (
+                        DEFAULT_WIDTH_CANDIDATES,
+                        mixed_precision_plan,
+                    )
+
+                    # sensitivity pass + greedy width allocation on
+                    # calibration activations (tuning.mixed): per-layer
+                    # (a_bits, w_bits) under the model-level mixed_budget;
+                    # the per-width plan search keeps plans provably exact
+                    # so the only error the model sees is the quantization
+                    # the pass measured
+                    mixed_allocation = mixed_precision_plan(
+                        params, cfg,
+                        mixed_budget=serve_cfg.mixed_budget,
+                        widths=(serve_cfg.width_candidates
+                                or DEFAULT_WIDTH_CANDIDATES),
+                        n_calib_tokens=serve_cfg.calib_tokens,
+                        seed=serve_cfg.seed,
+                        exact_first=not serve_cfg.use_kernel,
+                    )
+                self.mixed_allocation = mixed_allocation
+                self.plan_table = mixed_allocation.plans
+                params = quantize_for_serving(
+                    params, "dsp_mixed", plans=self.plan_table,
+                    prepack=serve_cfg.prepack,
+                )
+            elif serve_cfg.quant_mode == "dsp_tuned":
                 from ..tuning import plan_linear_layers
 
                 a_bits, w_bits = serve_cfg.plan_bits

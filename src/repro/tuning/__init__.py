@@ -4,8 +4,10 @@ The paper generalizes DSP packing to arbitrary widths, multiplication
 counts and δ-spacings (§IV, §VI); this package turns that generality into
 a searchable plan space for the Pallas compute path and picks, per layer,
 the fastest plan whose error fits a user budget.  See ``plans`` (the
-enumerators), ``score`` (error metrics), ``autotune`` (block-size sweep)
-and ``tuner`` (budgeted selection, per-layer tables).
+enumerators), ``score`` (error metrics), ``autotune`` (block-size sweep),
+``tuner`` (budgeted selection, per-layer tables) and ``mixed``
+(sensitivity-driven per-layer width allocation — the ``dsp_mixed``
+serving mode).
 """
 
 from .autotune import (
@@ -25,6 +27,16 @@ from .plans import (
     enumerate_packing_configs,
     enumerate_specs,
     min_exact_p,
+)
+from .mixed import (
+    DEFAULT_MIXED_BUDGET,
+    DEFAULT_WIDTH_CANDIDATES,
+    LayerSensitivity,
+    MixedAllocation,
+    allocate_mixed_plans,
+    measure_layer_sensitivity,
+    mixed_precision_plan,
+    suggest_budget,
 )
 from .score import SpecScore, config_error_stats, plan_cost_proxy, spec_error_stats
 from .tuner import (
@@ -55,6 +67,14 @@ __all__ = [
     "plan_cost_proxy",
     "spec_error_stats",
     "DEFAULT_ERROR_BUDGET",
+    "DEFAULT_MIXED_BUDGET",
+    "DEFAULT_WIDTH_CANDIDATES",
+    "LayerSensitivity",
+    "MixedAllocation",
+    "allocate_mixed_plans",
+    "measure_layer_sensitivity",
+    "mixed_precision_plan",
+    "suggest_budget",
     "PlanReport",
     "plan_linear_layers",
     "rank_plans",

@@ -1,0 +1,348 @@
+"""Sensitivity-driven mixed-precision serving plans (per-layer widths).
+
+The generalized packing scheme is parameterized over arbitrary
+``(a_bits, w_bits)`` pairs, and the DSP48 cost asymmetry the paper
+quantifies — narrower operands pack more multiplications per word — means
+width choice buys decode throughput layer by layer.  This module closes
+the loop the uniform ``ServeConfig.plan_bits`` knob left open (the
+DeepBurning-MixQ framing from PAPERS.md): *measure* how much each layer
+can tolerate, then *allocate* widths under a model-level error budget.
+
+Two stages:
+
+* :func:`measure_layer_sensitivity` — per packable weight path (the
+  serving "layer": one scan-group role like ``/groups/mlp/up/w``, plus
+  ``lm_head``), quantize THAT path alone onto an exact packing plan at
+  each candidate width pair and measure the model-level damage on
+  calibration activations: mean logit-KL (default) or relative logit MSE
+  against the float forward.  This runs the real serving arithmetic
+  (``DspTunedLeaf`` + per-path plan), not a fake-quant proxy, so the
+  numbers are exactly what serving at that width would produce.
+
+* :func:`allocate_mixed_plans` — greedy budgeted allocation: every layer
+  starts at the reference (widest) candidate and the allocator repeatedly
+  applies the demotion with the best cost-saved-per-error-added ratio
+  that still fits the remaining budget.  Tolerant layers end up on narrow
+  widths (more packed multiplications per int32 word — cheaper plans),
+  sensitive layers keep wide/exact plans.  Measured error deltas are
+  floored at ``noise_floor`` before admission, so ``mixed_budget=0``
+  degenerates to the uniform reference-width plan by construction (the
+  same sampled-zero skepticism as ``score.SpecScore``).
+
+The result's ``plans`` table is keyed by tree path and routes straight
+into ``core.packed_params.quantize_for_serving`` — the engine's
+``quant_mode="dsp_mixed"`` is exactly this pipeline at build time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .score import plan_cost_proxy
+from .tuner import PlanReport, select_plan
+
+__all__ = [
+    "DEFAULT_WIDTH_CANDIDATES",
+    "DEFAULT_MIXED_BUDGET",
+    "LayerSensitivity",
+    "MixedAllocation",
+    "measure_layer_sensitivity",
+    "allocate_mixed_plans",
+    "suggest_budget",
+    "mixed_precision_plan",
+]
+
+# Candidate (a_bits, w_bits) pairs searched per layer.  Every pair has
+# proven-exact plans in the enumerator (a4w4/a8w4 single-word, a4w8/a8w8
+# via multi-DSP columns), so the packing itself never adds error on top of
+# the quantization the sensitivity pass measures.  The asymmetric pairs
+# matter: weight width drives storage (nibble packing needs w<=4) while
+# activation width drives the quantization noise floor.
+DEFAULT_WIDTH_CANDIDATES = ((4, 4), (8, 4), (4, 8), (8, 8))
+
+# Default model-level budget: total added mean logit-KL (nats, summed over
+# demoted layers) the allocator may spend relative to the uniform
+# reference-width plan.  Calibrated on the smoke zoo: enough to demote the
+# tolerant half of the layers, never the logit-dominating ones.
+DEFAULT_MIXED_BUDGET = 0.05
+
+# Measured error deltas below this are treated as sampling noise, not as
+# evidence a narrower width is free (cf. the sampled-zero floor in
+# score.SpecScore): every admitted demotion charges at least this much,
+# so a zero budget admits none.
+NOISE_FLOOR = 1e-9
+
+
+def _widest(widths) -> tuple[int, int]:
+    """The reference candidate: most total bits, activation bits breaking
+    ties (activation noise dominates the measured logit damage)."""
+    return max(widths, key=lambda b: (b[0] + b[1], b[0]))
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSensitivity:
+    """Measured model-level damage of quantizing one layer alone."""
+
+    path: str
+    n_values: int  # weight element count — the cost weighting
+    # (a_bits, w_bits) -> mean logit divergence vs the float forward
+    errors: dict[tuple[int, int], float]
+
+    def delta(self, bits: tuple[int, int], base: tuple[int, int]) -> float:
+        """Error added by serving this layer at ``bits`` instead of
+        ``base``, floored at the measurement noise floor."""
+        return max(self.errors[bits] - self.errors[base], NOISE_FLOOR)
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedAllocation:
+    """The allocator's verdict: one width pair (and plan) per layer."""
+
+    assignments: dict[str, tuple[int, int]]  # path -> (a_bits, w_bits)
+    plans: dict[str, PlanReport]             # path -> selected plan
+    base_bits: tuple[int, int]
+    budget: float
+    predicted_error: float  # sum of admitted per-layer error deltas
+    cost: float             # proxy-weighted packed-word work, allocated
+    base_cost: float        # same, uniform reference widths
+    sensitivities: tuple[LayerSensitivity, ...]
+
+    @property
+    def distinct_widths(self) -> int:
+        return len(set(self.assignments.values()))
+
+    @property
+    def cost_vs_uniform_base(self) -> float:
+        """Allocated packed-word work relative to the uniform reference
+        widths (1.0 when nothing was demoted — or nothing is packable)."""
+        return self.cost / self.base_cost if self.base_cost else 1.0
+
+    def summary(self) -> dict:
+        """JSON-ready digest (benchmarks, the serve CLI printout)."""
+        return {
+            "base_bits": list(self.base_bits),
+            "budget": self.budget,
+            "predicted_error": self.predicted_error,
+            "cost_vs_uniform_base": self.cost_vs_uniform_base,
+            "distinct_widths": self.distinct_widths,
+            "assignments": {
+                p: f"a{a}w{w}" for p, (a, w) in sorted(self.assignments.items())
+            },
+        }
+
+
+def _log_softmax(x: np.ndarray) -> np.ndarray:
+    m = x.max(axis=-1, keepdims=True)
+    return x - m - np.log(np.exp(x - m).sum(axis=-1, keepdims=True))
+
+
+def _divergence(base_logits, got_logits, metric: str) -> float:
+    """Mean per-position divergence between two (B, S, V) logit tensors."""
+    base = np.asarray(base_logits, np.float64)
+    got = np.asarray(got_logits, np.float64)
+    if metric == "mse":
+        return float(np.mean((got - base) ** 2) / max(np.mean(base**2), 1e-12))
+    if metric != "kl":
+        raise ValueError(f"metric {metric!r} not in ('kl', 'mse')")
+    lp, lq = _log_softmax(base), _log_softmax(got)
+    return float(np.mean(np.sum(np.exp(lp) * (lp - lq), axis=-1)))
+
+
+def measure_layer_sensitivity(
+    params,
+    cfg,
+    widths=DEFAULT_WIDTH_CANDIDATES,
+    n_calib_tokens: int = 32,
+    calib_batch: int = 2,
+    seed: int = 0,
+    metric: str = "kl",
+    exact_first: bool = True,
+) -> list[LayerSensitivity]:
+    """Per-layer quantization damage at each candidate width pair.
+
+    For every packable weight path, quantize that path ALONE onto the
+    selected exact plan at each ``(a_bits, w_bits)`` in ``widths`` and run
+    the model on seeded calibration tokens; the recorded error is the mean
+    logit-KL (or relative MSE) against the float forward.  Deterministic
+    per ``(params, cfg, widths, seed)`` — the allocator and its tests
+    rely on that.  ``cfg.quant.mode`` must route tuned leaves (the engine
+    passes its already-switched ``dsp_tuned`` config)."""
+    from ..core.packed_params import iter_packable_weights, quantize_for_serving
+    from ..models import transformer as T
+
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(
+        key, (calib_batch, n_calib_tokens), 2, cfg.vocab_size, jnp.int32
+    )
+
+    # Every probe tree has a different treedef (one converted path per
+    # probe), so a jitted forward would recompile n_paths × n_widths
+    # times; the eager forward runs each probe once and is the cheaper
+    # trade at calibration sizes.
+    def fwd(p):
+        return T.forward(p, cfg, tokens)[0]
+
+    base_logits = fwd(params)
+    specs = {
+        b: select_plan(b[0], b[1], error_budget=0.0, exact_first=exact_first)
+        for b in widths
+    }
+    out = []
+    targets = sorted(p for p, _ in iter_packable_weights(params))
+    sizes = {p: int(np.prod(leaf.shape))
+             for p, leaf in iter_packable_weights(params)}
+    for path in targets:
+        errors = {}
+        for bits in widths:
+            probe = quantize_for_serving(
+                params, "dsp_tuned", plans={path: specs[bits]},
+                only_planned=True, prepack=True,
+            )
+            errors[bits] = _divergence(base_logits, fwd(probe), metric)
+        out.append(LayerSensitivity(path, sizes[path], errors))
+    return out
+
+
+def _layer_costs(sens: LayerSensitivity, plans) -> dict[tuple[int, int], float]:
+    """Packed-word work of serving this layer at each width: the plan's
+    cost proxy (words per K element) times the weight element count."""
+    return {
+        bits: plan_cost_proxy(r.spec) * sens.n_values
+        for bits, r in plans.items()
+    }
+
+
+def allocate_mixed_plans(
+    sensitivities,
+    mixed_budget: float = DEFAULT_MIXED_BUDGET,
+    widths=DEFAULT_WIDTH_CANDIDATES,
+    base_bits: tuple[int, int] | None = None,
+    error_budget: float = 0.0,
+    exact_first: bool = True,
+) -> MixedAllocation:
+    """Greedy budgeted width allocation over measured sensitivities.
+
+    Every layer starts at ``base_bits`` (default: the widest candidate).
+    Each round considers every (layer, cheaper width) demotion whose
+    floored error delta still fits the remaining budget and applies the
+    one with the best cost-saved / error-added ratio (ties broken by the
+    larger saving, then path name — fully deterministic).  ``error_budget``
+    is the PLAN-level MAE budget forwarded to ``select_plan`` per width;
+    the default 0 keeps every per-layer plan provably exact, so the only
+    error the model sees is the quantization the sensitivity pass
+    measured."""
+    if base_bits is None:
+        base_bits = _widest(widths)
+    if base_bits not in widths:
+        raise ValueError(f"base_bits {base_bits} not among candidates {widths}")
+    plans = {
+        b: select_plan(b[0], b[1], error_budget=error_budget,
+                       exact_first=exact_first)
+        for b in widths
+    }
+    costs = {s.path: _layer_costs(s, plans) for s in sensitivities}
+    by_path = {s.path: s for s in sensitivities}
+    current = {s.path: base_bits for s in sensitivities}
+    spent = 0.0
+    while True:
+        best = None  # (ratio, d_cost, path, bits, d_err)
+        for path, sens in sorted(by_path.items()):
+            cur = current[path]
+            for bits in widths:
+                d_cost = costs[path][cur] - costs[path][bits]
+                if d_cost <= 0:
+                    continue
+                d_err = sens.delta(bits, cur)
+                if spent + d_err > mixed_budget:
+                    continue
+                better = best is None or (
+                    (d_cost / d_err, d_cost) > (best[0], best[1])
+                )
+                if better:
+                    best = (d_cost / d_err, d_cost, path, bits, d_err)
+        if best is None:
+            break
+        _, _, path, bits, d_err = best
+        current[path] = bits
+        spent += d_err
+    return MixedAllocation(
+        assignments=current,
+        plans={p: plans[b] for p, b in current.items()},
+        base_bits=base_bits,
+        budget=mixed_budget,
+        predicted_error=spent,
+        cost=sum(costs[p][b] for p, b in current.items()),
+        base_cost=sum(costs[p][base_bits] for p in current),
+        sensitivities=tuple(sensitivities),
+    )
+
+
+def suggest_budget(
+    sensitivities,
+    widths=DEFAULT_WIDTH_CANDIDATES,
+    base_bits: tuple[int, int] | None = None,
+    fraction: float = 0.5,
+) -> float:
+    """A budget that lands on a genuinely *mixed* assignment.
+
+    Starts at ``fraction`` of the error a full demotion would add (every
+    layer at its cheapest candidate) and halves until the greedy
+    allocation holds at least two distinct width pairs — the first
+    candidate budget can be uniform when every layer's first demotion
+    rung fits inside it (e.g. all layers at ``a8w4``), which is a fine
+    serving point but not the mixed operating point this helper is for.
+    Deterministic for fixed sensitivities; the benchmark and the
+    acceptance tests use it to pin a mixed per-layer table."""
+    if base_bits is None:
+        base_bits = _widest(widths)
+    sensitivities = list(sensitivities)
+    if len(sensitivities) < 2:
+        raise ValueError(
+            f"a mixed assignment needs at least two packable layers, got "
+            f"{len(sensitivities)} — serve a uniform plan (dsp_tuned) "
+            "instead"
+        )
+    cheapest = min(widths, key=lambda b: (b[0] + b[1], b))
+    total = sum(s.delta(cheapest, base_bits) for s in sensitivities)
+    budget = fraction * total
+    for _ in range(12):
+        alloc = allocate_mixed_plans(
+            sensitivities, budget, widths=widths, base_bits=base_bits
+        )
+        if alloc.distinct_widths >= 2:
+            return budget
+        budget /= 2
+    raise ValueError(
+        "no mixed operating point found: every probed budget allocates a "
+        "uniform width (layers are indistinguishable to the sensitivity "
+        "pass — raise n_calib_tokens, or pick a mixed_budget by hand)"
+    )
+
+
+def mixed_precision_plan(
+    params,
+    cfg,
+    mixed_budget: float = DEFAULT_MIXED_BUDGET,
+    widths=DEFAULT_WIDTH_CANDIDATES,
+    base_bits: tuple[int, int] | None = None,
+    error_budget: float = 0.0,
+    n_calib_tokens: int = 32,
+    calib_batch: int = 2,
+    seed: int = 0,
+    metric: str = "kl",
+    exact_first: bool = True,
+) -> MixedAllocation:
+    """measure → allocate, end to end (the engine-build entry point)."""
+    sens = measure_layer_sensitivity(
+        params, cfg, widths=widths, n_calib_tokens=n_calib_tokens,
+        calib_batch=calib_batch, seed=seed, metric=metric,
+        exact_first=exact_first,
+    )
+    return allocate_mixed_plans(
+        sens, mixed_budget=mixed_budget, widths=widths, base_bits=base_bits,
+        error_budget=error_budget, exact_first=exact_first,
+    )

@@ -8,7 +8,6 @@ implemented; the failing seed is reported instead.
 
 from __future__ import annotations
 
-import functools
 import os
 
 import numpy as np

@@ -1,11 +1,7 @@
 """Activation-sharding policy rules (pure spec logic, no devices)."""
 
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
-
-import jax
 
 from repro.runtime.act_sharding import activation_sharding, constrain
 

@@ -10,7 +10,6 @@ from repro.core.addpack import (
     five_by_nine,
     lane_add_expected,
     pack_lanes,
-    packed_add,
     packed_lane_add,
 )
 

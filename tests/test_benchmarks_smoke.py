@@ -38,6 +38,18 @@ def test_run_dispatcher_knows_every_module(capsys):
     assert callable(bench_run.main)
 
 
+def test_run_only_rejects_unknown_names(monkeypatch, capsys):
+    """A typo'd --only must exit with an error naming the bad entry, not
+    silently skip it (a lane that produced no BENCH json looks green)."""
+    monkeypatch.setattr(
+        sys, "argv", ["run.py", "--only", "serving,tunign"]
+    )
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 2  # argparse usage error
+    assert "tunign" in capsys.readouterr().err
+
+
 def _csv_rows(capsys):
     out = capsys.readouterr().out
     rows = [ln for ln in out.splitlines() if "," in ln]
@@ -102,7 +114,8 @@ def test_kernel_bench_runs_at_tiny_shapes(capsys):
 @pytest.mark.slow
 def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
     """Pins the prepacked-decode benchmark schema: the packed decode rows
-    declare the prepacked path, carry the vs-float ratios, and the
+    declare the prepacked path, carry the vs-float ratios (dsp_mixed adds
+    the vs-uniform-int4 ratio and its per-layer width allocation), and the
     per-phase tuned blocks (small-M decode GEMV vs prefill grid) ride in
     ``tuned_blocks``."""
     from benchmarks import serving_bench
@@ -113,22 +126,69 @@ def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
     monkeypatch.setattr(serving_bench, "CHUNK", 8)
     monkeypatch.setattr(serving_bench, "DECODE_STEPS", 2)
     monkeypatch.setattr(serving_bench, "DECODE_TRIALS", 1)
+    monkeypatch.setattr(serving_bench, "MIXED_WIDTHS", ((4, 4), (8, 8)))
+    monkeypatch.setattr(serving_bench, "CALIB_TOKENS", 8)
     out = tmp_path / "BENCH_serving.json"
     result = serving_bench.run(out_path=str(out))
     blob = json.loads(out.read_text())
     assert blob == result
-    assert {"config", "prefill", "decode", "tuned_blocks"} <= set(blob)
+    assert {"config", "prefill", "decode", "mixed",
+            "tuned_blocks"} <= set(blob)
     assert blob["prefill"]["chunked_tok_s"] > 0
     dec = blob["decode"]
     assert dec["decode_path"] == "prepacked"
     assert dec["int4_packed_tok_s"] > 0 and dec["dsp_tuned_tok_s"] > 0
     assert dec["int4_packed_vs_float"] > 0 and dec["dsp_tuned_vs_float"] > 0
+    assert dec["dsp_mixed_tok_s"] > 0
+    assert dec["dsp_mixed_vs_float"] > 0
+    assert dec["dsp_mixed_vs_uniform_int4"] > 0
+    # the acceptance claim: the bench model serves a genuinely mixed
+    # per-layer width assignment
+    mixed = blob["mixed"]
+    assert mixed["distinct_widths"] >= 2
+    assert len(set(mixed["assignments"].values())) == mixed["distinct_widths"]
     for phase in ("prefill", "decode"):
         row = blob["tuned_blocks"][phase]
         assert len(row["block"]) == 3 and row["us_per_call"] > 0
     # the decode phase tunes to a small-M GEMV block, prefill to a wide one
     assert blob["tuned_blocks"]["decode"]["block"][0] <= 16
     assert _csv_rows(capsys)
+
+
+def test_check_bench_gate(tmp_path):
+    """The slow-lane regression gate: passes on healthy ratios, fails (with
+    the offending gate named) on a regression or a missing key."""
+    from benchmarks import check_bench
+
+    healthy = {"decode": {"int4_packed_vs_float": 1.05,
+                          "dsp_mixed_vs_uniform_int4": 1.01}}
+    p = tmp_path / "ok.json"
+    p.write_text(json.dumps(healthy))
+    assert check_bench.check(str(p)) == []
+    assert check_bench.main(["--bench", str(p)]) == 0
+
+    regressed = {"decode": {"int4_packed_vs_float": 0.8,
+                            "dsp_mixed_vs_uniform_int4": 1.2}}
+    p2 = tmp_path / "bad.json"
+    p2.write_text(json.dumps(regressed))
+    failures = check_bench.check(str(p2))
+    assert len(failures) == 1 and "int4_packed_vs_float" in failures[0]
+    assert check_bench.main(["--bench", str(p2)]) == 1
+
+    # within-slack parity passes by default but fails under --strict
+    parity = {"decode": {"int4_packed_vs_float": 0.99,
+                         "dsp_mixed_vs_uniform_int4": 0.995}}
+    p3 = tmp_path / "parity.json"
+    p3.write_text(json.dumps(parity))
+    assert check_bench.main(["--bench", str(p3)]) == 0
+    assert check_bench.main(["--bench", str(p3), "--strict"]) == 1
+
+    missing = {"decode": {"int4_packed_vs_float": 1.2}}
+    p4 = tmp_path / "missing.json"
+    p4.write_text(json.dumps(missing))
+    failures = check_bench.check(str(p4))
+    assert len(failures) == 1 and "dsp_mixed_vs_uniform_int4" in failures[0]
+    assert check_bench.check(str(tmp_path / "nope.json"))  # unreadable fails
 
 
 def test_fast_prepacked_engine_decodes(tmp_path):

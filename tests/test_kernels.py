@@ -1,12 +1,11 @@
 """Pallas kernel validation: bit-exact vs ref.py oracles across shape/dtype
 sweeps, all in interpret mode (CPU container; TPU is the lowering target)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from proptest import given, integers, sampled_from
+from proptest import given, integers
 
 from repro.kernels import ref
 from repro.kernels.int4_matmul import int4_matmul

@@ -1,0 +1,318 @@
+"""Mixed-precision serving: sensitivity measurement, the greedy width
+allocator, checkpoint round-trips of per-layer plan maps, and the
+``dsp_mixed`` engine mode (budget-0 equivalence with the uniform exact
+plan, end-to-end serving with genuinely mixed widths)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.packed_params import (
+    is_dsp_tuned_leaf,
+    iter_packable_weights,
+    quantize_for_serving,
+)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import Engine, ServeConfig
+from repro.tuning import (
+    LayerSensitivity,
+    allocate_mixed_plans,
+    measure_layer_sensitivity,
+    mixed_precision_plan,
+    select_plan,
+    suggest_budget,
+)
+
+# A deliberately tiny model: the sensitivity pass runs one eager forward
+# per (layer, width) probe, so test volume scales with model size.  All
+# projections clear MIN_DIM (n_kv_heads=2 keeps wk/wv at 32 columns).
+CFG = ModelConfig(
+    name="mixed-smoke", family="dense", n_layers=1, d_model=32, n_heads=2,
+    n_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+)
+PARAMS = T.init_params(jax.random.PRNGKey(0), CFG)
+CFG_Q = dataclasses.replace(
+    CFG, quant=dataclasses.replace(CFG.quant, mode="dsp_tuned")
+)
+# two-candidate ladder keeps probe counts test-sized; (8, 8) is the
+# reference, (4, 4) the demotion target
+WIDTHS = ((4, 4), (8, 8))
+CALIB = dict(widths=WIDTHS, n_calib_tokens=8, calib_batch=1)
+
+
+@pytest.fixture(scope="module")
+def sensitivities():
+    return measure_layer_sensitivity(PARAMS, CFG_Q, **CALIB)
+
+
+# ---- sensitivity measurement ---------------------------------------------
+
+
+class TestSensitivity:
+    def test_covers_every_packable_path(self, sensitivities):
+        assert {s.path for s in sensitivities} == {
+            p for p, _ in iter_packable_weights(PARAMS)
+        }
+        assert all(set(s.errors) == set(WIDTHS) for s in sensitivities)
+
+    def test_narrower_widths_hurt_more(self, sensitivities):
+        """In aggregate, 4-bit quantization of a layer must damage the
+        logits at least as much as 8-bit (per-layer inversions would be
+        measurement noise; the sum is the signal the allocator uses)."""
+        narrow = sum(s.errors[(4, 4)] for s in sensitivities)
+        wide = sum(s.errors[(8, 8)] for s in sensitivities)
+        assert narrow > wide >= 0.0
+
+    def test_deterministic_per_seed(self, sensitivities):
+        again = measure_layer_sensitivity(PARAMS, CFG_Q, **CALIB)
+        assert [s.path for s in again] == [s.path for s in sensitivities]
+        for a, b in zip(again, sensitivities):
+            assert a.errors == b.errors and a.n_values == b.n_values
+
+    def test_metric_validation(self):
+        with pytest.raises(ValueError, match="metric"):
+            measure_layer_sensitivity(PARAMS, CFG_Q, metric="cosine", **CALIB)
+
+
+# ---- the greedy allocator -------------------------------------------------
+
+
+def _fake_sens(errs: dict[str, dict]) -> list[LayerSensitivity]:
+    return [
+        LayerSensitivity(path, n_values=1024, errors=e)
+        for path, e in errs.items()
+    ]
+
+
+class TestAllocator:
+    def test_budget_zero_is_uniform_base(self, sensitivities):
+        alloc = allocate_mixed_plans(sensitivities, mixed_budget=0.0,
+                                     widths=WIDTHS)
+        assert set(alloc.assignments.values()) == {(8, 8)}
+        assert alloc.predicted_error == 0.0
+        assert alloc.cost == alloc.base_cost
+
+    def test_generous_budget_demotes_everything(self, sensitivities):
+        alloc = allocate_mixed_plans(sensitivities, mixed_budget=1e9,
+                                     widths=WIDTHS)
+        assert set(alloc.assignments.values()) == {(4, 4)}
+        assert alloc.cost < alloc.base_cost
+
+    def test_tolerant_layers_demoted_first(self):
+        """With one tolerant and one sensitive layer and a budget that only
+        fits the tolerant demotion, the allocator must pick it."""
+        sens = _fake_sens({
+            "/tolerant/w": {(4, 4): 0.011, (8, 8): 0.01},
+            "/sensitive/w": {(4, 4): 0.51, (8, 8): 0.01},
+        })
+        alloc = allocate_mixed_plans(sens, mixed_budget=0.1, widths=WIDTHS)
+        assert alloc.assignments == {
+            "/tolerant/w": (4, 4), "/sensitive/w": (8, 8),
+        }
+        assert alloc.distinct_widths == 2
+        assert 0 < alloc.predicted_error <= 0.1
+
+    def test_deterministic_under_fixed_seed(self, sensitivities):
+        budget = suggest_budget(sensitivities, widths=WIDTHS)
+        a = allocate_mixed_plans(sensitivities, budget, widths=WIDTHS)
+        b = allocate_mixed_plans(sensitivities, budget, widths=WIDTHS)
+        assert a.assignments == b.assignments
+        assert {p: r.name for p, r in a.plans.items()} == \
+               {p: r.name for p, r in b.plans.items()}
+        # and end to end through the measurement pass as well
+        m1 = mixed_precision_plan(PARAMS, CFG_Q, mixed_budget=budget, **CALIB)
+        m2 = mixed_precision_plan(PARAMS, CFG_Q, mixed_budget=budget, **CALIB)
+        assert m1.assignments == m2.assignments
+        assert m1.predicted_error == m2.predicted_error
+
+    def test_plans_are_exact_at_assigned_widths(self, sensitivities):
+        alloc = allocate_mixed_plans(
+            sensitivities, suggest_budget(sensitivities, widths=WIDTHS),
+            widths=WIDTHS,
+        )
+        for path, bits in alloc.assignments.items():
+            plan = alloc.plans[path]
+            assert (plan.spec.bits_a, plan.spec.bits_w) == bits
+            assert plan.mae_per_extraction == 0.0
+
+    def test_base_bits_must_be_a_candidate(self, sensitivities):
+        with pytest.raises(ValueError, match="base_bits"):
+            allocate_mixed_plans(sensitivities, widths=WIDTHS,
+                                 base_bits=(6, 6))
+
+    def test_suggest_budget_needs_two_layers(self):
+        """One packable layer can never mix — the error must say so up
+        front instead of blaming calibration volume."""
+        sens = _fake_sens({"/only/w": {(4, 4): 0.02, (8, 8): 0.01}})
+        with pytest.raises(ValueError, match="two packable layers"):
+            suggest_budget(sens, widths=WIDTHS)
+
+
+# ---- per-layer plan maps through conversion and checkpointing ------------
+
+
+class TestPlanMapPlumbing:
+    def test_mixed_plan_map_quantizes_per_layer_widths(self):
+        paths = sorted(p for p, _ in iter_packable_weights(PARAMS))
+        narrow, wide = (
+            select_plan(4, 4, error_budget=0.0, exact_first=True),
+            select_plan(8, 8, error_budget=0.0, exact_first=True),
+        )
+        plans = {p: (narrow if i % 2 else wide)
+                 for i, p in enumerate(paths)}
+        tree = quantize_for_serving(PARAMS, "dsp_mixed", plans=plans)
+        leaves = dict(_tuned_leaves(tree))
+        assert set(leaves) == set(paths)
+        for i, p in enumerate(paths):
+            want = narrow if i % 2 else wide
+            assert leaves[p].spec == want.spec
+            # narrow plans nibble-pack, wide plans store int8
+            assert leaves[p].nibble_packed == (want.spec.bits_w <= 4)
+
+    def test_only_planned_converts_exactly_one_path(self):
+        paths = sorted(p for p, _ in iter_packable_weights(PARAMS))
+        plan = select_plan(4, 4, error_budget=0.0, exact_first=True)
+        probe = quantize_for_serving(
+            PARAMS, "dsp_tuned", plans={paths[0]: plan}, only_planned=True,
+        )
+        leaves = dict(_tuned_leaves(probe))
+        assert set(leaves) == {paths[0]}
+
+    def test_leaf_specs_round_trip_through_checkpointer(self, tmp_path,
+                                                        sensitivities):
+        """A mixed per-layer plan tree must survive save/restore: payloads,
+        scales AND the static plan aux (spec/block) — the treedef carries
+        the plan, so `like` restores each layer onto ITS plan."""
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        alloc = allocate_mixed_plans(
+            sensitivities, suggest_budget(sensitivities, widths=WIDTHS),
+            widths=WIDTHS,
+        )
+        tree = quantize_for_serving(PARAMS, "dsp_mixed", plans=alloc.plans)
+        ck = Checkpointer(str(tmp_path))
+        ck.save(0, tree)
+        restored, _ = ck.restore(0, jax.tree.map(lambda x: x, tree))
+        want, got = dict(_tuned_leaves(tree)), dict(_tuned_leaves(restored))
+        assert set(want) == set(got)
+        for path, leaf in want.items():
+            r = got[path]
+            assert r.spec == leaf.spec and r.block == leaf.block
+            assert r.payload.dtype == leaf.payload.dtype
+            np.testing.assert_array_equal(
+                np.asarray(r.payload), np.asarray(leaf.payload)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(r.scale), np.asarray(leaf.scale)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(r.words), np.asarray(leaf.words)
+            )
+
+
+# ---- the dsp_mixed engine mode -------------------------------------------
+
+
+def _engine(**kw):
+    kw.setdefault("width_candidates", WIDTHS)
+    kw.setdefault("calib_tokens", 8)
+    return Engine(CFG, PARAMS, ServeConfig(
+        n_slots=2, max_len=32, prefill_chunk=4, **kw
+    ))
+
+
+class TestMixedEngine:
+    def test_plan_bits_auto_promotes_to_dsp_mixed(self):
+        scfg = ServeConfig(quant_mode="dsp_tuned", plan_bits="auto")
+        assert scfg.quant_mode == "dsp_mixed"
+        with pytest.raises(ValueError, match="auto"):
+            ServeConfig(quant_mode="int4_packed", plan_bits="auto")
+        with pytest.raises(ValueError, match="plan_bits"):
+            ServeConfig(quant_mode="dsp_tuned", plan_bits="4,4")
+        with pytest.raises(ValueError, match="mixed_budget"):
+            ServeConfig(quant_mode="dsp_mixed", mixed_budget=-1.0)
+        with pytest.raises(ValueError, match="autotune_plans"):
+            # silently dropping the flag would lie about what ran
+            ServeConfig(quant_mode="dsp_mixed", autotune_plans=True)
+
+    def test_precomputed_allocation_needs_dsp_mixed(self, sensitivities):
+        """A caller-measured allocation handed to a non-dsp_mixed engine
+        must raise, not silently serve different plans."""
+        alloc = allocate_mixed_plans(sensitivities, mixed_budget=0.0,
+                                     widths=WIDTHS)
+        with pytest.raises(ValueError, match="mixed_allocation"):
+            Engine(CFG, PARAMS,
+                   ServeConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                               quant_mode="dsp_tuned"),
+                   mixed_allocation=alloc)
+
+    def test_budget_zero_equals_uniform_exact_plan(self):
+        """plan_bits="auto" at mixed_budget 0 must serve the uniform
+        widest-candidate plan: greedy tokens equal the dsp_tuned engine
+        pinned to (8, 8) exact plans."""
+        prompts = [[5, 6, 7], [8, 9]]
+        mixed = _engine(quant_mode="dsp_tuned", plan_bits="auto",
+                        mixed_budget=0.0)
+        assert mixed.scfg.quant_mode == "dsp_mixed"
+        assert set(mixed.mixed_allocation.assignments.values()) == {(8, 8)}
+        uniform = Engine(CFG, PARAMS, ServeConfig(
+            n_slots=2, max_len=32, prefill_chunk=4, quant_mode="dsp_tuned",
+            plan_bits=(8, 8), error_budget=0.0,
+        ))
+        assert mixed.generate(prompts, max_new=4) == uniform.generate(
+            prompts, max_new=4
+        )
+
+    def test_serves_mixed_widths_end_to_end(self):
+        """With the suggested half-demotion budget the engine serves at
+        least two distinct per-layer width pairs, and the leaves carry
+        per-layer specs matching the allocation."""
+        sens = measure_layer_sensitivity(PARAMS, CFG_Q, **CALIB)
+        budget = suggest_budget(sens, widths=WIDTHS)
+        eng = _engine(quant_mode="dsp_mixed", mixed_budget=budget)
+        alloc = eng.mixed_allocation
+        assert alloc.distinct_widths >= 2
+        leaves = dict(_tuned_leaves(eng.params))
+        for path, plan in alloc.plans.items():
+            assert leaves[path].spec == plan.spec
+        out = eng.generate([[5, 6, 7], [8, 9]], max_new=4)
+        assert all(len(t) == 4 and np.isfinite(t).all()
+                   for t in out.values())
+
+    def test_mixed_tokens_match_reference_given_same_assignment(self):
+        """dsp_mixed is dsp_tuned with an allocated plan map: serving the
+        allocation through quantize_for_serving by hand reproduces the
+        engine's tokens exactly — as does handing the engine a
+        precomputed allocation (which skips the build-time sensitivity
+        pass; the benchmark relies on that path)."""
+        sens = measure_layer_sensitivity(PARAMS, CFG_Q, **CALIB)
+        budget = suggest_budget(sens, widths=WIDTHS)
+        eng = _engine(quant_mode="dsp_mixed", mixed_budget=budget)
+        by_hand = Engine(
+            CFG_Q, quantize_for_serving(
+                PARAMS, "dsp_mixed", plans=eng.mixed_allocation.plans
+            ),
+            ServeConfig(n_slots=2, max_len=32, prefill_chunk=4),
+        )
+        precomputed = Engine(
+            CFG, PARAMS,
+            ServeConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                        quant_mode="dsp_mixed"),
+            mixed_allocation=eng.mixed_allocation,
+        )
+        assert precomputed.mixed_allocation is eng.mixed_allocation
+        prompts = [[5, 6, 7], [8, 9]]
+        want = eng.generate(prompts, max_new=4)
+        assert want == by_hand.generate(prompts, max_new=4)
+        assert want == precomputed.generate(prompts, max_new=4)
+
+
+def _tuned_leaves(tree, path=""):
+    if is_dsp_tuned_leaf(tree):
+        yield path, tree
+    elif isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tuned_leaves(v, f"{path}/{k}")

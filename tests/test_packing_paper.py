@@ -5,12 +5,10 @@ NUMBERS PRINTED IN THE PAPER, over all 65 536 input combinations — this is
 the ground-truth layer of the whole framework.
 """
 
-import numpy as np
 import pytest
 
 from repro.core.correction import scheme_stats
 from repro.core.packing import (
-    PackingConfig,
     int4_packing,
     int8_packing,
     intn_packing,

@@ -17,7 +17,6 @@ Invariants:
 """
 
 import numpy as np
-import pytest
 
 from proptest import booleans, given, integers, sampled_from, tuples
 

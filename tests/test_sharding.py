@@ -1,14 +1,11 @@
 """Sharding policy rules + an 8-device subprocess dry-run smoke + elastic
 resharding restore (different device count than saved)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -194,7 +194,8 @@ class TestServingIntegration:
         table = plan_linear_layers(PARAMS)
         tuned = quantize_for_serving(PARAMS, "dsp_tuned", plans=table)
         leaves = [
-            (p, l) for p, l in _walk(tuned) if is_dsp_tuned_leaf(l)
+            (p, leaf) for p, leaf in _walk(tuned)
+            if is_dsp_tuned_leaf(leaf)
         ]
         assert {p for p, _ in leaves} == set(table)
         for p, leaf in leaves:
