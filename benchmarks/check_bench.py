@@ -23,6 +23,17 @@ per-step-repacking path at 0.29x — and that it catches at any slack
 below 0.7.  ``--strict`` sets the slack to zero for quiet-machine (TPU)
 runs where the density claim is real.
 
+``--tuning BENCH_tuning.json`` additionally gates the plan table's static
+pedigree: every row is emitted with its ``certificate`` summary
+(``tuner.PlanReport.to_json``), and the gate cross-checks measurement
+against proof — ``provably_exact`` rows must carry an ``exact`` verdict,
+certified-exact rows must have measured zero error, and bounded rows must
+carry a positive certified MAE bound.  A mismatch means the verifier and
+the measurement harness disagree about the same plan — always a bug.
+
+ALL failing ratios across ALL requested files are reported before the
+nonzero exit, so one slow-lane run shows the full regression picture.
+
 Exit status 0 when every gate holds, 1 with a per-gate report otherwise —
 ``python -m benchmarks.check_bench`` after ``python -m benchmarks.run
 --only serving`` is the whole contract.
@@ -73,22 +84,82 @@ def check(bench_path: str, slack: float = DEFAULT_SLACK) -> list[str]:
     return failures
 
 
+def check_tuning(tuning_path: str) -> list[str]:
+    """Certificate-coherence failures for a BENCH_tuning.json plan table."""
+    try:
+        with open(tuning_path) as f:
+            blob = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{tuning_path}: unreadable benchmark JSON ({e})"]
+    rows = blob.get("plan_table")
+    if not rows:
+        return [f"{tuning_path}: plan_table missing or empty"]
+    failures = []
+    for row in rows:
+        plan = row.get("plan", "<unnamed>")
+        cert = row.get("certificate")
+        if not isinstance(cert, dict) or "verdict" not in cert:
+            failures.append(
+                f"{plan}: row carries no certificate summary — "
+                "PlanReport.to_json must stamp the verdict"
+            )
+            continue
+        verdict = cert["verdict"]
+        if row.get("provably_exact") and verdict != "exact":
+            failures.append(
+                f"{plan}: provably_exact but certificate verdict "
+                f"{verdict!r}"
+            )
+        if verdict == "exact" and (
+            row.get("mae_per_extraction") != 0 or row.get("wce") != 0
+        ):
+            failures.append(
+                f"{plan}: certified exact but measured "
+                f"mae_per_extraction={row.get('mae_per_extraction')} "
+                f"wce={row.get('wce')}"
+            )
+        if verdict == "bounded" and not (
+            (cert.get("mae_per_extraction") or 0) > 0
+        ):
+            failures.append(
+                f"{plan}: bounded verdict without a positive certified "
+                "MAE bound"
+            )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--bench", default="BENCH_serving.json",
-                    help="path to the serving benchmark JSON")
+    ap.add_argument("--bench", action="append", default=None,
+                    help="serving benchmark JSON (repeatable; default "
+                    "BENCH_serving.json)")
+    ap.add_argument("--tuning", default=None,
+                    help="also gate a BENCH_tuning.json plan table's "
+                    "certificate coherence")
     ap.add_argument("--slack", type=float, default=DEFAULT_SLACK,
                     help="noise margin subtracted from each floor")
     ap.add_argument("--strict", action="store_true",
                     help="no noise margin (slack 0)")
     args = ap.parse_args(argv)
     slack = 0.0 if args.strict else args.slack
-    failures = check(args.bench, slack=slack)
+    bench_paths = args.bench or ["BENCH_serving.json"]
+    failures = []
+    for path in bench_paths:
+        failures.extend(f"{path}: {msg}" for msg in check(path, slack=slack))
+    if args.tuning:
+        failures.extend(
+            f"{args.tuning}: {msg}" for msg in check_tuning(args.tuning)
+        )
     for f in failures:
         print(f"[check_bench] FAIL {f}")
     if not failures:
-        for dotted, floor in GATES:
-            print(f"[check_bench] ok {dotted} (floor {floor}, slack {slack})")
+        for path in bench_paths:
+            for dotted, floor in GATES:
+                print(f"[check_bench] ok {path}:{dotted} "
+                      f"(floor {floor}, slack {slack})")
+        if args.tuning:
+            print(f"[check_bench] ok {args.tuning}: plan-table "
+                  "certificates coherent")
     return 1 if failures else 0
 
 

@@ -1,0 +1,366 @@
+"""Dtype-hazard lint for the packing stack (``python -m repro.analysis.lint``).
+
+The packed-arithmetic bugs this repo has to guard against are not generic
+Python mistakes — they are *width* mistakes, invisible to ruff and the type
+checker because every array is just an ``Array``:
+
+* **DTH001** ``integer-dot-missing-preferred-type`` — ``dot_general`` /
+  ``jnp.dot`` / ``jnp.matmul`` with an integer-marked operand but no
+  ``preferred_element_type``: XLA is free to accumulate an int8×int8 dot in
+  int8, silently wrapping per-element instead of in the int32 lanes the
+  packing algebra budgets for.  (numpy variants accumulate in the operand
+  dtype, so int32-or-narrower operands overflow the same way — cast to
+  int64 first.)
+* **DTH002** ``int-constant-overflows-dtype`` — a constant-foldable Python
+  int literal landing in an annotated word width it cannot represent
+  (``jnp.int32(1 << 35)``): NumPy 2 raises at runtime on direct casts but
+  jnp silently wraps, and either way the bug belongs at review time.
+* **DTH003** ``narrowing-astype-before-multiply`` — a narrowing ``astype``
+  (<= 16 bits) as a DIRECT operand of ``*`` or a dot call: the widening
+  multiply the packing algebra assumes needs the cast on the *result*
+  side; casting first wraps the products pre-accumulation.
+* **DTH004** ``int32-shift-overflow`` — a constant left-shift whose operand
+  (bounded by its narrowest integer dtype mark, via the same
+  :class:`~repro.analysis.domain.Interval` domain the verifier uses)
+  cannot be proven to stay below 2**31 in int32 arithmetic — the
+  shift-pack primitive's overflow mode.
+
+Findings are waivable inline with a justified pragma on the offending line
+or the line above::
+
+    x = y << 28  # packlint: ok[DTH004] -- proven < 2^31 by caller contract
+
+A pragma without the ``-- justification`` tail is itself a finding
+(PRAGMA000): the waiver protocol exists to record *why* the hazard is
+safe, not to mute the tool.
+
+Heuristics are deliberately conservative (dtype marks propagate through
+``astype``/constructor calls and same-scope single-target assignments
+only) so the CI gate can demand zero unexplained findings on the tree.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+
+from .domain import Interval
+
+__all__ = ["Finding", "lint_source", "lint_paths", "main", "RULES"]
+
+RULES = {
+    "DTH001": "integer-dot-missing-preferred-type",
+    "DTH002": "int-constant-overflows-dtype",
+    "DTH003": "narrowing-astype-before-multiply",
+    "DTH004": "int32-shift-overflow",
+    "PRAGMA000": "waiver-missing-justification",
+}
+
+_DOT_NAMES = {"dot", "matmul", "dot_general", "tensordot"}
+_ARRAY_CTORS = {"array", "asarray", "full", "zeros", "ones", "arange"}
+_PRAGMA_RE = re.compile(
+    r"#\s*packlint:\s*ok\[(?P<rules>[A-Z0-9,\s]+)\]"
+    r"(?:\s*--\s*(?P<why>\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{RULES[self.rule]}] {self.message}")
+
+
+def _dtype_mark(node: ast.AST) -> tuple[int, bool] | None:
+    """(width, signed) when ``node`` names an integer dtype: the attribute
+    ``jnp.int32`` / ``np.uint8``, the bare name, or the string "int32"."""
+    name = None
+    if isinstance(node, ast.Attribute):
+        name = node.attr
+    elif isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+        name = node.value
+    if name is None:
+        return None
+    m = re.fullmatch(r"(u?)int(8|16|32|64)", name)
+    if m is None:
+        return None
+    return int(m.group(2)), m.group(1) == ""
+
+
+def _fold_const(node: ast.AST, consts: dict[str, int]) -> int | None:
+    """Constant-fold an integer expression (literals, ``-``, the packing
+    operators ``+ - * ** << >> | & ^``, and names bound to folded module
+    constants)."""
+    if isinstance(node, ast.Constant):
+        return node.value if isinstance(node.value, int) \
+            and not isinstance(node.value, bool) else None
+    if isinstance(node, ast.Name):
+        return consts.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _fold_const(node.operand, consts)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        left = _fold_const(node.left, consts)
+        right = _fold_const(node.right, consts)
+        if left is None or right is None:
+            return None
+        ops = {
+            ast.Add: lambda a, b: a + b,
+            ast.Sub: lambda a, b: a - b,
+            ast.Mult: lambda a, b: a * b,
+            ast.Pow: lambda a, b: a**b if 0 <= b < 256 else None,
+            ast.LShift: lambda a, b: a << b if 0 <= b < 256 else None,
+            ast.RShift: lambda a, b: a >> b if 0 <= b < 256 else None,
+            ast.BitOr: lambda a, b: a | b,
+            ast.BitAnd: lambda a, b: a & b,
+            ast.BitXor: lambda a, b: a ^ b,
+        }
+        fn = ops.get(type(node.op))
+        return None if fn is None else fn(left, right)
+    return None
+
+
+def _dtype_range(width: int, signed: bool) -> Interval:
+    return Interval.signed(width) if signed else Interval.unsigned(width)
+
+
+class _ModuleLinter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: list[Finding] = []
+        self.waived = 0
+        # Name -> (width, signed) integer-dtype mark, from single-target
+        # assignments of marked expressions (collected in a pre-pass so
+        # use-before-def inside functions still resolves)
+        self.marks: dict[str, tuple[int, bool]] = {}
+        # Name -> folded integer constant (module/function scope)
+        self.consts: dict[str, int] = {}
+
+    # -- marking ----------------------------------------------------------
+
+    def _expr_mark(self, node: ast.AST) -> tuple[int, bool] | None:
+        """The integer-dtype mark of an expression, or None.  Binary ops
+        return the NARROWEST mark among marked operands — the width the
+        wrap happens at."""
+        if isinstance(node, ast.Name):
+            return self.marks.get(node.id)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            # x.astype(intN) / intN(x) / jnp.array(..., dtype=intN)
+            if isinstance(fn, ast.Attribute):
+                if fn.attr == "astype" and node.args:
+                    return _dtype_mark(node.args[0])
+                ctor = _dtype_mark(fn)
+                if ctor is not None:
+                    return ctor
+                if fn.attr in _ARRAY_CTORS:
+                    for kw in node.keywords:
+                        if kw.arg == "dtype":
+                            return _dtype_mark(kw.value)
+            elif isinstance(fn, ast.Name):
+                ctor = _dtype_mark(fn)
+                if ctor is not None:
+                    return ctor
+            return None
+        if isinstance(node, ast.BinOp):
+            lm = self._expr_mark(node.left)
+            rm = self._expr_mark(node.right)
+            candidates = [m for m in (lm, rm) if m is not None]
+            if not candidates:
+                return None
+            return min(candidates, key=lambda m: m[0])
+        if isinstance(node, ast.UnaryOp):
+            return self._expr_mark(node.operand)
+        return None
+
+    def _collect(self, tree: ast.AST) -> None:
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            name = node.targets[0].id
+            folded = _fold_const(node.value, self.consts)
+            if folded is not None:
+                self.consts[name] = folded
+            mark = self._expr_mark(node.value)
+            if mark is not None:
+                self.marks[name] = mark
+
+    # -- reporting / waivers ----------------------------------------------
+
+    def _report(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        for probe in (line, line - 1):
+            if not 1 <= probe <= len(self.lines):
+                continue
+            m = _PRAGMA_RE.search(self.lines[probe - 1])
+            if m is None:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",")}
+            if rule not in rules:
+                continue
+            if m.group("why"):
+                self.waived += 1
+                return
+            self.findings.append(Finding(
+                self.path, probe, 0, "PRAGMA000",
+                f"waiver for {rule} has no '-- justification' tail",
+            ))
+            return
+        self.findings.append(Finding(self.path, line, col, rule, message))
+
+    # -- rules -------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr in _DOT_NAMES:
+            marked = [a for a in node.args
+                      if self._expr_mark(a) is not None]
+            has_pet = any(kw.arg == "preferred_element_type"
+                          for kw in node.keywords)
+            if marked and not has_pet:
+                self._report(
+                    node, "DTH001",
+                    f"integer operand feeds {ast.unparse(fn)} without "
+                    "preferred_element_type — the accumulator dtype is "
+                    "unconstrained (wrap risk); pass "
+                    "preferred_element_type=jnp.int32 (or cast numpy "
+                    "operands to int64)",
+                )
+            self._check_narrowing_operands(node.args, node)
+        # DTH002: constant into a too-narrow annotated width
+        target = None
+        if isinstance(fn, (ast.Attribute, ast.Name)):
+            target = _dtype_mark(fn)
+        if target is None and isinstance(fn, ast.Attribute) \
+                and fn.attr in _ARRAY_CTORS:
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    target = _dtype_mark(kw.value)
+        if target is not None and node.args:
+            folded = _fold_const(node.args[0], self.consts)
+            if folded is not None:
+                width, signed = target
+                rng = _dtype_range(width, signed)
+                if not rng.contains(folded):
+                    kind = "int" if signed else "uint"
+                    self._report(
+                        node, "DTH002",
+                        f"constant {folded} does not fit {kind}{width} "
+                        f"{rng} — it wraps at the annotated word width",
+                    )
+        self.generic_visit(node)
+
+    def _check_narrowing_operands(self, operands, ctx: ast.AST) -> None:
+        for op in operands:
+            if not (isinstance(op, ast.Call)
+                    and isinstance(op.func, ast.Attribute)
+                    and op.func.attr == "astype" and op.args):
+                continue
+            mark = _dtype_mark(op.args[0])
+            if mark is not None and mark[0] <= 16:
+                self._report(
+                    op, "DTH003",
+                    f"narrowing astype to {mark[0]} bits directly feeds a "
+                    "multiply — products wrap BEFORE accumulation; widen "
+                    "the multiply result instead",
+                )
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, ast.Mult):
+            self._check_narrowing_operands((node.left, node.right), node)
+        if isinstance(node.op, ast.LShift):
+            shift = _fold_const(node.right, self.consts)
+            mark = self._expr_mark(node.left)
+            if shift is not None and shift >= 0 and mark is not None \
+                    and mark[0] <= 32:
+                value = _dtype_range(*mark)
+                folded = _fold_const(node.left, self.consts)
+                if folded is not None:
+                    value = Interval.point(folded)
+                if not value.shl(shift).fits_signed(32):
+                    self._report(
+                        node, "DTH004",
+                        f"<< {shift} on a value only bounded by its "
+                        f"{'' if mark[1] else 'u'}int{mark[0]} range "
+                        f"{value} exceeds int32 ({value.shl(shift)}); "
+                        "mask first or widen to int64",
+                    )
+        self.generic_visit(node)
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self) -> list[Finding]:
+        try:
+            tree = ast.parse("\n".join(self.lines))
+        except SyntaxError as exc:  # pragma: no cover - tree is parseable
+            self.findings.append(Finding(
+                self.path, exc.lineno or 1, 0, "DTH001",
+                f"syntax error stops analysis: {exc.msg}",
+            ))
+            return self.findings
+        self._collect(tree)
+        self.visit(tree)
+        return self.findings
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    return _ModuleLinter(path, source).run()
+
+
+def lint_paths(paths) -> tuple[list[Finding], int, int]:
+    """Lint every ``*.py`` under ``paths``.  Returns (findings, n_files,
+    n_waived)."""
+    findings: list[Finding] = []
+    n_files = 0
+    n_waived = 0
+    for root in paths:
+        root = Path(root)
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            if f.suffix != ".py":
+                continue
+            n_files += 1
+            linter = _ModuleLinter(str(f), f.read_text())
+            findings.extend(linter.run())
+            n_waived += linter.waived
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, n_files, n_waived
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="dtype-hazard lint for the packing stack")
+    ap.add_argument("paths", nargs="*", default=["src", "tests", "benchmarks"])
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule, slug in RULES.items():
+            print(f"{rule}  {slug}")
+        return 0
+    findings, n_files, n_waived = lint_paths(args.paths)
+    for f in findings:
+        print(f)
+    waived = f", {n_waived} waived" if n_waived else ""
+    print(f"[packlint] {n_files} files, {len(findings)} findings{waived}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

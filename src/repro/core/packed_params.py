@@ -142,7 +142,13 @@ class DspTunedLeaf:
         self.decode_block = (
             tuple(decode_block) if decode_block is not None else None
         )
-        self.exact = spec.provably_exact if exact is None else bool(exact)
+        if exact is None:
+            # the certificate is the authority (it proves exactness for a
+            # superset of the constructor's provably_exact predicate)
+            from ..analysis.verify import certify_spec
+
+            exact = certify_spec(spec).exact
+        self.exact = bool(exact)
         if payload is None:
             if values is None:
                 raise ValueError("DspTunedLeaf needs values or payload")
@@ -463,8 +469,10 @@ def quantize_for_serving(params, mode: str = "int4_packed",
             else:  # tuning.PlanReport
                 spec, block = plan.spec, plan.block
                 dblock = getattr(plan, "decode_block", None)
-                exact = plan.mae == 0 and (
-                    plan.exhaustive or plan.spec.provably_exact
+                cert = getattr(plan, "certificate", None)
+                exact = (cert.exact if cert is not None
+                         else plan.spec.provably_exact) or (
+                    plan.mae == 0 and plan.exhaustive
                 )
             targets[p] = (spec, block, dblock, exact)
         return _convert_tree(

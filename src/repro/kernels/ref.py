@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import clauses
+
 __all__ = [
     "PackedDotSpec",
     "PackedWeightWords",
@@ -157,7 +159,8 @@ class PackedDotSpec:
                 f"the accumulated packed sum spans {total.bit_length()} bits"
                 f"{per_col} but the int32 accumulator provides 31 value bits; "
                 f"reduce n_pairs (={self.n_pairs}), the field spacing p "
-                f"(={self.p}), or raise n_columns (={self.n_columns})"
+                f"(={self.p}), or raise n_columns (={self.n_columns}) "
+                f"[certificate clause: {clauses.CLAUSE_INT32_ACCUMULATOR}]"
             )
         # The accumulated middle (dot-product) field must fit the bits the
         # extraction reads back: ``p`` for exact-spacing schemes,
@@ -170,13 +173,41 @@ class PackedDotSpec:
                     f"{self._describe()} overflows the restored middle field: "
                     f"the accumulated dot product needs {need} bits but "
                     f"p + mr_bits = {self.extract_width}; raise p, raise "
-                    f"mr_bits or reduce n_pairs"
+                    f"mr_bits or reduce n_pairs "
+                    f"[certificate clause: {clauses.CLAUSE_MIDDLE_FIELD}]"
                 )
             raise ValueError(
                 f"{self._describe()} overflows the middle field: the "
                 f"accumulated dot product needs {need} bits but the field "
                 f"spacing provides p = {self.p}; raise p, reduce n_pairs or "
-                "use an mr correction"
+                "use an mr correction "
+                f"[certificate clause: {clauses.CLAUSE_MIDDLE_FIELD}]"
+            )
+        # Extraction aliasing: the sign-extension at ``extract_width`` reads
+        # back M + g, where g is the low field's floor/rounding residue
+        # (g = floor(L / 2^p), or the round-half-up variant).  The middle
+        # field fitting is NOT enough — if the residue pushes the read-back
+        # value past the signed extract width the sign bit flips and the
+        # whole field wraps (error ~2^extract_width, far beyond the
+        # advertised |g| bound).  Reachable for aggressive mr_bits, e.g.
+        # a3w2 p=7 n_pairs=73 mr_bits=5 passes every check above.
+        low_lo = -self.n_pairs * max_a * max_w
+        low_hi = self.n_pairs * max_a * (max_w - 1)
+        if self.rounds_half_up:
+            g_lo = ((low_lo >> (self.p - 1)) + 1) >> 1
+            g_hi = ((low_hi >> (self.p - 1)) + 1) >> 1
+        else:
+            g_lo, g_hi = low_lo >> self.p, low_hi >> self.p
+        mid_hi = self.n_pairs * 2 * max_a * (max_w - 1)
+        bound = 1 << (self.extract_width - 1)
+        if -mid_mag + g_lo < -bound or mid_hi + g_hi > bound - 1:
+            raise ValueError(
+                f"{self._describe()} aliases under extraction: the dot field "
+                f"plus the low-field residue spans "
+                f"[{-mid_mag + g_lo}, {mid_hi + g_hi}] but sign-extension at "
+                f"p + mr_bits = {self.extract_width} bits only represents "
+                f"[{-bound}, {bound - 1}]; raise p or reduce mr_bits "
+                f"[certificate clause: {clauses.CLAUSE_EXTRACTION_ALIAS}]"
             )
 
     def _describe(self) -> str:
@@ -236,9 +267,14 @@ class PackedDotSpec:
         if self.correction == "full":
             return True
         if self.correction == "mr+full":
+            # exact iff round-half-up of the low field is identically zero:
+            # L in [-n·amax·wmag, n·amax·(wmag-1)], and rhu(v) == 0 for
+            # v in [-2^(p-1), 2^(p-1) - 1] — the lower bound is INCLUSIVE
+            # (rhu(-2^(p-1)) = floor((-1+1)/2) = 0), hence <=.  The
+            # analysis.verify interval walk derives the same boundary.
             max_a = (1 << self.col_bits_a) - 1
             max_w = 1 << (self.bits_w - 1)
-            return self.n_pairs * max_a * max_w < 1 << (self.p - 1)
+            return self.n_pairs * max_a * max_w <= 1 << (self.p - 1)
         return False
 
     def name(self) -> str:

@@ -260,6 +260,30 @@ def lower_cell(
     return lowered, cfg, mesh
 
 
+def _packing_plan_verdicts(cfg) -> dict:
+    """Per-layer serving plan + certificate verdict, from shapes alone.
+
+    ``plan_linear_layers`` only reads leaf shapes, so the abstract
+    ``eval_shape`` tree is enough — no weights are materialized at dry-run
+    scale.  Each row carries the selected plan name and its certificate's
+    exact/bounded verdict (plus the certified per-extraction WCE when
+    bounded), mirroring what ``quantize_for_serving`` would build."""
+    from ..tuning.tuner import plan_linear_layers
+
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+    )
+    out = {}
+    for lpath, report in plan_linear_layers(params_shape).items():
+        cert = report.certificate
+        out[lpath] = {
+            "plan": report.name,
+            "verdict": cert.verdict,
+            "wce_per_extraction": cert.wce_per_extraction,
+        }
+    return out
+
+
 def run_cell(
     arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     smoke: bool = False, variant: str = "baseline",
@@ -288,6 +312,9 @@ def run_cell(
 
         def _cost(compiled_exe):
             cost = compiled_exe.cost_analysis() or {}
+            if isinstance(cost, (list, tuple)):
+                # older jaxlib returns a one-element list of dicts
+                cost = cost[0] if cost else {}
             coll = collective_bytes(compiled_exe.as_text())
             return {
                 "flops": float(cost.get("flops", 0.0)),
@@ -335,6 +362,24 @@ def run_cell(
         print(f"[dryrun] {tag}: OK flops/dev={record['flops']:.3e} "
               f"coll={coll['total']:.3e}B lower={t_lower:.0f}s compile={t_compile:.0f}s",
               flush=True)
+        if variant == "int4_serve":
+            # which plan each layer would serve, with its static error
+            # pedigree — the registry-config projection of exact vs
+            # bounded serving arithmetic (non-fatal: a planning failure
+            # must not mask a successful lowering)
+            try:
+                record["packing_plans"] = _packing_plan_verdicts(cfg)
+                for lpath, row in sorted(record["packing_plans"].items()):
+                    extra = (
+                        "" if row["verdict"] == "exact" else
+                        f" wce/extraction={row['wce_per_extraction']}"
+                    )
+                    print(f"[dryrun]   {lpath}: {row['plan']} "
+                          f"[{row['verdict']}{extra}]", flush=True)
+            except Exception as e:  # noqa: BLE001
+                record["packing_plans_error"] = f"{type(e).__name__}: {e}"
+                print(f"[dryrun]   packing plans unavailable: {e}",
+                      flush=True)
     except Exception as e:  # noqa: BLE001 — record the failure for the report
         record["error"] = f"{type(e).__name__}: {e}"
         record["traceback"] = traceback.format_exc()[-2000:]

@@ -132,6 +132,12 @@ class MixedAllocation:
             "assignments": {
                 p: f"a{a}w{w}" for p, (a, w) in sorted(self.assignments.items())
             },
+            # static pedigree of each layer's plan: exact vs bounded, and
+            # the certified worst case when bounded
+            "certificates": {
+                p: self.plans[p].certificate.to_json_summary()
+                for p in sorted(self.plans)
+            },
         }
 
 
@@ -244,6 +250,17 @@ def allocate_mixed_plans(
                        exact_first=exact_first)
         for b in widths
     }
+    # Certified packed-arithmetic error prior per candidate width: zero for
+    # certificate-exact plans (the defaults), the certificate's analytic
+    # per-extraction MAE bound otherwise.  A bounded plan's demotion charge
+    # is floored at the *certified* error it adds over the current plan, so
+    # a provably lossy plan can never be admitted for free just because the
+    # calibration probe happened not to resolve its damage.
+    prior = {
+        b: (0.0 if plans[b].certificate.exact
+            else float(plans[b].certificate.mae_per_extraction))
+        for b in widths
+    }
     costs = {s.path: _layer_costs(s, plans) for s in sensitivities}
     by_path = {s.path: s for s in sensitivities}
     current = {s.path: base_bits for s in sensitivities}
@@ -256,7 +273,8 @@ def allocate_mixed_plans(
                 d_cost = costs[path][cur] - costs[path][bits]
                 if d_cost <= 0:
                     continue
-                d_err = sens.delta(bits, cur)
+                d_err = max(sens.delta(bits, cur),
+                            prior[bits] - prior[cur])
                 if spent + d_err > mixed_budget:
                     continue
                 better = best is None or (

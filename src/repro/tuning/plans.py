@@ -32,6 +32,7 @@ from ..kernels.ref import CORRECTIONS, PackedDotSpec
 __all__ = [
     "min_exact_p",
     "enumerate_specs",
+    "certified_plans",
     "enumerate_packing_configs",
     "DEFAULT_N_PAIRS",
     "DEFAULT_MAX_MR_BITS",
@@ -121,6 +122,27 @@ def enumerate_specs(
                         except ValueError:
                             pass
     return tuple(specs)
+
+
+def certified_plans(
+    a_bits: int,
+    w_bits: int,
+    **enumerate_kwargs,
+) -> tuple[tuple[PackedDotSpec, "object"], ...]:
+    """Enumerated specs stamped with their static certificates.
+
+    Every plan the enumerator emits is paired with the
+    :class:`~repro.analysis.verify.PlanCertificate` proving its legality
+    and error bound (the verifier memoizes, so stamping is cheap).  The
+    enumerator and constructor guarantee legality by construction; the
+    certificate additionally carries the exact/bounded verdict, the tight
+    per-extraction WCE with its witness, and the analytic MAE — consumers
+    (the tuner's budget filter, benchmarks, the serving planner) read
+    those instead of re-measuring."""
+    from ..analysis.verify import certify_spec
+
+    specs = enumerate_specs(a_bits, w_bits, **enumerate_kwargs)
+    return tuple((spec, certify_spec(spec)) for spec in specs)
 
 
 def enumerate_packing_configs(

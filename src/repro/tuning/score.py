@@ -71,22 +71,35 @@ class SpecScore:
     n_samples: int = 4096  # measured output values behind the stats
 
     @property
+    def certificate(self):
+        """The plan's static :class:`~repro.analysis.verify.PlanCertificate`
+        (cached at the verifier)."""
+        from ..analysis.verify import certify_spec
+
+        return certify_spec(self.spec)
+
+    @property
     def mae(self) -> float:
         return self.stats.mae_bar
 
     @property
     def mae_per_extraction(self) -> float:
-        """Observed MAE per packed multiply — floored for unproven zeros.
+        """MAE per packed multiply — certificate-backed for unproven zeros.
 
-        A sampled grid observing zero error is evidence, not proof: unless
-        the spec's algebra guarantees exactness (``spec.provably_exact``)
-        the plan's error is reported as at least one part in the sample
-        count, so an ``error_budget=0`` selection can only ever admit
-        provably exact plans."""
+        A sampled grid observing zero error is evidence, not proof: when
+        the measurement says zero but the plan is not certified exact, the
+        certificate's analytic mean-error derivation (exact distribution
+        convolution, see ``analysis.verify``) replaces the observation —
+        it is provably positive for every non-exact dot plan, so an
+        ``error_budget=0`` selection admits exactly the certified-exact
+        plans."""
         observed = self.stats.mae_bar / self.n_extractions
-        if observed == 0.0 and not self.exhaustive and not self.spec.provably_exact:
-            return 1.0 / self.n_samples
-        return observed
+        if observed > 0.0 or self.exhaustive:
+            return observed
+        cert = self.certificate
+        if cert.exact:
+            return 0.0
+        return float(cert.mae_per_extraction)
 
     @property
     def ep(self) -> float:

@@ -69,6 +69,14 @@ class PlanReport:
     def name(self) -> str:
         return self.spec.name()
 
+    @property
+    def certificate(self):
+        """Static :class:`~repro.analysis.verify.PlanCertificate` for the
+        plan (memoized at the verifier — cheap to re-read)."""
+        from ..analysis.verify import certify_spec
+
+        return certify_spec(self.spec)
+
     def to_json(self) -> dict:
         return {
             "plan": self.name,
@@ -81,6 +89,8 @@ class PlanReport:
             "mr_bits": self.spec.mr_bits,
             "n_columns": self.spec.n_columns,
             "provably_exact": self.spec.provably_exact,
+            # self-describing error pedigree for BENCH_tuning.json rows
+            "certificate": self.certificate.to_json_summary(),
             "mae_per_extraction": self.mae_per_extraction,
             "ep_percent": self.ep,
             "wce": self.wce,
@@ -155,8 +165,11 @@ def rank_plans(
         specs = enumerate_specs(a_bits, w_bits)
     reports = [_scored(s, n_extractions, samples, seed) for s in specs]
     within = [r for r in reports if r.mae_per_extraction <= error_budget]
+
     def _proven(r):
-        return r.mae == 0 and (r.exhaustive or r.spec.provably_exact)
+        # the certificate is the proof; an exhaustively-enumerated zero is
+        # an equally valid finite proof (and cross-checks the certificate)
+        return r.certificate.exact or (r.mae == 0 and r.exhaustive)
 
     if autotune:
         if shape is None:

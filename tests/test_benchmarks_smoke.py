@@ -190,6 +190,49 @@ def test_check_bench_gate(tmp_path):
     assert len(failures) == 1 and "dsp_mixed_vs_uniform_int4" in failures[0]
     assert check_bench.check(str(tmp_path / "nope.json"))  # unreadable fails
 
+    # multiple --bench files: ALL failures reported in one pass
+    assert check_bench.main(
+        ["--bench", str(p2), "--bench", str(p4)]) == 1
+
+    # tuning certificate-coherence gate
+    coherent = {"plan_table": [
+        {"plan": "a4w4-p11-n4-full", "provably_exact": True,
+         "mae_per_extraction": 0, "wce": 0,
+         "certificate": {"verdict": "exact", "wce_per_extraction": 0,
+                         "mae_per_extraction": 0.0, "mae_kind": "exact"}},
+        {"plan": "a4w4-p11-n4-naive", "provably_exact": False,
+         "mae_per_extraction": 0.37, "wce": 4,
+         "certificate": {"verdict": "bounded", "wce_per_extraction": 1,
+                         "mae_per_extraction": 0.57, "mae_kind": "exact"}},
+    ]}
+    pt = tmp_path / "tuning_ok.json"
+    pt.write_text(json.dumps(coherent))
+    assert check_bench.check_tuning(str(pt)) == []
+    assert check_bench.main(
+        ["--bench", str(p), "--tuning", str(pt)]) == 0
+
+    incoherent = {"plan_table": [
+        # provably_exact but certified bounded: verifier/measurement split
+        {"plan": "a4w4-p11-n4-full", "provably_exact": True,
+         "mae_per_extraction": 0, "wce": 0,
+         "certificate": {"verdict": "bounded", "wce_per_extraction": 1,
+                         "mae_per_extraction": 0.1, "mae_kind": "exact"}},
+        # certified exact but measured nonzero error
+        {"plan": "a4w4-p10-n16-mr+full", "provably_exact": False,
+         "mae_per_extraction": 0.01, "wce": 2,
+         "certificate": {"verdict": "exact", "wce_per_extraction": 0,
+                         "mae_per_extraction": 0.0, "mae_kind": "exact"}},
+        # no certificate at all
+        {"plan": "a4w4-p11-n4-naive", "provably_exact": False,
+         "mae_per_extraction": 0.37, "wce": 4},
+    ]}
+    pb = tmp_path / "tuning_bad.json"
+    pb.write_text(json.dumps(incoherent))
+    failures = check_bench.check_tuning(str(pb))
+    assert len(failures) == 3
+    assert check_bench.main(
+        ["--bench", str(p), "--tuning", str(pb)]) == 1
+
 
 def test_fast_prepacked_engine_decodes(tmp_path):
     """Fast-lane smoke: a tiny engine with prepacked weights builds and
@@ -236,7 +279,18 @@ def test_tuning_bench_schema_has_a8w8_column_row(tmp_path, monkeypatch, capsys):
     assert a8["bits_a"] == a8["bits_w"] == 8
     assert a8["n_columns"] > 1 and a8["provably_exact"]
     assert a8["us_per_call"] > 0 and a8["int8_dense_us_per_call"] > 0
-    # every plan-table row carries the column axis now
+    # every plan-table row carries the column axis and its certificate
+    # summary (self-describing error pedigree)
     assert all("n_columns" in row for row in blob["plan_table"])
+    for row in blob["plan_table"]:
+        cert = row["certificate"]
+        assert cert["verdict"] in ("exact", "bounded")
+        if row["provably_exact"]:
+            assert cert["verdict"] == "exact"
+        if cert["verdict"] == "exact":
+            assert row["mae_per_extraction"] == 0 and row["wce"] == 0
+    from benchmarks import check_bench
+
+    assert check_bench.check_tuning(str(out)) == []
     assert blob["decode"]["dsp_tuned_tok_s"] > 0
     assert _csv_rows(capsys)

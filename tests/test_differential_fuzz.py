@@ -13,8 +13,8 @@ Structure:
   random cases: random spec from the enumerator's full emission over six
   width pairs (including asymmetric a8w4/a4w8 and the column-packed a8w8
   family), random ragged shape, full-range operands; asserts BIT parity
-  between simulator and reference, plus the analytic worst-case error bound
-  vs the exact integer matmul.  The first ``SMOKE_CASES`` run in the fast
+  between simulator and reference, plus the statically certified
+  worst-case error bound (``analysis.verify``) vs the exact integer matmul.  The first ``SMOKE_CASES`` run in the fast
   lane; the long tail carries the ``slow`` marker (CI runs it in the
   scheduled/labelled slow lane).
 * ``TestKernelInTheLoop`` — a deterministic spec subset (every scheme ×
@@ -44,6 +44,7 @@ import pytest
 
 from dsp_sim import simulate_packed_matmul
 
+from repro.analysis.verify import certify_spec
 from repro.kernels import ref
 from repro.kernels.packed_matmul import packed_matmul
 from repro.tuning import enumerate_specs
@@ -55,10 +56,6 @@ SMOKE_CASES = 12  # unmarked prefix: always runs, even in the fast CI lane
 WIDTH_PAIRS = ((2, 2), (4, 4), (4, 8), (6, 6), (8, 4), (8, 8))
 POOL = [s for a, w in WIDTH_PAIRS for s in enumerate_specs(a, w)]
 COLUMN_POOL = [s for s in POOL if s.n_columns > 1]
-
-
-def _column_scale(spec):
-    return sum(1 << spec.column_shift(j) for j in range(spec.n_columns))
 
 
 def _draw_case(case: int):
@@ -77,14 +74,16 @@ def _draw_case(case: int):
     return spec, x, w
 
 
-def _analytic_error_bound(spec, k: int) -> int:
-    """Worst-case |packed − exact| for a (M, k)·(k, N) matmul under
-    ``spec``: per extraction, per column, the schemes err by at most 1
-    (naive/full rounding) or ``2**mr_bits`` (squeezed-field spill), and
-    column j's error recombines scaled by ``2**(j·col_bits_a)``."""
+def _certified_error_bound(spec, k: int) -> int:
+    """Certified worst-case |packed − exact| for a (M, k)·(k, N) matmul
+    under ``spec``: the static verifier's per-extraction WCE scales
+    linearly with the number of chunk extractions (each extraction's
+    low-field residue is independent).  Strictly tighter than the old
+    hand-derived ``2**mr_bits · Σ 2**column_shift`` envelope — the
+    certificate's interval endpoints are realizable (the verifier carries
+    a witness), so this bound has no slack to hide drift in."""
     n_extractions = -(-k // spec.chunk)
-    per_extraction = (1 << spec.mr_bits) if spec.uses_mr else 1
-    return n_extractions * per_extraction * _column_scale(spec)
+    return n_extractions * certify_spec(spec).wce_per_extraction
 
 
 _CASE_PARAMS = [
@@ -102,11 +101,13 @@ class TestSimulatorVsReference:
         np.testing.assert_array_equal(
             sim, got, err_msg=f"case {case}: {spec.name()}"
         )
-        # and neither model drifts past the analytic worst case
+        # and neither model drifts past the certified worst case
         exact = np.asarray(ref.ref_quantized_matmul(x, w))
-        bound = _analytic_error_bound(spec, x.shape[1])
+        bound = _certified_error_bound(spec, x.shape[1])
         assert np.abs(got - exact).max() <= bound, (case, spec.name())
-        if spec.provably_exact:
+        if certify_spec(spec).exact:
+            # the certificate's exact verdict covers strictly more plans
+            # than the constructor's algebraic provably_exact predicate
             np.testing.assert_array_equal(got, exact)
 
 

@@ -108,21 +108,23 @@ class TestScoring:
 
 class TestSelection:
     def test_budget_filters(self):
-        """Budget 0 admits only PROVEN exact plans — algebraically
-        (``spec.provably_exact``) or by exhaustive enumeration of the
-        extraction's full operand space.  A sampled grid that happened to
-        observe zero error is neither, and stays floored out."""
+        """Budget 0 admits only PROVEN exact plans — by static certificate
+        (``analysis.verify.certify_spec``) or by exhaustive enumeration of
+        the extraction's full operand space.  A sampled grid that happened
+        to observe zero error is neither: its reported MAE falls back to
+        the certificate's analytic bound, which is provably positive for
+        every non-exact plan."""
         exact_only = rank_plans(4, 4, error_budget=0.0)
         assert exact_only and all(r.mae_per_extraction == 0 for r in exact_only)
         assert all(
-            r.spec.provably_exact or (r.exhaustive and r.mae == 0)
+            r.certificate.exact or (r.exhaustive and r.mae == 0)
             for r in exact_only
         )
         sampled_zero = [
             r for r in rank_plans(4, 4, error_budget=0.5)
-            if r.mae == 0 and not r.spec.provably_exact and not r.exhaustive
+            if r.mae == 0 and not r.certificate.exact and not r.exhaustive
         ]
-        for r in sampled_zero:  # floored, so budget 0 cannot admit them
+        for r in sampled_zero:  # certificate-backed, so budget 0 excludes
             assert r.mae_per_extraction > 0
 
     def test_default_budget_prefers_longer_chains(self):
