@@ -31,6 +31,25 @@ certified-exact rows must have measured zero error, and bounded rows must
 carry a positive certified MAE bound.  A mismatch means the verifier and
 the measurement harness disagree about the same plan — always a bug.
 
+``--traffic BENCH_traffic.json`` additionally gates the continuous-
+batching claim from the traffic bench (Poisson arrivals, mixed lengths,
+memory-parity engines):
+
+* ``ratios.continuous_vs_fifo_tok_s >= 1.0`` — continuous batching
+  sustains at least the fixed-slot engine's throughput on the same KV
+  budget.
+* ``ratios.fifo_vs_continuous_ttft_p99 >= 1.0`` — its tail TTFT is no
+  worse than FIFO's (the ratio is FIFO's p99 over continuous's, so >1
+  means continuous wins the tail).
+
+Traffic floors share the same ``--slack``: the replay is wall-clock
+driven on a shared runner, so per-run jitter in makespan and tail TTFT
+is real.  The measured headroom is large (both ratios land well above
+the floor on CPU — the paged pool runs more lanes per byte and prefill
+interleaves with decode), so the gate is calibrated to catch the
+regression class where continuous batching stops paying for itself at
+all, not 5 % drifts.
+
 ALL failing ratios across ALL requested files are reported before the
 nonzero exit, so one slow-lane run shows the full regression picture.
 
@@ -50,6 +69,11 @@ GATES = (
     ("decode.int4_packed_vs_float", 1.0),
     ("decode.dsp_mixed_vs_uniform_int4", 1.0),
 )
+# (dotted JSON path, floor) — the traffic-bench continuous-batching gates
+TRAFFIC_GATES = (
+    ("ratios.continuous_vs_fifo_tok_s", 1.0),
+    ("ratios.fifo_vs_continuous_ttft_p99", 1.0),
+)
 DEFAULT_SLACK = 0.12
 
 
@@ -62,7 +86,8 @@ def _lookup(blob: dict, dotted: str):
     return node
 
 
-def check(bench_path: str, slack: float = DEFAULT_SLACK) -> list[str]:
+def check(bench_path: str, slack: float = DEFAULT_SLACK,
+          gates=GATES) -> list[str]:
     """Gate failures for ``bench_path`` (empty list == all gates hold)."""
     try:
         with open(bench_path) as f:
@@ -70,7 +95,7 @@ def check(bench_path: str, slack: float = DEFAULT_SLACK) -> list[str]:
     except (OSError, json.JSONDecodeError) as e:
         return [f"{bench_path}: unreadable benchmark JSON ({e})"]
     failures = []
-    for dotted, floor in GATES:
+    for dotted, floor in gates:
         value = _lookup(blob, dotted)
         if value is None:
             failures.append(
@@ -136,6 +161,9 @@ def main(argv=None) -> int:
     ap.add_argument("--tuning", default=None,
                     help="also gate a BENCH_tuning.json plan table's "
                     "certificate coherence")
+    ap.add_argument("--traffic", default=None,
+                    help="also gate a BENCH_traffic.json's continuous-"
+                    "batching ratios (TRAFFIC_GATES)")
     ap.add_argument("--slack", type=float, default=DEFAULT_SLACK,
                     help="noise margin subtracted from each floor")
     ap.add_argument("--strict", action="store_true",
@@ -146,6 +174,11 @@ def main(argv=None) -> int:
     failures = []
     for path in bench_paths:
         failures.extend(f"{path}: {msg}" for msg in check(path, slack=slack))
+    if args.traffic:
+        failures.extend(
+            f"{args.traffic}: {msg}" for msg in
+            check(args.traffic, slack=slack, gates=TRAFFIC_GATES)
+        )
     if args.tuning:
         failures.extend(
             f"{args.tuning}: {msg}" for msg in check_tuning(args.tuning)
@@ -156,6 +189,10 @@ def main(argv=None) -> int:
         for path in bench_paths:
             for dotted, floor in GATES:
                 print(f"[check_bench] ok {path}:{dotted} "
+                      f"(floor {floor}, slack {slack})")
+        if args.traffic:
+            for dotted, floor in TRAFFIC_GATES:
+                print(f"[check_bench] ok {args.traffic}:{dotted} "
                       f"(floor {floor}, slack {slack})")
         if args.tuning:
             print(f"[check_bench] ok {args.tuning}: plan-table "

@@ -11,7 +11,8 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None,
         help="comma-separated subset: "
-             "table1,table2,table3,fig9,kernel,roofline,serving,tuning",
+             "table1,table2,table3,fig9,kernel,roofline,serving,tuning,"
+             "traffic",
     )
     args = ap.parse_args()
     from . import (
@@ -22,6 +23,7 @@ def main() -> None:
         table1_packing,
         table2_per_result,
         table3_addpack,
+        traffic_bench,
         tuning_bench,
     )
 
@@ -35,6 +37,7 @@ def main() -> None:
         "roofline": roofline.run,
         "serving": serving_bench.run,
         "tuning": tuning_bench.run,
+        "traffic": traffic_bench.run,
     }
     if args.only:
         selected = [s.strip() for s in args.only.split(",") if s.strip()]

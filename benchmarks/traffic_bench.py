@@ -1,0 +1,257 @@
+"""Traffic benchmark: continuous batching vs fixed-slot FIFO under load.
+
+Replays ONE seeded open-loop workload — Poisson arrivals at ``RATE_HZ``
+with a 70/25/5 mix of short, long and XL requests — against both engines
+at **memory parity**: the fixed-slot ``Engine`` gets ``FIFO_SLOTS`` dense
+windows of the chunk-padded ``MAX_LEN`` grid, and ``ContinuousEngine``
+gets the same KV budget as a shared page pool (``n_pages * page_size ==
+FIFO_SLOTS * grid``) spread over more lanes.  The mechanisms under test:
+
+* the paged pool admits by *actual* footprint (a short request holds a
+  handful of 8-token pages, not a 192-token window), so more requests
+  decode concurrently on the same memory;
+* prefill runs one chunk per engine step *interleaved* with decode,
+  where the slot engine's admission runs a whole prompt's chunks while
+  every decoding slot stalls — the head-of-line blocking a mixed-length
+  queue exposes.
+
+The arrival clock is wall time: arrivals whose timestamp has passed are
+submitted before each engine step, and the engine sleeps only when truly
+idle.  The rate is chosen to saturate both engines, so the measured
+makespan is capacity-limited and ``sustained tok/s`` compares real
+throughput, not offered load.
+
+Each engine replays the workload ``REPEATS`` times and the run with the
+higher sustained tok/s is reported (same treatment for both engines):
+the replay clock is wall time on a shared CPU, and best-of repeats keeps
+a transient system hiccup in one replay from polluting the gated ratios.
+
+Reported per engine: sustained tok/s (emitted tokens / makespan), p50/p99
+TTFT, p50/p99 per-output-token latency (both from the scheduler's
+percentile aggregation), finished/preempted counts.  The headline ratios
+``continuous_vs_fifo_tok_s`` and ``fifo_vs_continuous_ttft_p99`` are
+gated in ``check_bench.py`` (see TRAFFIC_GATES there for the documented
+noise slack).  Emits ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_traffic.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import ContinuousEngine, Engine, ServeConfig, percentile
+
+from .bench_util import emit
+
+# Decode must be weight-bandwidth-bound for continuous batching to pay:
+# at serving shapes the per-step cost is dominated by streaming the
+# weights, so a wider decode batch amortizes the same weight traffic over
+# more emitted tokens (measured here: an 8-lane step costs ~2x a 2-lane
+# step, not 4x).  A toy-width model (d_model=64) is compute-bound — every
+# extra lane costs proportionally more and NO batching scheme can win —
+# so the bench model is sized to the bandwidth-bound regime the serving
+# stack actually targets (it is the same regime that makes the paper's
+# packed-weight decode pay, README "Packed-weight decode").
+CFG = ModelConfig(
+    name="traffic-bench", family="dense", n_layers=2, d_model=512, n_heads=8,
+    n_kv_heads=4, d_ff=2048, vocab_size=1024, dtype="float32",
+)
+MAX_LEN = 192
+CHUNK = 8
+PAGE_SIZE = 8
+# memory parity: FIFO_SLOTS dense windows == N_PAGES * PAGE_SIZE pooled.
+# max_len is provisioned for the rare XL request (the worst case a server
+# must accept), so each dense slot reserves a 192-token window while the
+# typical request needs ~20-60 tokens — the regime paged allocation
+# exists for.  On the same budget the paged pool runs 8 lanes where the
+# dense engine affords 2 windows.
+FIFO_SLOTS = 2
+CONT_LANES = 8
+WATERMARK = 8   # one in-flight growth page per lane
+# workload: open-loop Poisson arrivals at a saturating rate (the offered
+# token rate is several times either engine's capacity, so makespan is
+# capacity-limited and sustained tok/s compares real throughput).
+# 70 % short / 25 % long / 5 % XL; the XL class is what forces
+# max_len=192 provisioning.
+N_REQUESTS = 96
+RATE_HZ = 400.0
+SHORT_PROMPT = (4, 9)      # rng.integers bounds (lo, hi)
+SHORT_MAX_NEW = (24, 33)
+LONG_PROMPT = (24, 33)
+LONG_MAX_NEW = (48, 65)
+XL_PROMPT = (64, 97)
+XL_MAX_NEW = (32, 49)
+SEED = 0
+REPEATS = 2  # best-of replays per engine (wall-clock noise suppression)
+
+
+def _grid() -> int:
+    return -(-MAX_LEN // CHUNK) * CHUNK
+
+
+def _workload(rng: np.random.Generator):
+    """[(prompt, max_new), ...] + arrival offsets (seconds)."""
+    reqs = []
+    for _ in range(N_REQUESTS):
+        u = rng.random()
+        if u < 0.70:
+            p_lo, p_hi = SHORT_PROMPT
+            n_lo, n_hi = SHORT_MAX_NEW
+        elif u < 0.95:
+            p_lo, p_hi = LONG_PROMPT
+            n_lo, n_hi = LONG_MAX_NEW
+        else:
+            p_lo, p_hi = XL_PROMPT
+            n_lo, n_hi = XL_MAX_NEW
+        prompt = list(rng.integers(2, CFG.vocab_size,
+                                   size=int(rng.integers(p_lo, p_hi))))
+        reqs.append((prompt, int(rng.integers(n_lo, n_hi))))
+    arrivals = np.cumsum(rng.exponential(1.0 / RATE_HZ, size=N_REQUESTS))
+    return reqs, arrivals
+
+
+def _replay(engine, reqs, arrivals) -> dict:
+    """Open-loop replay: submit arrivals whose wall-clock time has passed,
+    step the engine, sleep only when idle.  Metrics are computed over the
+    replay's own requests (warm-up requests on the same engine instance
+    are excluded by rid), from each request's recorded timestamps."""
+    first_rid = engine.scheduler.next_rid
+    preempted_before = engine.stats().get("preempted", 0)
+    t_start = time.monotonic()
+    i = 0
+    while True:
+        now = time.monotonic() - t_start
+        while i < len(reqs) and arrivals[i] <= now:
+            prompt, max_new = reqs[i]
+            engine.submit(prompt, max_new=max_new, admit=False)
+            i += 1
+        if engine.active.any() or engine.scheduler.n_queued:
+            engine.step()
+        elif i < len(reqs):
+            time.sleep(max(0.0, min(arrivals[i] - now, 0.01)))
+        else:
+            break
+    makespan = time.monotonic() - t_start
+    done = [r for r in engine.scheduler.requests.values()
+            if r.done and r.rid >= first_rid]
+    total_tokens = sum(len(r.tokens) for r in done)
+    ttfts = [r.prefill_done_at - r.submitted_at for r in done]
+    latencies = [r.finished_at - r.submitted_at for r in done]
+    tpots = [(r.finished_at - r.prefill_done_at) / (len(r.tokens) - 1)
+             for r in done if len(r.tokens) > 1]
+    return {
+        "finished": len(done),
+        "preempted": engine.stats().get("preempted", 0) - preempted_before,
+        "total_tokens": total_tokens,
+        "makespan_s": makespan,
+        "sustained_tok_s": total_tokens / makespan if makespan > 0 else 0.0,
+        "p50_ttft_s": percentile(ttfts, 50.0),
+        "p99_ttft_s": percentile(ttfts, 99.0),
+        "p50_tpot_s": percentile(tpots, 50.0),
+        "p99_tpot_s": percentile(tpots, 99.0),
+        "mean_latency_s": sum(latencies) / len(latencies) if latencies
+        else 0.0,
+    }
+
+
+def _best_replay(engine, reqs, arrivals) -> dict:
+    """Best of ``REPEATS`` replays by sustained tok/s.  Rid bracketing in
+    ``_replay`` keeps each repeat's metrics independent, and the engine
+    drains fully between repeats (all pages freed), so repeats start from
+    identical state with warm jit caches."""
+    rows = [_replay(engine, reqs, arrivals) for _ in range(REPEATS)]
+    return max(rows, key=lambda r: r["sustained_tok_s"])
+
+
+def _warm(engine) -> None:
+    """Trace every jitted program before timing.  The engines jit their
+    step functions per instance, so warm-up must run on the instance the
+    replay uses; two mixed-length prompts exercise prefill (multi-chunk
+    and single-chunk lanes), decode, sampling and the lm head."""
+    long_prompt = list(range(2, 2 + LONG_PROMPT[0]))
+    engine.generate([[2, 3, 4, 5], long_prompt], max_new=3)
+
+
+def build_engines(params):
+    grid = _grid()
+    n_pages = FIFO_SLOTS * grid // PAGE_SIZE
+    fifo = Engine(CFG, params, ServeConfig(
+        n_slots=FIFO_SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+        max_new=MAX_LEN,
+    ))
+    cont = ContinuousEngine(CFG, params, ServeConfig(
+        n_slots=CONT_LANES, max_len=MAX_LEN, prefill_chunk=CHUNK,
+        max_new=MAX_LEN, page_size=PAGE_SIZE, n_pages=n_pages,
+        watermark_pages=WATERMARK,
+    ))
+    return fifo, cont
+
+
+def run(out_path: str = "BENCH_traffic.json") -> dict:
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    reqs, arrivals = _workload(np.random.default_rng(SEED))
+    fifo, cont = build_engines(params)
+    _warm(fifo)
+    _warm(cont)
+    fifo_row = _best_replay(fifo, reqs, arrivals)
+    cont_row = _best_replay(cont, reqs, arrivals)
+
+    ratios = {
+        "continuous_vs_fifo_tok_s": (
+            cont_row["sustained_tok_s"] / fifo_row["sustained_tok_s"]
+            if fifo_row["sustained_tok_s"] else 0.0
+        ),
+        # >1 means FIFO's tail TTFT is worse (continuous wins the tail)
+        "fifo_vs_continuous_ttft_p99": (
+            fifo_row["p99_ttft_s"] / cont_row["p99_ttft_s"]
+            if cont_row["p99_ttft_s"] else 0.0
+        ),
+    }
+    result = {
+        "config": {
+            "model": CFG.name, "backend": jax.default_backend(),
+            "max_len": MAX_LEN, "chunk": CHUNK, "page_size": PAGE_SIZE,
+            "fifo_slots": FIFO_SLOTS, "cont_lanes": CONT_LANES,
+            "n_pages": FIFO_SLOTS * _grid() // PAGE_SIZE,
+            "watermark_pages": WATERMARK,
+            "n_requests": N_REQUESTS, "rate_hz": RATE_HZ, "seed": SEED,
+            "repeats": REPEATS,
+            # lists, not tuples, so the dict equals its JSON round-trip
+            "short": {"prompt": list(SHORT_PROMPT),
+                      "max_new": list(SHORT_MAX_NEW)},
+            "long": {"prompt": list(LONG_PROMPT),
+                     "max_new": list(LONG_MAX_NEW)},
+            "xl": {"prompt": list(XL_PROMPT), "max_new": list(XL_MAX_NEW)},
+        },
+        "fifo": fifo_row,
+        "continuous": cont_row,
+        "ratios": ratios,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    for name, row in (("fifo", fifo_row), ("continuous", cont_row)):
+        emit(
+            f"traffic_{name}",
+            1e6 / row["sustained_tok_s"] if row["sustained_tok_s"] else 0.0,
+            f"{row['sustained_tok_s']:.1f} tok/s sustained, "
+            f"ttft p50 {row['p50_ttft_s'] * 1e3:.0f}ms "
+            f"p99 {row['p99_ttft_s'] * 1e3:.0f}ms, "
+            f"{row['finished']} finished, {row['preempted']} preempted",
+        )
+    emit("traffic_continuous_vs_fifo",
+         ratios["continuous_vs_fifo_tok_s"],
+         f"{ratios['continuous_vs_fifo_tok_s']:.2f}x sustained tok/s, "
+         f"{ratios['fifo_vs_continuous_ttft_p99']:.2f}x p99-TTFT win")
+    return result
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

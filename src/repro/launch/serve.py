@@ -1,8 +1,10 @@
-"""Serving driver: batched requests through the slot engine.
+"""Serving driver: batched requests through the slot or paged engine.
 
-CPU-smoke example:
+CPU-smoke examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-110b --smoke \
       --requests 6 --max-new 16 --quant int4_packed --temperature 0.8
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-110b --smoke \
+      --engine continuous --page-size 8 --stream --requests 6
 """
 
 from __future__ import annotations
@@ -15,7 +17,7 @@ import numpy as np
 
 from ..models import transformer as T
 from ..models.registry import get_config
-from ..serving import Engine, SamplingParams, ServeConfig
+from ..serving import ContinuousEngine, Engine, SamplingParams, ServeConfig
 
 
 def main() -> None:
@@ -27,6 +29,22 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--engine", default="slot",
+                    choices=["slot", "continuous"],
+                    help="'slot' = fixed-slot FIFO over dense per-slot cache "
+                         "windows; 'continuous' = continuous batching over "
+                         "a paged KV cache (attention-only families)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="continuous: KV tokens per physical cache page")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="continuous: physical page pool size (default: "
+                         "memory parity with the slot engine's windows)")
+    ap.add_argument("--watermark-pages", type=int, default=None,
+                    help="continuous: free-page floor admission keeps "
+                         "(default: one growth page per lane)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print (rid, token) pairs as they are emitted "
+                         "instead of waiting for requests to finish")
     ap.add_argument("--quant", default="native",
                     choices=["native", "int8", "int4_packed", "dsp_packed",
                              "dsp_tuned", "dsp_mixed"])
@@ -82,7 +100,8 @@ def main() -> None:
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, ServeConfig(
+    engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
+    engine = engine_cls(cfg, params, ServeConfig(
         n_slots=args.slots, max_len=args.max_len,
         prefill_chunk=args.prefill_chunk, quant_mode=args.quant,
         seed=args.seed, error_budget=args.error_budget,
@@ -92,6 +111,9 @@ def main() -> None:
         calib_tokens=args.calib_tokens,
         prepack=args.prepack,
         fuse_projections=args.fuse_projections,
+        page_size=args.page_size,
+        n_pages=args.n_pages,
+        watermark_pages=args.watermark_pages,
     ))
     if engine.mixed_allocation is not None:
         alloc = engine.mixed_allocation
@@ -122,7 +144,17 @@ def main() -> None:
         for _ in range(args.requests)
     ]
     t0 = time.time()
-    outputs = engine.generate(prompts, max_new=args.max_new, sampling=sampling)
+    if args.stream:
+        rids = [engine.submit(p, max_new=args.max_new, sampling=sampling,
+                              admit=False) for p in prompts]
+        while engine.active.any() or engine.scheduler.n_queued:
+            engine.step()
+            for rid, tok in engine.drain_stream():
+                print(f"[stream] rid {rid} -> {tok}")
+        outputs = {r: list(engine.scheduler.requests[r].tokens) for r in rids}
+    else:
+        outputs = engine.generate(prompts, max_new=args.max_new,
+                                  sampling=sampling)
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in outputs.values())
     for rid, toks in sorted(outputs.items()):
@@ -131,11 +163,18 @@ def main() -> None:
               f"-> {toks[:8]}...")
     stats = engine.stats()
     print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
-          f"(quant={engine.scfg.quant_mode}, "
+          f"(engine={args.engine}, quant={engine.scfg.quant_mode}, "
           f"prefill {stats['prefill_tok_s']:.1f} tok/s, "
           f"decode {stats['decode_tok_s']:.1f} tok/s, "
-          f"mean ttft {stats['mean_ttft_s'] * 1e3:.0f}ms, "
+          f"ttft p50 {stats['p50_ttft_s'] * 1e3:.0f}ms / "
+          f"p99 {stats['p99_ttft_s'] * 1e3:.0f}ms, "
           f"mean latency {stats['mean_latency_s'] * 1e3:.0f}ms)")
+    if args.engine == "continuous":
+        print(f"[serve] pages: {stats['n_pages'] - stats['free_pages']}"
+              f"/{stats['n_pages']} in use at exit "
+              f"(page_size {stats['page_size']}, watermark "
+              f"{stats['watermark_pages']}, "
+              f"preempted {stats['preempted']})")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,14 @@ KV caches:
   * sliding-window (SWA) — ring buffer of ``window`` slots written at
     ``pos % window``; decode attends over at most ``window`` keys, making
     long-context decode O(window) (sub-quadratic — DESIGN.md §5).
+  * paged — physical pages (n_pages, page_size, n_kv, hd) shared by every
+    lane; a per-lane ``page_table`` (B, max_blocks) maps logical block
+    ``pos // page_size`` to its physical page.  Writes scatter through the
+    table (OOB sentinel entries drop the write — the serving engine masks
+    lanes by handing them an all-invalid table row), reads gather the
+    lane's logical view back and attend with the same validity mask as the
+    dense cache, so paged and dense decode are token-identical
+    (``serving.paged_cache`` owns the allocation).
 """
 
 from __future__ import annotations
@@ -104,11 +112,15 @@ def attention(
     cache: Params | None = None,
     causal: bool = True,
     kv_x: jax.Array | None = None,
+    page_table: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None]:
     """GQA attention. ``cache=None`` → full-sequence (train/prefill).
 
     ``kv_x`` switches to cross-attention (whisper decoder): K/V come from
     ``kv_x`` and neither causality nor cache updates apply to the source.
+    A paged cache (``pages_k``/``pages_v`` leaves) needs ``page_table``
+    (B, max_blocks) int32 mapping each lane's logical blocks to physical
+    pages; entries == n_pages mark unallocated blocks / masked lanes.
     """
     b, s, _ = x.shape
     hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
@@ -137,7 +149,52 @@ def attention(
         k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "pages_k" in cache:
+        # paged/block KV cache: scatter this call's K/V through the lane's
+        # page table, gather the logical view back, attend with the dense
+        # validity mask.  Unallocated blocks and masked lanes carry the
+        # OOB sentinel (== n_pages): their writes are DROPPED (JAX OOB
+        # scatter semantics) and their gathered junk is masked to NEG_INF,
+        # whose exp underflows to exactly 0 — so paged attention is
+        # bit-identical to the dense cache over the valid positions.
+        assert page_table is not None, "paged cache needs a page_table"
+        assert not cfg.sliding_window, "paged cache is full-attention only"
+        pages_k, pages_v = cache["pages_k"], cache["pages_v"]
+        n_pages, ps = pages_k.shape[0], pages_k.shape[1]
+        max_blocks = page_table.shape[1]
+        if positions.ndim == 2:
+            row_pos = positions[:, 0]
+        else:
+            row_pos = jnp.broadcast_to(positions.reshape(-1)[:1], (b,))
+        pos = row_pos[:, None] + jnp.arange(s)[None]          # (B, S)
+        blk = pos // ps
+        page = jnp.take_along_axis(
+            page_table, jnp.clip(blk, 0, max_blocks - 1), axis=1
+        )
+        # positions past the logical window must not clamp into a live
+        # block: force them to the drop sentinel
+        page = jnp.where(blk < max_blocks, page, n_pages)
+        off = pos % ps
+        pages_k = pages_k.at[page, off].set(
+            k.astype(pages_k.dtype), mode="drop"
+        )
+        pages_v = pages_v.at[page, off].set(
+            v.astype(pages_v.dtype), mode="drop"
+        )
+        new_cache = {"pages_k": pages_k, "pages_v": pages_v}
+        # gather the lane's logical view (invalid entries clamp to junk
+        # pages — masked below exactly like unwritten dense positions)
+        window = max_blocks * ps
+        k = pages_k[page_table].reshape(b, window, nkv, hd)
+        v = pages_v[page_table].reshape(b, window, nkv, hd)
+        cache_positions = jnp.arange(window)
+        qidx = jnp.arange(s)
+        valid = (
+            cache_positions[None, None, :]
+            <= row_pos[:, None, None] + qidx[None, :, None]
+        )
+        mask = jnp.where(valid[:, None, :, :], 0.0, NEG_INF)
+    elif cache is not None:
         # decode (s==1) or cached chunked prefill (s>1, full attention only):
         # write K/V at each row's own position, attend over the cache.  Rows
         # (serving slots) may sit at different depths, so writes and masks
@@ -260,6 +317,16 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
     window = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     shape = (batch, window, cfg.n_kv_heads, cfg.hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_kv_cache(
+    cfg: ModelConfig, n_pages: int, page_size: int, dtype=jnp.bfloat16
+):
+    """Physical page pool for one attention layer: every serving lane's
+    K/V lives in fixed-size pages mapped through a per-lane page table
+    (``serving.paged_cache.PageAllocator`` owns the mapping)."""
+    shape = (n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {"pages_k": jnp.zeros(shape, dtype), "pages_v": jnp.zeros(shape, dtype)}
 
 
 # ---- MLP -------------------------------------------------------------------

@@ -34,6 +34,7 @@ from .layers import (
     init_gelu_mlp,
     init_kv_cache,
     init_mlp,
+    init_paged_kv_cache,
     init_rmsnorm,
     mlp,
     rmsnorm,
@@ -51,7 +52,10 @@ from .ssm import (
     slstm,
 )
 
-__all__ = ["init_params", "forward", "encode", "init_cache", "Model"]
+__all__ = [
+    "init_params", "forward", "encode", "init_cache", "init_paged_cache",
+    "Model",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +194,33 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     )
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int, dtype=None):
+    """Stacked (n_groups, ...) paged decode cache: per-layer physical page
+    pools written/read through a per-lane page table (the continuous
+    serving engine's cache — see ``serving.paged_cache``).
+
+    Only families whose whole decode state is full-attention KV can page:
+    recurrent state (ssm/hybrid) has no positional layout to page, and a
+    sliding-window ring buffer already bounds its own memory.
+    """
+    if dtype is None:
+        dtype = _dtype(cfg)
+    if cfg.family not in ("dense", "vlm", "moe", "encdec"):
+        raise ValueError(
+            f"paged cache needs a pure full-attention family, got "
+            f"{cfg.family!r} (recurrent state cannot be paged)"
+        )
+    if cfg.sliding_window:
+        raise ValueError(
+            "paged cache does not support sliding-window attention "
+            "(the ring buffer already bounds cache memory)"
+        )
+    one = {"attn": init_paged_kv_cache(cfg, n_pages, page_size, dtype)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape).copy(), one
+    )
+
+
 # ---------------------------------------------------------------------------
 # group apply
 # ---------------------------------------------------------------------------
@@ -203,6 +234,7 @@ def _apply_group(
     cache: Params | None,
     encoder_out: jax.Array | None,
     causal: bool = True,
+    page_table: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     fam = cfg.family
@@ -217,6 +249,7 @@ def _apply_group(
         h, new_kv = attention(
             gp["attn"], rmsnorm(gp["ln1"], x, cfg.norm_eps), cfg, positions,
             cache=None if cache is None else cache["attn"], causal=causal,
+            page_table=page_table,
         )
         x = add(x, h)
         x = add(x, mlp(gp["mlp"], rmsnorm(gp["ln2"], x, cfg.norm_eps), spec))
@@ -226,6 +259,7 @@ def _apply_group(
         h, new_kv = attention(
             gp["attn"], rmsnorm(gp["ln1"], x, cfg.norm_eps), cfg, positions,
             cache=None if cache is None else cache["attn"],
+            page_table=page_table,
         )
         x = add(x, h)
         y, aux = moe_ffn(gp["moe"], rmsnorm(gp["ln2"], x, cfg.norm_eps), cfg, spec)
@@ -235,6 +269,7 @@ def _apply_group(
         h, new_kv = attention(
             gp["attn"], rmsnorm(gp["ln1"], x, cfg.norm_eps), cfg, positions,
             cache=None if cache is None else cache["attn"],
+            page_table=page_table,
         )
         x = add(x, h)
         h, _ = attention(
@@ -332,13 +367,15 @@ def _remat(fn, policy: str):
 # ---------------------------------------------------------------------------
 
 
-def _scan_groups(groups, x, cfg, positions, cache, encoder_out, causal=True):
+def _scan_groups(
+    groups, x, cfg, positions, cache, encoder_out, causal=True, page_table=None
+):
     def body(carry, xs):
         gp, cache_g = xs
         gp = constrain_group_params(gp)
         y, new_c, aux = _apply_group(
             gp, constrain(carry, "residual"), cfg, positions, cache_g,
-            encoder_out, causal,
+            encoder_out, causal, page_table=page_table,
         )
         return constrain(y, "residual"), (new_c, aux)
 
@@ -393,6 +430,7 @@ def forward(
     patch_embeds: jax.Array | None = None,
     logits_dtype=jnp.float32,
     return_hidden: bool = False,
+    page_table: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Token ids → logits.  Returns (logits, new_cache, aux_loss).
 
@@ -401,6 +439,8 @@ def forward(
     ``return_hidden`` skips the lm_head and returns the post-final-norm
     hidden states instead of logits — serving prefill projects only the
     last prompt position, not every position of every chunk.
+    ``page_table`` (B, max_blocks) routes KV writes/reads through a paged
+    cache (``init_paged_cache``) instead of per-lane dense windows.
     """
     x = params["embed"]["w"][tokens].astype(_dtype(cfg))
     if patch_embeds is not None:
@@ -411,7 +451,8 @@ def forward(
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
 
     x, new_cache, aux = _scan_groups(
-        params["groups"], x, cfg, positions, cache, encoder_out
+        params["groups"], x, cfg, positions, cache, encoder_out,
+        page_table=page_table,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if return_hidden:

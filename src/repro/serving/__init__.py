@@ -1,17 +1,26 @@
-"""Serving subsystem: slot engine, sampling, request scheduler.
+"""Serving subsystem: engines, paged KV cache, sampling, scheduler.
 
-See ``engine.Engine`` for the architecture overview.
+Two engines share the scheduler, sampler and quantized-weight build:
+``Engine`` (fixed-slot FIFO over dense per-slot cache windows) and
+``ContinuousEngine`` (continuous batching over a paged KV cache with
+preemption and prefix sharing).  See their docstrings for the
+architecture overviews.
 """
 
-from .engine import Engine, ServeConfig
+from .engine import ContinuousEngine, Engine, ServeConfig
+from .paged_cache import OutOfPages, PageAllocator
 from .sampling import GREEDY, SamplingParams
-from .scheduler import Request, Scheduler
+from .scheduler import Request, Scheduler, percentile
 
 __all__ = [
     "Engine",
+    "ContinuousEngine",
     "ServeConfig",
+    "PageAllocator",
+    "OutOfPages",
     "SamplingParams",
     "GREEDY",
     "Request",
     "Scheduler",
+    "percentile",
 ]

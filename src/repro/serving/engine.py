@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from functools import partial
 
 import jax
@@ -66,10 +67,11 @@ from ..core.packed_params import (
 )
 from ..models import transformer as T
 from ..models.config import ModelConfig
+from .paged_cache import OutOfPages, PageAllocator
 from .sampling import SamplingParams, sample_tokens, slot_key
 from .scheduler import Scheduler
 
-__all__ = ["ServeConfig", "Engine"]
+__all__ = ["ServeConfig", "Engine", "ContinuousEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +113,15 @@ class ServeConfig:
     mixed_budget: float = 0.05
     width_candidates: tuple[tuple[int, int], ...] | None = None
     calib_tokens: int = 32
+    # paged KV cache (ContinuousEngine only; the fixed-slot Engine ignores
+    # these).  page_size is the KV tokens per physical page; n_pages sizes
+    # the shared pool (None = n_slots * ceil(grid / page_size) — memory
+    # parity with the dense engine's per-slot windows); watermark_pages is
+    # the free-page floor admission must not dip below (None = n_slots:
+    # every decoding lane can grow one page before the pool runs dry)
+    page_size: int = 16
+    n_pages: int | None = None
+    watermark_pages: int | None = None
     # default sampling (submit can override per request)
     temperature: float = 0.0
     top_k: int = 0
@@ -118,6 +129,14 @@ class ServeConfig:
     seed: int = 0
 
     def __post_init__(self) -> None:
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.n_pages is not None and self.n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {self.n_pages}")
+        if self.watermark_pages is not None and self.watermark_pages < 0:
+            raise ValueError(
+                f"watermark_pages must be >= 0, got {self.watermark_pages}"
+            )
         if self.quant_mode not in SERVING_MODES:
             raise ValueError(
                 f"quant_mode {self.quant_mode!r} not in {SERVING_MODES}"
@@ -155,6 +174,100 @@ class ServeConfig:
             )
 
 
+def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                            mixed_allocation=None):
+    """Engine-build weight preparation shared by ``Engine`` and
+    ``ContinuousEngine``: switch the arithmetic mode, optionally fuse
+    same-input projections, run the dsp_tuned/dsp_mixed plan searches and
+    quantize the weights onto the chosen plans.
+
+    Returns ``(cfg, params, plan_table, mixed_allocation)``.
+    """
+    plan_table: dict = {}
+    resolved_mixed = None
+    if mixed_allocation is not None and serve_cfg.quant_mode != "dsp_mixed":
+        # dropping a caller-measured allocation would silently serve
+        # different plans than the caller benchmarked
+        raise ValueError(
+            "mixed_allocation was given but quant_mode is "
+            f"{serve_cfg.quant_mode!r}; it is only served under "
+            '"dsp_mixed"'
+        )
+    if serve_cfg.quant_mode not in ("native", "none"):
+        # switch the arithmetic mode but preserve the caller's other
+        # LinearSpec choices (dsp_spec correction scheme, act_bits).
+        # dsp_mixed leaves route through the dsp_tuned arithmetic —
+        # each DspTunedLeaf carries its own (per-layer) plan.
+        linear_mode = (
+            "dsp_tuned" if serve_cfg.quant_mode == "dsp_mixed"
+            else serve_cfg.quant_mode
+        )
+        cfg = dataclasses.replace(
+            cfg,
+            quant=dataclasses.replace(
+                cfg.quant, mode=linear_mode,
+                use_kernel=serve_cfg.use_kernel,
+            ),
+        )
+        fuse = serve_cfg.fuse_projections
+        if fuse not in (False, "none"):
+            # fused same-input GEMVs — bit-identical per output column
+            # under per-channel quantization
+            # (core.packed_params.fuse_projection_weights)
+            params = fuse_projection_weights(
+                params, fuse_attn=fuse in (True, "all"), fuse_mlp=True
+            )
+        if serve_cfg.quant_mode == "dsp_mixed":
+            if mixed_allocation is None:
+                from ..tuning.mixed import (
+                    DEFAULT_WIDTH_CANDIDATES,
+                    mixed_precision_plan,
+                )
+
+                # sensitivity pass + greedy width allocation on
+                # calibration activations (tuning.mixed): per-layer
+                # (a_bits, w_bits) under the model-level mixed_budget;
+                # the per-width plan search keeps plans provably exact
+                # so the only error the model sees is the quantization
+                # the pass measured
+                mixed_allocation = mixed_precision_plan(
+                    params, cfg,
+                    mixed_budget=serve_cfg.mixed_budget,
+                    widths=(serve_cfg.width_candidates
+                            or DEFAULT_WIDTH_CANDIDATES),
+                    n_calib_tokens=serve_cfg.calib_tokens,
+                    seed=serve_cfg.seed,
+                    exact_first=not serve_cfg.use_kernel,
+                )
+            resolved_mixed = mixed_allocation
+            plan_table = mixed_allocation.plans
+            params = quantize_for_serving(
+                params, "dsp_mixed", plans=plan_table,
+                prepack=serve_cfg.prepack,
+            )
+        elif serve_cfg.quant_mode == "dsp_tuned":
+            from ..tuning import plan_linear_layers
+
+            a_bits, w_bits = serve_cfg.plan_bits
+            plan_table = plan_linear_layers(
+                params, a_bits=a_bits, w_bits=w_bits,
+                error_budget=serve_cfg.error_budget,
+                autotune=serve_cfg.autotune_plans,
+                # non-kernel serving runs proven-exact plans through the
+                # f32-GEMM shortcut — rank those first (see rank_plans)
+                exact_first=not serve_cfg.use_kernel,
+            )
+            params = quantize_for_serving(
+                params, "dsp_tuned", plans=plan_table,
+                prepack=serve_cfg.prepack,
+            )
+        else:
+            params = quantize_for_serving(
+                params, serve_cfg.quant_mode, prepack=serve_cfg.prepack
+            )
+    return cfg, params, plan_table, resolved_mixed
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
                  mixed_allocation=None):
@@ -163,88 +276,9 @@ class Engine:
         per-layer plan table instead — for callers that already measured
         (the serving benchmark probes budgets before building).  Its paths
         must match this engine's param tree (same fusion settings)."""
-        self.plan_table = {}
-        self.mixed_allocation = None
-        if mixed_allocation is not None and serve_cfg.quant_mode != "dsp_mixed":
-            # dropping a caller-measured allocation would silently serve
-            # different plans than the caller benchmarked
-            raise ValueError(
-                "mixed_allocation was given but quant_mode is "
-                f"{serve_cfg.quant_mode!r}; it is only served under "
-                '"dsp_mixed"'
-            )
-        if serve_cfg.quant_mode not in ("native", "none"):
-            # switch the arithmetic mode but preserve the caller's other
-            # LinearSpec choices (dsp_spec correction scheme, act_bits).
-            # dsp_mixed leaves route through the dsp_tuned arithmetic —
-            # each DspTunedLeaf carries its own (per-layer) plan.
-            linear_mode = (
-                "dsp_tuned" if serve_cfg.quant_mode == "dsp_mixed"
-                else serve_cfg.quant_mode
-            )
-            cfg = dataclasses.replace(
-                cfg,
-                quant=dataclasses.replace(
-                    cfg.quant, mode=linear_mode,
-                    use_kernel=serve_cfg.use_kernel,
-                ),
-            )
-            fuse = serve_cfg.fuse_projections
-            if fuse not in (False, "none"):
-                # fused same-input GEMVs — bit-identical per output column
-                # under per-channel quantization
-                # (core.packed_params.fuse_projection_weights)
-                params = fuse_projection_weights(
-                    params, fuse_attn=fuse in (True, "all"), fuse_mlp=True
-                )
-            if serve_cfg.quant_mode == "dsp_mixed":
-                if mixed_allocation is None:
-                    from ..tuning.mixed import (
-                        DEFAULT_WIDTH_CANDIDATES,
-                        mixed_precision_plan,
-                    )
-
-                    # sensitivity pass + greedy width allocation on
-                    # calibration activations (tuning.mixed): per-layer
-                    # (a_bits, w_bits) under the model-level mixed_budget;
-                    # the per-width plan search keeps plans provably exact
-                    # so the only error the model sees is the quantization
-                    # the pass measured
-                    mixed_allocation = mixed_precision_plan(
-                        params, cfg,
-                        mixed_budget=serve_cfg.mixed_budget,
-                        widths=(serve_cfg.width_candidates
-                                or DEFAULT_WIDTH_CANDIDATES),
-                        n_calib_tokens=serve_cfg.calib_tokens,
-                        seed=serve_cfg.seed,
-                        exact_first=not serve_cfg.use_kernel,
-                    )
-                self.mixed_allocation = mixed_allocation
-                self.plan_table = mixed_allocation.plans
-                params = quantize_for_serving(
-                    params, "dsp_mixed", plans=self.plan_table,
-                    prepack=serve_cfg.prepack,
-                )
-            elif serve_cfg.quant_mode == "dsp_tuned":
-                from ..tuning import plan_linear_layers
-
-                a_bits, w_bits = serve_cfg.plan_bits
-                self.plan_table = plan_linear_layers(
-                    params, a_bits=a_bits, w_bits=w_bits,
-                    error_budget=serve_cfg.error_budget,
-                    autotune=serve_cfg.autotune_plans,
-                    # non-kernel serving runs proven-exact plans through the
-                    # f32-GEMM shortcut — rank those first (see rank_plans)
-                    exact_first=not serve_cfg.use_kernel,
-                )
-                params = quantize_for_serving(
-                    params, "dsp_tuned", plans=self.plan_table,
-                    prepack=serve_cfg.prepack,
-                )
-            else:
-                params = quantize_for_serving(
-                    params, serve_cfg.quant_mode, prepack=serve_cfg.prepack
-                )
+        cfg, params, self.plan_table, self.mixed_allocation = (
+            _prepare_serving_params(cfg, params, serve_cfg, mixed_allocation)
+        )
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
@@ -285,6 +319,7 @@ class Engine:
         self._keys = np.zeros((b, 2), np.uint32)
         self._base_key = jax.random.PRNGKey(serve_cfg.seed)
         self.scheduler = Scheduler()
+        self._stream: deque[tuple[int, int]] = deque()
         self._sample = jax.jit(sample_tokens)
         # Device-resident decode state: steady-state decode advances tokens/
         # positions ON DEVICE and only syncs the sampled token back, so a
@@ -411,9 +446,14 @@ class Engine:
         burst of submissions shares one batched prefill pass.
         Returns the request id (outputs appear in ``outputs[rid]``).
         """
-        if len(prompt) >= self.scfg.max_len - 1:
+        # exact capacity bound: the cache holds max_len token positions (its
+        # chunk-padded window is >= max_len), a prompt of exactly max_len
+        # fills them all and still yields one sampled token before the
+        # ``positions >= max_len`` termination fires — so only longer
+        # prompts are impossible
+        if len(prompt) > self.scfg.max_len:
             raise ValueError(
-                f"prompt length {len(prompt)} >= max_len-1 ({self.scfg.max_len - 1})"
+                f"prompt length {len(prompt)} > max_len ({self.scfg.max_len})"
             )
         if max_new is None:
             max_new = self.scfg.max_new
@@ -468,6 +508,15 @@ class Engine:
                 jnp.asarray(tokens[:, base:base + c]), jnp.int32(base),
                 mask_c, last_idx_j, last_hidden,
             )
+            # TTFT is per request: stamp each request when ITS last chunk
+            # lands, not when the whole mixed batch drains — otherwise a
+            # 4-token prompt admitted next to a 500-token one is charged
+            # the long prompt's chunk time.  The sync makes the stamp
+            # honest (dispatch alone would timestamp unfinished work).
+            own_done = [r for r in admitted if (len(r.prompt) - 1) // c == ci]
+            if own_done:
+                jax.block_until_ready(cache)
+                self.scheduler.note_prefill_done(own_done)
         self.cache = cache
 
         first = np.asarray(self._sample(
@@ -477,13 +526,12 @@ class Engine:
             jnp.asarray(self._top_p),
         ))
         n_prompt_tokens = sum(len(r.prompt) for r in admitted)
-        self.scheduler.note_prefill(
-            n_prompt_tokens, time.monotonic() - t0, admitted
-        )
+        self.scheduler.note_prefill(n_prompt_tokens, time.monotonic() - t0)
         finished = []
         for slot, req in zip(free, admitted):
             tok = int(first[slot])
             req.tokens.append(tok)
+            self._stream.append((req.rid, tok))
             self.last_token[slot] = tok
             rid = self._maybe_finish(slot, tok)
             if rid is not None:
@@ -499,7 +547,10 @@ class Engine:
             return self._finish_slot(slot, "eos")
         if len(req.tokens) >= req.max_new:
             return self._finish_slot(slot, "length")
-        if self.positions[slot] >= self.scfg.max_len - 1:
+        # positions[slot] is the next cache write index; decode at position
+        # max_len or beyond would write outside the max_len contract, so
+        # the last admissible decode reads position max_len - 1
+        if self.positions[slot] >= self.scfg.max_len:
             return self._finish_slot(slot, "length")
         return None
 
@@ -530,7 +581,9 @@ class Engine:
             # numpy mirrors advance exactly like the device state did
             self.positions[slot] += 1
             tok = int(nxt[slot])
-            self.scheduler.requests[int(self._slot_rid[slot])].tokens.append(tok)
+            rid_s = int(self._slot_rid[slot])
+            self.scheduler.requests[rid_s].tokens.append(tok)
+            self._stream.append((rid_s, tok))
             self.last_token[slot] = tok
             rid = self._maybe_finish(slot, tok)
             if rid is not None:
@@ -555,6 +608,14 @@ class Engine:
         return {r: list(self.scheduler.requests[r].tokens) for r in rids}
 
     # ---- introspection --------------------------------------------------
+    def drain_stream(self) -> list[tuple[int, int]]:
+        """Pop every ``(rid, token)`` emitted since the last drain, in
+        emission order — the streaming-output hook for callers that relay
+        tokens as they land instead of waiting for the request to finish."""
+        out = list(self._stream)
+        self._stream.clear()
+        return out
+
     @property
     def outputs(self) -> dict[int, list[int]]:
         return {r.rid: r.tokens for r in self.scheduler.requests.values()
@@ -571,3 +632,568 @@ class Engine:
 
     def stats(self) -> dict:
         return self.scheduler.stats()
+
+
+class ContinuousEngine:
+    """Continuous-batching engine over a paged KV cache.
+
+    Where ``Engine`` pins a request to a slot-sized dense cache window for
+    its whole lifetime, this engine decouples *lanes* (rows of the batched
+    forward, ``n_slots`` of them) from *memory* (a shared pool of
+    ``n_pages`` fixed-size KV pages, ``serving.paged_cache``).  The three
+    consequences the traffic bench measures:
+
+    * **continuous admission** — a request is admitted the moment a lane
+      AND its pages are free; it prefills one chunk per engine step
+      alongside the lanes that are already decoding, and joins the decode
+      batch the step after its own last chunk lands.  Short requests no
+      longer queue behind a long request that is merely *decoding*.
+    * **memory by need, not by worst case** — a request holds
+      ``ceil(len/page_size)`` pages for its actual length, growing one
+      page per ``page_size`` decode steps; admission is gated by a
+      free-page ``watermark`` instead of a slot count.  When decode growth
+      still runs dry the youngest request is preempted (pages freed,
+      requeued at the *front*); the (rid, position)-keyed sampler makes
+      the resume bit-identical to the uninterrupted stream.
+    * **prefix sharing** — ``register_shared_prefix`` marks a common
+      system prompt; its pages are prefilled once and adopted by every
+      later request that starts with it (refcounted, copy-on-write when a
+      write lands in a shared page).
+
+    Token-identity contract: for the same single-request workload this
+    engine emits exactly the tokens ``Engine`` emits, in every quant mode
+    — the paged attention branch masks to the same valid positions and
+    the sampler draws from the same (rid, position) streams.  Recurrent
+    families (ssm/hybrid) and sliding-window models have no pageable KV
+    layout and must use ``Engine``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 mixed_allocation=None):
+        cfg, params, self.plan_table, self.mixed_allocation = (
+            _prepare_serving_params(cfg, params, serve_cfg, mixed_allocation)
+        )
+        if cfg.family in ("ssm", "hybrid") or cfg.sliding_window:
+            raise ValueError(
+                f"ContinuousEngine needs a pure full-attention model, got "
+                f"family={cfg.family!r} sliding_window={cfg.sliding_window!r}"
+                " (use the fixed-slot Engine)"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        b = serve_cfg.n_slots
+        self._chunk = max(1, min(serve_cfg.prefill_chunk, serve_cfg.max_len))
+        # the per-lane logical window is the chunk-padded grid, exactly like
+        # the dense engine's cache window — identical attention windows are
+        # what make the two engines token-identical
+        grid = -(-serve_cfg.max_len // self._chunk) * self._chunk
+        ps = serve_cfg.page_size
+        self._max_blocks = -(-grid // ps)
+        n_pages = (serve_cfg.n_pages if serve_cfg.n_pages is not None
+                   else b * self._max_blocks)
+        if n_pages < self._max_blocks:
+            raise ValueError(
+                f"n_pages={n_pages} cannot hold one max-length request "
+                f"({self._max_blocks} blocks of {ps})"
+            )
+        wm = (serve_cfg.watermark_pages
+              if serve_cfg.watermark_pages is not None else b)
+        self.alloc = PageAllocator(n_pages, ps, min(wm, n_pages - 1))
+        self.cache = T.init_paged_cache(cfg, n_pages, ps)
+        # host lane state (authoritative for scheduling; mirrored on device
+        # for the decode loop, _push_state)
+        self.positions = np.zeros(b, np.int32)   # next cache write index
+        self.active = np.zeros(b, bool)          # lane holds a request
+        self._prefilling = np.zeros(b, bool)     # ...still prefilling it
+        self._n_seq = np.zeros(b, np.int32)      # tokens to prefill
+        self._last_idx = np.zeros(b, np.int32)   # n_seq - 1
+        self.last_token = np.zeros(b, np.int32)
+        self._lane_rid = np.full(b, -1, np.int64)
+        self._seq: dict[int, np.ndarray] = {}    # lane -> prefill tokens
+        self._temperature = np.zeros(b, np.float32)
+        self._top_k = np.zeros(b, np.int32)
+        self._top_p = np.ones(b, np.float32)
+        self._keys = np.zeros((b, 2), np.uint32)
+        self._base_key = jax.random.PRNGKey(serve_cfg.seed)
+        self._last_hidden = jnp.zeros((b, cfg.d_model), T._dtype(cfg))
+        self.scheduler = Scheduler()
+        self._stream: deque[tuple[int, int]] = deque()
+        self._sample = jax.jit(sample_tokens)
+        self._dev_state = None
+        self._dev_dirty = True
+        self._pushed_mask = None  # decode mask the device state was built for
+        # shared system-prompt prefix (register_shared_prefix)
+        self._shared_prefix: list[int] | None = None
+        self._shared_key: tuple | None = None
+        self._shared_ready = False
+        self._shared_pending_rid = -1
+
+    # ---- jitted steps ---------------------------------------------------
+    @partial(jax.jit, static_argnums=(0,))
+    def _prefill_chunk(self, params, cache, tokens, base, page_table,
+                       row_mask, last_idx, last_hidden):
+        """One prefill chunk for every prefilling lane at once; lanes sit
+        at *different* depths (per-row ``base``).  Rows outside
+        ``row_mask`` get the invalid page sentinel, so their writes drop —
+        no cache merge pass needed (unlike the dense engine)."""
+        b, c = tokens.shape
+        positions = base[:, None] + jnp.arange(c)[None]
+        pt_eff = jnp.where(row_mask[:, None], page_table, self.alloc.invalid)
+        hidden, new_cache, _ = T.forward(
+            params, self.cfg, tokens, positions=positions, cache=cache,
+            return_hidden=True, page_table=pt_eff,
+        )
+        idx = jnp.clip(last_idx - base, 0, c - 1)
+        row_hidden = jnp.take_along_axis(
+            hidden, idx[:, None, None], axis=1
+        )[:, 0]
+        in_chunk = row_mask & (last_idx >= base) & (last_idx < base + c)
+        last_hidden = jnp.where(
+            in_chunk[:, None], row_hidden.astype(last_hidden.dtype),
+            last_hidden,
+        )
+        return new_cache, last_hidden
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _lm_head(self, params, hidden):
+        if self.cfg.tie_embeddings:
+            return hidden.astype(jnp.float32) @ params["embed"]["w"].T.astype(
+                jnp.float32
+            )
+        from ..core.packed_linear import apply_linear
+
+        return apply_linear(
+            params["lm_head"], hidden, self.cfg.quant
+        ).astype(jnp.float32)
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _decode_step(self, params, cache, state):
+        """Advance every decoding lane one token (device-resident state,
+        as in ``Engine``); non-decoding lanes get the invalid page
+        sentinel so their writes drop and their outputs are ignored."""
+        tokens, positions = state["tokens"], state["positions"]
+        active = state["active"]
+        pt_eff = jnp.where(
+            active[:, None], state["page_table"], self.alloc.invalid
+        )
+        logits, new_cache, _ = T.forward(
+            params, self.cfg, tokens[:, None], positions=positions[:, None],
+            cache=cache, page_table=pt_eff,
+        )
+        nxt = sample_tokens(
+            logits[:, -1], state["keys"], positions, state["temperature"],
+            state["top_k"], state["top_p"],
+        )
+        new_state = dict(
+            state,
+            tokens=jnp.where(active, nxt, tokens),
+            positions=positions + active.astype(positions.dtype),
+        )
+        return new_cache, new_state, nxt
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _copy_page(self, cache, src, dst):
+        """Copy-on-write device copy: physical page ``src`` -> ``dst``
+        across every layer's K and V pool."""
+        return jax.tree.map(
+            lambda leaf: leaf.at[:, dst].set(leaf[:, src]), cache
+        )
+
+    def _push_state(self, decode_mask) -> None:
+        self._dev_state = jax.device_put({
+            "tokens": self.last_token,
+            "positions": self.positions,
+            "active": decode_mask,
+            "keys": self._keys,
+            "temperature": self._temperature,
+            "top_k": self._top_k,
+            "top_p": self._top_p,
+            "page_table": self.alloc.table_array(
+                self._lane_rid, self._max_blocks
+            ),
+        })
+        self._pushed_mask = np.asarray(decode_mask).copy()
+        self._dev_dirty = False
+
+    # ---- shared prefix ---------------------------------------------------
+    def register_shared_prefix(self, tokens: list[int]) -> None:
+        """Declare a common system prompt.  The first admitted request
+        that starts with it prefills it once; every later request that
+        starts with it adopts those pages (refcounted, CoW on write)
+        and prefills only its own suffix."""
+        if self._shared_prefix is not None:
+            raise ValueError("shared prefix already registered")
+        if not tokens:
+            raise ValueError("empty shared prefix")
+        if self.scheduler.requests:
+            raise ValueError(
+                "register the shared prefix before submitting requests"
+            )
+        blocks = self.alloc.blocks_for(len(tokens))
+        if self.alloc.n_pages < self._max_blocks + blocks:
+            raise ValueError(
+                f"n_pages={self.alloc.n_pages} cannot pin a {blocks}-block "
+                f"shared prefix and still hold one max-length request "
+                f"({self._max_blocks} blocks)"
+            )
+        self._shared_prefix = list(tokens)
+        self._shared_key = ("prefix", tuple(tokens))
+
+    def _matches_prefix(self, prompt: list[int]) -> bool:
+        sp = self._shared_prefix
+        return (sp is not None and len(prompt) >= len(sp)
+                and list(prompt[: len(sp)]) == sp)
+
+    # ---- request lifecycle ----------------------------------------------
+    def submit(self, prompt: list[int], max_new: int | None = None,
+               sampling: SamplingParams | None = None,
+               admit: bool = True) -> int:
+        """Enqueue a request (same contract as ``Engine.submit``); it is
+        admitted as soon as a lane and its pages are free."""
+        if len(prompt) > self.scfg.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} > max_len ({self.scfg.max_len})"
+            )
+        if max_new is None:
+            max_new = self.scfg.max_new
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if sampling is None:
+            sampling = SamplingParams(
+                self.scfg.temperature, self.scfg.top_k, self.scfg.top_p
+            )
+        rid = self.scheduler.submit(prompt, max_new, sampling)
+        if admit:
+            self._admit_new()
+        return rid
+
+    def _admission_plan(self, req) -> tuple[list[int], int, int, int]:
+        """(seq, start, blocks_total, pages_needed) for admitting ``req``.
+
+        ``seq`` is prompt + already-emitted tokens (a preempted request
+        re-prefills its own output; the position-keyed sampler then
+        resumes the identical stream).  ``start`` skips adopted shared-
+        prefix tokens.  ``pages_needed`` counts fresh pages: the blocks
+        beyond the adopted ones, plus one CoW page when the first written
+        block is shared."""
+        seq = list(req.prompt) + list(req.tokens)
+        n_seq = len(seq)
+        start = 0
+        adopted_blocks = 0
+        if self._shared_ready and self._matches_prefix(seq):
+            # token-granular resume: re-prefill at least the last token so
+            # there is a hidden state to sample from (prompt == prefix)
+            start = min(len(self._shared_prefix), n_seq - 1)
+            adopted_blocks = self.alloc.shared_blocks(self._shared_key)
+        n_chunks = -(-(n_seq - start) // self._chunk)
+        padded_end = start + n_chunks * self._chunk
+        blocks_total = min(
+            self.alloc.blocks_for(padded_end), self._max_blocks
+        )
+        need = max(0, blocks_total - adopted_blocks)
+        if adopted_blocks and start // self.alloc.page_size < adopted_blocks:
+            need += 1  # CoW of the partial shared page the prefill writes
+        return seq, start, blocks_total, need
+
+    def _admit_new(self) -> None:
+        """Admit queued requests into free lanes, strictly FIFO: if the
+        front request's pages would dip the free list below the watermark,
+        nobody skips ahead of it.  An idle engine ignores the watermark —
+        it exists to protect running lanes, and there are none."""
+        while True:
+            free = np.flatnonzero(~self.active)
+            if len(free) == 0:
+                break
+            req = self.scheduler.peek()
+            if req is None:
+                break
+            seq, start, blocks_total, need = self._admission_plan(req)
+            if not (self.alloc.can_admit(need)
+                    or (not self.active.any() and need <= self.alloc.n_free)):
+                break
+            req = self.scheduler.admit_front()
+            lane = int(free[0])
+            self.alloc.open_table(req.rid)
+            adopting = start > 0
+            if adopting:
+                self.alloc.adopt_shared(self._shared_key, req.rid)
+            self.alloc.grow(req.rid, blocks_total)
+            # CoW every block the prefill will write into (only a shared
+            # partial page ever actually copies)
+            for blk in range(start // self.alloc.page_size, blocks_total):
+                page, src = self.alloc.make_writable(req.rid, blk)
+                if src is not None:
+                    self.cache = self._copy_page(
+                        self.cache, jnp.int32(src), jnp.int32(page)
+                    )
+            self._lane_rid[lane] = req.rid
+            self.active[lane] = True
+            self._prefilling[lane] = True
+            self._seq[lane] = np.asarray(seq, np.int32)
+            self._n_seq[lane] = len(seq)
+            self._last_idx[lane] = len(seq) - 1
+            self.positions[lane] = start
+            self._temperature[lane] = req.sampling.temperature
+            self._top_k[lane] = req.sampling.top_k
+            self._top_p[lane] = req.sampling.top_p
+            self._keys[lane] = np.asarray(slot_key(self._base_key, req.rid))
+            if (self._shared_prefix is not None and not self._shared_ready
+                    and self._shared_pending_rid < 0
+                    and self._matches_prefix(req.prompt)):
+                # first matching request prefills the prefix for everyone;
+                # its pages are pinned once its prefill completes
+                self._shared_pending_rid = req.rid
+            self._dev_dirty = True
+
+    def _prefill_step(self) -> list[int]:
+        """One chunk of prefill for every prefilling lane.  Lanes whose
+        last chunk landed sample their first token, get their TTFT stamp,
+        and join the decode batch next step."""
+        lanes = np.flatnonzero(self._prefilling)
+        if len(lanes) == 0:
+            return []
+        t0 = time.monotonic()
+        b, c = self.scfg.n_slots, self._chunk
+        tokens = np.zeros((b, c), np.int32)
+        base = np.zeros(b, np.int32)
+        row_mask = np.zeros(b, bool)
+        n_tok = 0
+        for lane in lanes:
+            pos = int(self.positions[lane])
+            chunk = self._seq[lane][pos:pos + c]
+            tokens[lane, : len(chunk)] = chunk
+            base[lane] = pos
+            row_mask[lane] = True
+            n_tok += len(chunk)
+        self.cache, self._last_hidden = self._prefill_chunk(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(base),
+            jnp.asarray(self.alloc.table_array(
+                self._lane_rid, self._max_blocks
+            )),
+            jnp.asarray(row_mask), jnp.asarray(self._last_idx),
+            self._last_hidden,
+        )
+        done_lanes = []
+        for lane in lanes:
+            if self.positions[lane] + c >= self._n_seq[lane]:
+                self.positions[lane] = self._n_seq[lane]
+                done_lanes.append(int(lane))
+            else:
+                self.positions[lane] += c
+        finished: list[int] = []
+        if done_lanes:
+            # honest per-request TTFT: sync before stamping, and sample the
+            # completed lanes' first tokens right now
+            first = np.asarray(self._sample(
+                self._lm_head(self.params, self._last_hidden),
+                jnp.asarray(self._keys), jnp.asarray(self._last_idx),
+                jnp.asarray(self._temperature), jnp.asarray(self._top_k),
+                jnp.asarray(self._top_p),
+            ))
+            done_reqs = []
+            for lane in done_lanes:
+                rid = int(self._lane_rid[lane])
+                req = self.scheduler.requests[rid]
+                done_reqs.append(req)
+                self._prefilling[lane] = False
+                self._seq.pop(lane, None)
+                tok = int(first[lane])
+                req.tokens.append(tok)
+                self._stream.append((rid, tok))
+                self.last_token[lane] = tok
+                if rid == self._shared_pending_rid:
+                    # prefix pages now hold real KV — pin and publish them
+                    self.alloc.register_shared(
+                        self._shared_key, rid,
+                        self.alloc.blocks_for(len(self._shared_prefix)),
+                    )
+                    self._shared_ready = True
+                    self._shared_pending_rid = -1
+                fin = self._maybe_finish(lane, tok)
+                if fin is not None:
+                    finished.append(fin)
+            self.scheduler.note_prefill_done(done_reqs)
+        self.scheduler.note_prefill(n_tok, time.monotonic() - t0)
+        # no _dev_dirty here: prefill touches no decode-lane state — lanes
+        # that just completed join the decode mask next step, and that
+        # membership change itself forces the state push (_decode_once)
+        return finished
+
+    def _youngest_lane(self, exclude: int | None = None) -> int | None:
+        """Lane holding the newest request (preemption victim)."""
+        best, best_rid = None, -1
+        for lane in np.flatnonzero(self.active):
+            if exclude is not None and int(lane) == exclude:
+                continue
+            rid = int(self._lane_rid[lane])
+            if rid > best_rid:
+                best, best_rid = int(lane), rid
+        return best
+
+    def _preempt(self, lane: int) -> None:
+        """Evict a lane: free its pages and requeue it at the FRONT of
+        the queue.  Its emitted tokens are kept — re-admission re-prefills
+        prompt+tokens and the (rid, position)-keyed sampler continues the
+        identical stream."""
+        rid = int(self._lane_rid[lane])
+        if rid == self._shared_pending_rid:
+            self._shared_pending_rid = -1  # its prefix pages never landed
+        self.alloc.free(rid)
+        self.scheduler.requeue(rid)
+        self.active[lane] = False
+        self._prefilling[lane] = False
+        self._lane_rid[lane] = -1
+        self._seq.pop(lane, None)
+        self._dev_dirty = True
+
+    def _ensure_decode_pages(self, lanes: list[int]) -> None:
+        """Grow each decoding lane's table to cover its next write; on
+        ``OutOfPages`` preempt the youngest active request and retry
+        (oldest lanes are served first, so pressure evicts the newest)."""
+        for lane in sorted(lanes, key=lambda l: int(self._lane_rid[l])):
+            if not self.active[lane]:
+                continue  # preempted by an earlier lane's growth
+            rid = int(self._lane_rid[lane])
+            needed = int(self.positions[lane]) // self.alloc.page_size + 1
+            while True:
+                try:
+                    if self.alloc.grow(rid, needed):
+                        # the device page table must see the new block or
+                        # this step's KV write silently drops
+                        self._dev_dirty = True
+                    break
+                except OutOfPages:
+                    victim = self._youngest_lane()
+                    if victim is None or (victim == lane
+                                          and self.active.sum() <= 1):
+                        raise  # one lone request outgrew the pool: config
+                    self._preempt(victim)
+                    if victim == lane:
+                        break
+            if not self.active[lane]:
+                continue
+            page, src = self.alloc.make_writable(rid, needed - 1)
+            if src is not None:
+                self.cache = self._copy_page(
+                    self.cache, jnp.int32(src), jnp.int32(page)
+                )
+                self._dev_dirty = True
+
+    def _decode_once(self, decode_mask: np.ndarray) -> list[int]:
+        """Advance the decode batch one token (lanes in ``decode_mask``
+        that are still active — preemption may have evicted some)."""
+        lanes = np.flatnonzero(decode_mask & self.active)
+        if len(lanes) == 0:
+            return []
+        t0 = time.monotonic()
+        self._ensure_decode_pages([int(l) for l in lanes])
+        lanes = np.flatnonzero(decode_mask & self.active)
+        if len(lanes) == 0:
+            return []
+        # push on explicit dirt OR a decode-membership change: a lane that
+        # finished its prefill in a step whose push preceded it (the decode
+        # batch is snapshotted before the prefill phase) would otherwise be
+        # frozen out of the cached device mask and decode garbage
+        mask = decode_mask & self.active
+        if (self._dev_dirty or self._pushed_mask is None
+                or not np.array_equal(mask, self._pushed_mask)):
+            self._push_state(mask)
+        self.cache, self._dev_state, nxt = self._decode_step(
+            self.params, self.cache, self._dev_state
+        )
+        nxt = np.asarray(nxt)
+        self.scheduler.note_decode(len(lanes), time.monotonic() - t0)
+        finished = []
+        for lane in lanes:
+            self.positions[lane] += 1
+            tok = int(nxt[lane])
+            rid = int(self._lane_rid[lane])
+            self.scheduler.requests[rid].tokens.append(tok)
+            self._stream.append((rid, tok))
+            self.last_token[lane] = tok
+            fin = self._maybe_finish(int(lane), tok)
+            if fin is not None:
+                finished.append(fin)
+        if finished:
+            self._dev_dirty = True
+        return finished
+
+    def _maybe_finish(self, lane: int, tok: int) -> int | None:
+        """Single termination path (EOS / budget / capacity), mirroring
+        ``Engine._maybe_finish`` exactly — same bounds, same reasons."""
+        rid = int(self._lane_rid[lane])
+        req = self.scheduler.requests[rid]
+        if tok == self.scfg.eos_token:
+            return self._finish_lane(lane, "eos")
+        if len(req.tokens) >= req.max_new:
+            return self._finish_lane(lane, "length")
+        if self.positions[lane] >= self.scfg.max_len:
+            return self._finish_lane(lane, "length")
+        return None
+
+    def _finish_lane(self, lane: int, reason: str) -> int:
+        rid = int(self._lane_rid[lane])
+        self.active[lane] = False
+        self._prefilling[lane] = False
+        self._lane_rid[lane] = -1
+        self._seq.pop(lane, None)
+        self.alloc.free(rid)  # shared pins survive via their permanent ref
+        self.scheduler.finish(rid, reason)
+        self._dev_dirty = True
+        return rid
+
+    def step(self) -> list[int]:
+        """Admit what fits, prefill one chunk per prefilling lane, advance
+        the decode batch one token.  A lane that completed its prefill
+        this step decodes from the NEXT step (the decode batch is
+        snapshotted before the prefill phase).  Returns finished rids."""
+        self._admit_new()
+        decode_mask = (self.active & ~self._prefilling).copy()
+        finished = self._prefill_step()
+        finished += self._decode_once(decode_mask)
+        return finished
+
+    def generate(self, prompts: list[list[int]], max_new: int | None = None,
+                 sampling: SamplingParams | None = None) -> dict[int, list[int]]:
+        """Drive a batch of prompts to completion (reference loop)."""
+        rids = [self.submit(p, max_new=max_new, sampling=sampling, admit=False)
+                for p in prompts]
+        per_req = max_new if max_new is not None else self.scfg.max_new
+        # prefill costs ceil(L/chunk) steps per request; double for
+        # preemption re-prefills under page pressure
+        budget = 2 * (
+            per_req * len(prompts)
+            + sum(-(-len(p) // self._chunk) for p in prompts)
+            + len(prompts)
+        ) + 8
+        for _ in range(budget):
+            if not (self.active.any() or self.scheduler.n_queued):
+                break
+            self.step()
+        assert not (self.active.any() or self.scheduler.n_queued), \
+            "generate() exceeded its step budget"
+        return {r: list(self.scheduler.requests[r].tokens) for r in rids}
+
+    # ---- introspection --------------------------------------------------
+    def drain_stream(self) -> list[tuple[int, int]]:
+        """Pop every ``(rid, token)`` emitted since the last drain, in
+        emission order — the streaming-output hook."""
+        out = list(self._stream)
+        self._stream.clear()
+        return out
+
+    @property
+    def outputs(self) -> dict[int, list[int]]:
+        return {r.rid: r.tokens for r in self.scheduler.requests.values()
+                if r.tokens}
+
+    def stats(self) -> dict:
+        s = self.scheduler.stats()
+        s.update(
+            n_pages=self.alloc.n_pages,
+            free_pages=self.alloc.n_free,
+            page_size=self.alloc.page_size,
+            watermark_pages=self.alloc.watermark,
+        )
+        return s

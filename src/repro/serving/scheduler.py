@@ -1,11 +1,27 @@
-"""Request scheduler for the serving engine.
+"""Request scheduler for the serving engines.
 
 Owns everything that is *not* device compute: the admission queue (FIFO),
 per-request bookkeeping (prompt, budget, sampling params, emitted tokens,
 finish reason) and the engine-wide throughput/latency counters.  The engine
-asks it which requests to admit when slots free up and reports every
+asks it which requests to admit when capacity frees up and reports every
 prefill/decode batch back so ``stats()`` can answer the operator questions
 — queue depth, tokens/s by phase, time-to-first-token, request latency.
+
+Two engines drive it: the fixed-slot ``Engine`` pops whole batches with
+``admit``, while ``ContinuousEngine`` inspects the queue head with ``peek``
+and pops one request at a time with ``admit_front`` (strict FIFO — if the
+front request's pages don't fit, nobody skips ahead of it) and may push a
+preempted request back to the *front* with ``requeue``.
+
+Accounting rules learned the hard way:
+
+* ``note_prefill_done`` stamps TTFT per request, when *that request's* last
+  prefill chunk completes — not once for the whole admission batch, which
+  charged short prompts in a mixed batch for the longest prompt's chunks.
+* ``running`` is tracked explicitly (admit +1, finish/requeue -1), never
+  derived by subtraction — preemption made the subtraction lie.
+* rate/percentile helpers return 0.0 for empty phases instead of the
+  ``tokens / max(t, 1e-9)`` ~1e9 tok/s artifact.
 """
 
 from __future__ import annotations
@@ -16,7 +32,35 @@ from collections import deque
 
 from .sampling import GREEDY, SamplingParams
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "Scheduler", "percentile"]
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100]); empty -> 0.0.
+
+    Used by ``stats()`` and the traffic bench — matches numpy's default
+    ("linear") method without pulling an array dependency into the hot
+    serving path.
+    """
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    if len(s) == 1:
+        return s[0]
+    rank = (q / 100.0) * (len(s) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(s) - 1)
+    frac = rank - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+def _rate(tokens: int, t: float) -> float:
+    """tokens/s with an honest 0.0 when the phase never ran."""
+    return tokens / t if tokens and t > 0.0 else 0.0
+
+
+def _mean(xs: list[float]) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
 
 
 @dataclasses.dataclass
@@ -48,6 +92,8 @@ class Scheduler:
         self.prefill_time_s = 0.0
         self.decode_time_s = 0.0
         self.n_finished = 0
+        self.n_running = 0
+        self.n_preempted = 0
 
     # ---- queue ---------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int,
@@ -66,21 +112,60 @@ class Scheduler:
     def n_queued(self) -> int:
         return len(self._queue)
 
+    @property
+    def next_rid(self) -> int:
+        """The rid the next ``submit`` will assign (lets callers bracket a
+        window of requests, e.g. to compute metrics over one replay)."""
+        return self._next_rid
+
     def admit(self, n_free: int) -> list[Request]:
         """Pop up to ``n_free`` queued requests for prefill."""
         out = []
         while self._queue and len(out) < n_free:
             out.append(self.requests[self._queue.popleft()])
+        self.n_running += len(out)
         return out
 
+    def peek(self) -> Request | None:
+        """Front of the queue without popping (continuous admission asks
+        whether the front request's pages fit before committing)."""
+        return self.requests[self._queue[0]] if self._queue else None
+
+    def admit_front(self) -> Request:
+        """Pop exactly the front request (strict FIFO admission)."""
+        req = self.requests[self._queue.popleft()]
+        self.n_running += 1
+        return req
+
+    def requeue(self, rid: int) -> None:
+        """Push a preempted request back to the *front* of the queue.  Its
+        emitted tokens are kept — re-admission re-prefills prompt+tokens and
+        the (rid, position)-keyed sampler resumes the identical stream.
+        ``prefill_done_at`` is kept too: TTFT measures the first token, and
+        the request already produced it."""
+        req = self.requests[rid]
+        if req.done:
+            raise RuntimeError(f"request {rid} is finished, cannot requeue")
+        self._queue.appendleft(rid)
+        self.n_running -= 1
+        self.n_preempted += 1
+
     # ---- accounting ----------------------------------------------------
-    def note_prefill(self, n_tokens: int, dt_s: float,
-                     admitted: list[Request]) -> None:
+    def note_prefill(self, n_tokens: int, dt_s: float) -> None:
+        """Throughput counters only — TTFT stamping is per-request via
+        ``note_prefill_done`` (a mixed batch must not charge short prompts
+        for the longest prompt's chunk time)."""
         self.prefill_tokens += n_tokens
         self.prefill_time_s += dt_s
+
+    def note_prefill_done(self, reqs: list[Request]) -> None:
+        """Stamp TTFT for requests whose own last prefill chunk just
+        completed.  Idempotent per request — a preempted request keeps its
+        original first-token stamp across re-prefill."""
         now = self._clock()
-        for req in admitted:
-            req.prefill_done_at = now
+        for req in reqs:
+            if req.prefill_done_at is None:
+                req.prefill_done_at = now
 
     def note_decode(self, n_tokens: int, dt_s: float) -> None:
         self.decode_tokens += n_tokens
@@ -93,6 +178,7 @@ class Scheduler:
         req.finish_reason = reason
         req.finished_at = self._clock()
         self.n_finished += 1
+        self.n_running -= 1
 
     # ---- reporting -----------------------------------------------------
     def stats(self) -> dict:
@@ -100,15 +186,28 @@ class Scheduler:
         ttft = [r.prefill_done_at - r.submitted_at for r in done
                 if r.prefill_done_at is not None]
         lat = [r.finished_at - r.submitted_at for r in done]
-        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0
+        # time-per-output-token over the decode phase (needs >= 2 tokens:
+        # the first is charged to TTFT)
+        tpot = [
+            (r.finished_at - r.prefill_done_at) / (len(r.tokens) - 1)
+            for r in done
+            if r.prefill_done_at is not None and len(r.tokens) > 1
+        ]
         return {
             "queued": self.n_queued,
-            "running": len(self.requests) - self.n_finished - self.n_queued,
+            "running": self.n_running,
             "finished": self.n_finished,
+            "preempted": self.n_preempted,
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
-            "prefill_tok_s": self.prefill_tokens / max(self.prefill_time_s, 1e-9),
-            "decode_tok_s": self.decode_tokens / max(self.decode_time_s, 1e-9),
-            "mean_ttft_s": mean(ttft),
-            "mean_latency_s": mean(lat),
+            "prefill_tok_s": _rate(self.prefill_tokens, self.prefill_time_s),
+            "decode_tok_s": _rate(self.decode_tokens, self.decode_time_s),
+            "mean_ttft_s": _mean(ttft),
+            "p50_ttft_s": percentile(ttft, 50.0),
+            "p99_ttft_s": percentile(ttft, 99.0),
+            "mean_latency_s": _mean(lat),
+            "p50_latency_s": percentile(lat, 50.0),
+            "p99_latency_s": percentile(lat, 99.0),
+            "p50_tpot_s": percentile(tpot, 50.0),
+            "p99_tpot_s": percentile(tpot, 99.0),
         }

@@ -6,3 +6,19 @@ sys.path.insert(0, os.path.dirname(__file__))  # proptest shim importable
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running end-to-end tests")
+
+
+# XLA:CPU's JIT crashes (SIGSEGV inside backend_compile) once a single
+# process accumulates ~1300 tests' worth of compiled executables — the
+# crash lands in whatever innocent test compiles next.  Dropping the jit
+# caches every few hundred tests keeps the full suite inside one process.
+_CLEAR_CACHES_EVERY = 200
+_test_counter = {"n": 0}
+
+
+def pytest_runtest_teardown(item):
+    _test_counter["n"] += 1
+    if _test_counter["n"] % _CLEAR_CACHES_EVERY == 0:
+        import jax
+
+        jax.clear_caches()

@@ -32,6 +32,7 @@ def test_run_dispatcher_knows_every_module(capsys):
         table1_packing,
         table2_per_result,
         table3_addpack,
+        traffic_bench,
         tuning_bench,
     )
 
@@ -232,6 +233,74 @@ def test_check_bench_gate(tmp_path):
     assert len(failures) == 3
     assert check_bench.main(
         ["--bench", str(p), "--tuning", str(pb)]) == 1
+
+
+def test_traffic_bench_schema_tiny(tmp_path, monkeypatch, capsys):
+    """Fast-lane traffic smoke: a handful of requests through both engines
+    at tiny shapes pins the BENCH_traffic.json schema and the gated-ratio
+    keys (the slow lane runs the full saturating workload)."""
+    from repro.models.config import ModelConfig
+
+    from benchmarks import traffic_bench
+
+    tiny = ModelConfig(
+        name="traffic-smoke", family="dense", n_layers=1, d_model=32,
+        n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64, dtype="float32",
+    )
+    monkeypatch.setattr(traffic_bench, "CFG", tiny)
+    monkeypatch.setattr(traffic_bench, "MAX_LEN", 48)
+    monkeypatch.setattr(traffic_bench, "FIFO_SLOTS", 2)
+    monkeypatch.setattr(traffic_bench, "CONT_LANES", 3)
+    monkeypatch.setattr(traffic_bench, "WATERMARK", 2)
+    monkeypatch.setattr(traffic_bench, "N_REQUESTS", 6)
+    monkeypatch.setattr(traffic_bench, "RATE_HZ", 1000.0)
+    monkeypatch.setattr(traffic_bench, "SHORT_MAX_NEW", (3, 5))
+    monkeypatch.setattr(traffic_bench, "LONG_PROMPT", (10, 15))
+    monkeypatch.setattr(traffic_bench, "LONG_MAX_NEW", (4, 6))
+    monkeypatch.setattr(traffic_bench, "XL_PROMPT", (16, 25))
+    monkeypatch.setattr(traffic_bench, "XL_MAX_NEW", (4, 6))
+    out = tmp_path / "BENCH_traffic.json"
+    result = traffic_bench.run(out_path=str(out))
+    blob = json.loads(out.read_text())
+    assert blob == result
+    assert {"config", "fifo", "continuous", "ratios"} <= set(blob)
+    for row in (blob["fifo"], blob["continuous"]):
+        assert row["finished"] == 6
+        assert row["total_tokens"] > 0 and row["sustained_tok_s"] > 0
+        assert row["p99_ttft_s"] >= row["p50_ttft_s"] >= 0
+        assert {"p50_tpot_s", "p99_tpot_s", "mean_latency_s",
+                "preempted", "makespan_s"} <= set(row)
+    # the gated keys must exist (no throughput assertion at smoke shapes)
+    assert blob["ratios"]["continuous_vs_fifo_tok_s"] > 0
+    assert blob["ratios"]["fifo_vs_continuous_ttft_p99"] > 0
+    assert _csv_rows(capsys)
+
+
+def test_check_bench_traffic_gate(tmp_path):
+    from benchmarks import check_bench
+
+    healthy = {"ratios": {"continuous_vs_fifo_tok_s": 1.1,
+                          "fifo_vs_continuous_ttft_p99": 1.2}}
+    p = tmp_path / "traffic_ok.json"
+    p.write_text(json.dumps(healthy))
+    assert check_bench.check(
+        str(p), gates=check_bench.TRAFFIC_GATES) == []
+    ok_serving = {"decode": {"int4_packed_vs_float": 1.05,
+                             "dsp_mixed_vs_uniform_int4": 1.01}}
+    ps = tmp_path / "serving_ok.json"
+    ps.write_text(json.dumps(ok_serving))
+    assert check_bench.main(
+        ["--bench", str(ps), "--traffic", str(p)]) == 0
+
+    regressed = {"ratios": {"continuous_vs_fifo_tok_s": 0.7,
+                            "fifo_vs_continuous_ttft_p99": 1.2}}
+    p2 = tmp_path / "traffic_bad.json"
+    p2.write_text(json.dumps(regressed))
+    failures = check_bench.check(str(p2), gates=check_bench.TRAFFIC_GATES)
+    assert len(failures) == 1
+    assert "continuous_vs_fifo_tok_s" in failures[0]
+    assert check_bench.main(
+        ["--bench", str(ps), "--traffic", str(p2)]) == 1
 
 
 def test_fast_prepacked_engine_decodes(tmp_path):

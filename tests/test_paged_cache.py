@@ -1,0 +1,176 @@
+"""PageAllocator unit tests: free-list accounting, CoW, prefix sharing,
+watermark admission, and the leak/double-free invariants the continuous
+engine leans on."""
+
+import numpy as np
+import pytest
+
+from repro.serving import OutOfPages, PageAllocator
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        PageAllocator(0, 8)
+    with pytest.raises(ValueError):
+        PageAllocator(8, 0)
+    with pytest.raises(ValueError):
+        PageAllocator(8, 8, watermark=8)
+    with pytest.raises(ValueError):
+        PageAllocator(8, 8, watermark=-1)
+
+
+def test_blocks_for_rounds_up():
+    a = PageAllocator(8, page_size=8)
+    assert a.blocks_for(1) == 1
+    assert a.blocks_for(8) == 1
+    assert a.blocks_for(9) == 2
+    assert a.blocks_for(0) == 0
+
+
+def test_grow_is_atomic_and_low_pages_first():
+    a = PageAllocator(4, 8)
+    a.open_table(0)
+    assert a.grow(0, 2) == [0, 1]
+    assert a.n_free == 2
+    # asking beyond the free list raises WITHOUT mutating
+    with pytest.raises(OutOfPages):
+        a.grow(0, 5)
+    assert a.n_blocks(0) == 2
+    assert a.n_free == 2
+    # growing to the current size is a no-op
+    assert a.grow(0, 2) == []
+    a.check()
+
+
+def test_double_free_and_double_open_raise():
+    a = PageAllocator(4, 8)
+    a.open_table(7)
+    a.grow(7, 2)
+    with pytest.raises(ValueError):
+        a.open_table(7)
+    a.free(7)
+    assert a.n_free == 4
+    with pytest.raises(KeyError):
+        a.free(7)
+    a.check()
+
+
+def test_no_leak_across_many_requests():
+    a = PageAllocator(6, 8)
+    for rid in range(50):
+        a.open_table(rid)
+        a.grow(rid, 1 + rid % 3)
+        a.check()
+        a.free(rid)
+        a.check()
+    assert a.n_free == 6
+
+
+def test_watermark_admission():
+    a = PageAllocator(10, 8, watermark=3)
+    assert a.can_admit(7)
+    assert not a.can_admit(8)
+    a.open_table(0)
+    a.grow(0, 5)
+    assert a.can_admit(2)
+    assert not a.can_admit(3)
+    # grow itself ignores the watermark — it is an ADMISSION throttle,
+    # running requests may consume the reserve
+    a.grow(0, 10)
+    assert a.n_free == 0
+
+
+def test_cow_exclusive_page_is_a_noop():
+    a = PageAllocator(4, 8)
+    a.open_table(0)
+    a.grow(0, 2)
+    page, src = a.make_writable(0, 1)
+    assert page == 1 and src is None
+    a.check()
+
+
+def test_prefix_share_adopt_and_cow():
+    a = PageAllocator(8, 8)
+    key = ("sys", 16)
+    # prefiller owns 3 blocks; the first 2 become the pinned prefix
+    a.open_table(0)
+    a.grow(0, 3)
+    a.register_shared(key, 0, 2)
+    assert a.shared_blocks(key) == 2
+    # prefix survives its prefiller
+    a.free(0)
+    assert a.n_free == 8 - 2
+    a.check()
+    # adopter prepends the shared pages, then CoW-splits block 1
+    a.open_table(1)
+    assert a.adopt_shared(key, 1) == 16
+    assert a.n_blocks(1) == 2
+    page, src = a.make_writable(1, 1)
+    assert src == 1  # old shared page must be copied from
+    assert page not in (0, 1)
+    # shared page 1 still pinned for future adopters; adopter's copy private
+    page2, src2 = a.make_writable(1, 1)
+    assert page2 == page and src2 is None
+    a.free(1)
+    assert a.shared_blocks(key) == 2
+    a.check()
+
+
+def test_adopt_requires_empty_table():
+    a = PageAllocator(8, 8)
+    a.open_table(0)
+    a.grow(0, 1)
+    a.register_shared(("p",), 0, 1)
+    a.open_table(1)
+    a.grow(1, 1)
+    with pytest.raises(ValueError):
+        a.adopt_shared(("p",), 1)
+
+
+def test_register_shared_twice_raises():
+    a = PageAllocator(8, 8)
+    a.open_table(0)
+    a.grow(0, 1)
+    a.register_shared(("p",), 0, 1)
+    with pytest.raises(ValueError):
+        a.register_shared(("p",), 0, 1)
+
+
+def test_cow_out_of_pages():
+    a = PageAllocator(2, 8)
+    a.open_table(0)
+    a.grow(0, 1)
+    a.register_shared(("p",), 0, 1)
+    a.free(0)
+    a.open_table(1)
+    a.adopt_shared(("p",), 1)
+    a.grow(1, 2)  # takes the last free page
+    with pytest.raises(OutOfPages):
+        a.make_writable(1, 0)
+    a.check()
+
+
+def test_table_array_sentinels():
+    a = PageAllocator(6, 8)
+    a.open_table(3)
+    a.grow(3, 2)
+    arr = a.table_array([3, -1, 99], max_blocks=4)
+    assert arr.dtype == np.int32
+    assert arr.shape == (3, 4)
+    assert list(arr[0]) == [0, 1, a.invalid, a.invalid]
+    assert (arr[1] == a.invalid).all()   # empty lane
+    assert (arr[2] == a.invalid).all()   # unknown rid
+    assert a.invalid == a.n_pages
+
+
+def test_reset_restores_fresh_state():
+    a = PageAllocator(4, 8, watermark=1)
+    a.open_table(0)
+    a.grow(0, 2)
+    a.register_shared(("p",), 0, 1)
+    a.reset()
+    assert a.n_free == 4
+    assert a.shared_blocks(("p",)) == 0
+    a.check()
+    a.open_table(0)  # rid reusable after reset
+    assert a.grow(0, 4) == [0, 1, 2, 3]

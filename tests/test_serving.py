@@ -10,7 +10,12 @@ import pytest
 
 from repro.models import transformer as T
 from repro.models.registry import get_config
-from repro.serving import Engine, SamplingParams, ServeConfig
+from repro.serving import (
+    ContinuousEngine,
+    Engine,
+    SamplingParams,
+    ServeConfig,
+)
 from repro.serving.sampling import sample_tokens
 
 KEY = jax.random.PRNGKey(0)
@@ -20,6 +25,13 @@ PARAMS = T.init_params(KEY, CFG)
 
 def _engine(quant="native", slots=3, chunk=4, **kw):
     return Engine(CFG, PARAMS, ServeConfig(
+        n_slots=slots, max_len=32, prefill_chunk=chunk, quant_mode=quant, **kw
+    ))
+
+
+def _cengine(quant="native", slots=3, chunk=4, **kw):
+    kw.setdefault("page_size", 8)
+    return ContinuousEngine(CFG, PARAMS, ServeConfig(
         n_slots=slots, max_len=32, prefill_chunk=chunk, quant_mode=quant, **kw
     ))
 
@@ -396,3 +408,212 @@ class TestServingDeterminism:
         b = _engine(slots=4).generate([list(p) for p in self.PROMPTS],
                                       max_new=5, sampling=greedy)
         assert a == b
+
+
+# ---- continuous batching / paged KV --------------------------------------
+
+
+MIXED_PROMPTS = [[3, 7, 11, 2], [5, 9], [13, 4, 8, 6, 1, 12, 10, 2, 4, 9]]
+
+
+def _fake_clock(scheduler):
+    """Deterministic monotone clock: each read advances by 1.0."""
+    counter = {"t": 0.0}
+
+    def clock():
+        counter["t"] += 1.0
+        return counter["t"]
+
+    scheduler._clock = clock
+
+
+@pytest.mark.parametrize("quant", [
+    "native",
+    "int4_packed",
+    pytest.param("dsp_tuned", marks=pytest.mark.slow),
+    pytest.param("dsp_mixed", marks=pytest.mark.slow),
+])
+def test_paged_decode_matches_dense_per_quant_mode(quant):
+    """The paged engine must be token-identical to the fixed-slot engine
+    for the same requests in every quant mode — paging changes where KV
+    lives, never a bit of output."""
+    dense = _engine(quant=quant, slots=3)
+    paged = _cengine(quant=quant, slots=3)
+    want = dense.generate([list(p) for p in MIXED_PROMPTS], max_new=6)
+    got = paged.generate([list(p) for p in MIXED_PROMPTS], max_new=6)
+    assert got == want, quant
+    paged.alloc.check()
+    assert paged.alloc.n_free == paged.alloc.n_pages
+
+
+def test_paged_sampled_matches_dense():
+    sp = SamplingParams(temperature=0.8, top_k=10, top_p=0.95)
+    want = _engine(seed=5).generate(
+        [list(p) for p in MIXED_PROMPTS], max_new=6, sampling=sp
+    )
+    got = _cengine(seed=5).generate(
+        [list(p) for p in MIXED_PROMPTS], max_new=6, sampling=sp
+    )
+    assert got == want
+
+
+def test_staggered_prefill_join_regression():
+    """A lane whose prefill completes in a step where other lanes are
+    already decoding must join the decode batch next step — regression
+    for the cached device mask freezing it out (it then decoded from a
+    stale state and emitted garbage)."""
+    prompts = [[5, 9], [13, 4, 8, 6, 1, 12, 10, 2, 4, 9, 3, 7, 11]]
+    want = _engine(slots=2).generate([list(p) for p in prompts], max_new=6)
+    got = _cengine(slots=2).generate([list(p) for p in prompts], max_new=6)
+    assert got == want
+
+
+def test_continuous_admission_is_fifo_strict():
+    """A queued request that does not fit must not be overtaken by a
+    later, smaller one (no head-of-line skipping)."""
+    eng = _cengine(slots=2, chunk=4, n_pages=6, watermark_pages=0)
+    big = list(range(2, 27))      # 25 toks -> padded 28 -> 4 blocks
+    mid = [3, 4, 5, 6, 7, 8, 9, 10, 11]  # 9 -> padded 12 -> 2 blocks
+    ra = eng.submit(big, max_new=2, admit=False)
+    rb = eng.submit(list(mid), max_new=2, admit=False)
+    rc = eng.submit(list(mid), max_new=2, admit=False)  # won't fit yet
+    rd = eng.submit([5, 6, 7], max_new=2, admit=False)  # would fit, must wait
+    reqs = eng.scheduler.requests
+    for _ in range(40):
+        eng.step()
+        # FIFO invariant: rd never starts before rc
+        if reqs[rd].tokens:
+            assert reqs[rc].tokens, "later request overtook the queue front"
+        if all(reqs[r].done for r in (ra, rb, rc, rd)):
+            break
+    assert all(reqs[r].done for r in (ra, rb, rc, rd))
+    eng.alloc.check()
+    assert eng.alloc.n_free == eng.alloc.n_pages
+
+
+def test_preemption_resumes_bit_identical():
+    """Under page pressure the youngest lane is preempted and re-prefilled
+    later; its final stream must equal the unpressured run exactly."""
+    prompts = [[2, 3, 4, 5, 6, 7, 8, 9, 10], [11, 12, 13, 14, 15, 16, 17]]
+    sp = SamplingParams(temperature=0.9, top_k=8, top_p=0.95)
+    calm = _cengine(slots=2, seed=3, n_pages=16).generate(
+        [list(p) for p in prompts], max_new=10, sampling=sp
+    )
+    tight = _cengine(slots=2, seed=3, n_pages=4, watermark_pages=0)
+    got = tight.generate([list(p) for p in prompts], max_new=10, sampling=sp)
+    assert tight.stats()["preempted"] >= 1, "pool was not tight enough"
+    assert got == calm
+    tight.alloc.check()
+    assert tight.alloc.n_free == tight.alloc.n_pages
+
+
+def test_shared_prefix_cow_matches_unshared():
+    """Requests sharing a registered system prompt must emit exactly what
+    they emit without sharing, while physically holding one prefix copy."""
+    prefix = list(range(2, 14))  # 12 toks: 1 full + 1 partial page (ps=8)
+    suffixes = [[20, 21], [22, 23, 24], [25]]
+    prompts = [prefix + s for s in suffixes]
+    want = _cengine(slots=3).generate([list(p) for p in prompts], max_new=5)
+    eng = _cengine(slots=3, n_pages=16)
+    eng.register_shared_prefix(prefix)
+    got = eng.generate([list(p) for p in prompts], max_new=5)
+    assert got == want
+    eng.alloc.check()
+    # the two prefix pages stay pinned for future adopters; all private
+    # pages were freed on finish
+    assert eng.alloc.n_free == eng.alloc.n_pages - 2
+
+
+def test_capacity_boundary_exact():
+    """A prompt of exactly max_len is admissible and yields exactly one
+    token (reason 'length'); one more token of prompt is rejected."""
+    full = list(range(2, 34))  # 32 == max_len
+    for eng in (_engine(slots=1, chunk=5), _cengine(slots=1, chunk=5)):
+        outs = eng.generate([list(full)], max_new=8)
+        assert len(outs[0]) == 1
+        assert eng.scheduler.requests[0].finish_reason == "length"
+        with pytest.raises(ValueError):
+            eng.submit(full + [2])
+    # both engines emit the same single token
+    a = _engine(slots=1).generate([list(full)], max_new=8)
+    b = _cengine(slots=1).generate([list(full)], max_new=8)
+    assert a == b
+
+
+def test_streaming_tokens_match_outputs():
+    for eng in (_engine(slots=2), _cengine(slots=2)):
+        rids = [eng.submit(list(p), max_new=4, admit=False)
+                for p in MIXED_PROMPTS]
+        streamed = {r: [] for r in rids}
+        while eng.active.any() or eng.scheduler.n_queued:
+            eng.step()
+            for rid, tok in eng.drain_stream():
+                streamed[rid].append(tok)
+        assert not eng.drain_stream()
+        for rid in rids:
+            assert streamed[rid] == list(eng.scheduler.requests[rid].tokens)
+
+
+def test_ttft_stamped_per_request_not_per_batch():
+    """In one admission batch, a 1-chunk prompt's TTFT stamp must precede
+    a 4-chunk prompt's — the old code stamped the whole batch once, after
+    the longest prompt finished."""
+    for eng in (_engine(slots=2, chunk=4), _cengine(slots=2, chunk=4)):
+        _fake_clock(eng.scheduler)
+        r_short = eng.submit([5, 9], max_new=2, admit=False)
+        r_long = eng.submit([13, 4, 8, 6, 1, 12, 10, 2, 4, 9, 3, 7, 11],
+                            max_new=2, admit=False)
+        while eng.active.any() or eng.scheduler.n_queued:
+            eng.step()
+        reqs = eng.scheduler.requests
+        assert reqs[r_short].prefill_done_at < reqs[r_long].prefill_done_at
+
+
+def test_stats_zero_phase_rates_are_zero():
+    eng = _engine()
+    st = eng.stats()
+    assert st["prefill_tok_s"] == 0.0 and st["decode_tok_s"] == 0.0
+    assert st["p50_ttft_s"] == 0.0 and st["p99_ttft_s"] == 0.0
+    assert st["running"] == 0
+    # decode-free serving (max_new=1) must still report 0.0, not ~1e9
+    eng.generate([[2, 3, 4]], max_new=1)
+    st = eng.stats()
+    assert st["decode_tokens"] == 0 and st["decode_tok_s"] == 0.0
+    assert st["prefill_tok_s"] > 0
+
+
+def test_finish_twice_raises():
+    eng = _engine()
+    eng.generate([[2, 3, 4]], max_new=2)
+    with pytest.raises(RuntimeError):
+        eng.scheduler.finish(0, "eos")
+
+
+def test_percentile_interpolation():
+    from repro.serving import percentile
+
+    assert percentile([], 99.0) == 0.0
+    assert percentile([5.0], 50.0) == 5.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50.0) == pytest.approx(2.5)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 100.0) == 4.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 0.0) == 1.0  # sorts internally
+
+
+def test_continuous_stats_surface_page_state():
+    eng = _cengine(slots=2, n_pages=8)
+    eng.generate([[2, 3, 4]], max_new=3)
+    st = eng.stats()
+    assert st["n_pages"] == 8 and st["page_size"] == 8
+    assert st["free_pages"] == 8  # everything released after finish
+    assert st["preempted"] == 0
+    assert "p99_ttft_s" in st and "p99_tpot_s" in st
+
+
+def test_continuous_rejects_recurrent_families():
+    cfg = dataclasses.replace(get_config("xlstm-1.3b", smoke=True),
+                              dtype="float32")
+    params = T.init_params(KEY, cfg)
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params, ServeConfig(
+            n_slots=2, max_len=32, prefill_chunk=8, page_size=8
+        ))
