@@ -21,6 +21,11 @@ Measures the serving stack's claims:
 * **per-phase tuned blocks** — one ``autotune_phase_blocks`` sweep on the
   bench's layer shape, pinning that prefill and decode tune independently
   (decode gets small-M GEMV blocks).
+* **family rows** — float vs prepacked-int4 decode for one SSM and one
+  MoE registry smoke config (``--family <arch>`` overrides the default
+  pair), proving the packed path's non-dense coverage carries its
+  throughput claim: recurrent state rides chunked prefill and MoE
+  experts serve split per-expert packed leaves.
 
 Emits ``name,us_per_call,derived`` CSV rows like the other benchmarks and
 writes the raw numbers to ``BENCH_serving.json``.
@@ -65,6 +70,10 @@ DECODE_TRIALS = 6
 # (smoke tests shrink these like the shape constants above)
 MIXED_WIDTHS = ((4, 4), (8, 4), (4, 8), (8, 8))
 CALIB_TOKENS = 32
+# non-dense family rows (--family overrides): one SSM and one MoE smoke
+# config decode float vs packed through the same interleaved-median loop
+FAMILY_ARCHS = ("xlstm-1.3b", "moonshot-v1-16b-a3b")
+FAMILY_MAX_LEN = 128
 
 
 @partial(jax.jit, static_argnums=(1,))
@@ -119,15 +128,18 @@ def _bench_prefill_chunked(params, prompt) -> float:
 
 
 def _decode_engine(params, quant_mode: str, mixed_allocation=None,
+                   cfg: ModelConfig = None, max_len: int = None,
                    **cfg_kwargs) -> Engine:
     """An engine warmed into steady-state decode (slots full, jit traced)."""
-    eng = Engine(CFG, params, ServeConfig(
-        n_slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
-        max_new=MAX_LEN, quant_mode=quant_mode, **cfg_kwargs,
+    cfg = CFG if cfg is None else cfg
+    max_len = MAX_LEN if max_len is None else max_len
+    eng = Engine(cfg, params, ServeConfig(
+        n_slots=SLOTS, max_len=max_len, prefill_chunk=CHUNK,
+        max_new=max_len, quant_mode=quant_mode, **cfg_kwargs,
     ), mixed_allocation=mixed_allocation)
     rng = np.random.default_rng(0)
     for _ in range(SLOTS):
-        eng.submit(list(rng.integers(2, CFG.vocab_size, size=8)))
+        eng.submit(list(rng.integers(2, cfg.vocab_size, size=8)))
     eng.step()  # compile decode
     return eng
 
@@ -145,6 +157,33 @@ def _bench_decode_modes(engines: dict[str, Engine]) -> dict[str, float]:
             times[mode].append(time.perf_counter() - t0)
     return {
         m: SLOTS / statistics.median(v) for m, v in times.items()
+    }
+
+
+def _bench_family(arch: str) -> dict:
+    """Float vs prepacked-int4 steady-state decode for a registry smoke
+    config (the non-dense families the packed path now serves: recurrent
+    state rides the chunked-prefill valid mask, MoE experts serve split
+    per-expert packed leaves)."""
+    import dataclasses as _dc
+
+    from repro.models.registry import get_config
+
+    cfg = _dc.replace(get_config(arch, smoke=True), dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    engines = {
+        "native": _decode_engine(params, "native", cfg=cfg,
+                                 max_len=FAMILY_MAX_LEN),
+        "int4_packed": _decode_engine(params, "int4_packed", cfg=cfg,
+                                      max_len=FAMILY_MAX_LEN),
+    }
+    decode = _bench_decode_modes(engines)
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "float_tok_s": decode["native"],
+        "int4_packed_tok_s": decode["int4_packed"],
+        "int4_packed_vs_float": decode["int4_packed"] / decode["native"],
     }
 
 
@@ -183,7 +222,8 @@ def _phase_tuned_blocks() -> dict:
     }
 
 
-def run(out_path: str = "BENCH_serving.json") -> dict:
+def run(out_path: str = "BENCH_serving.json", families=None) -> dict:
+    families = FAMILY_ARCHS if families is None else families
     params = T.init_params(jax.random.PRNGKey(0), CFG)
     prompt = list(np.random.default_rng(0).integers(2, CFG.vocab_size,
                                                     size=PROMPT_LEN))
@@ -206,6 +246,10 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     dec_tuned = decode["dsp_tuned"]
     dec_mixed = decode["dsp_mixed"]
     tuned_blocks = _phase_tuned_blocks()
+    family_rows = {}
+    for arch in families:
+        row = _bench_family(arch)
+        family_rows[row["family"]] = row
 
     result = {
         "config": {"slots": SLOTS, "prompt_len": PROMPT_LEN, "chunk": CHUNK,
@@ -237,6 +281,8 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
         # (assignments, distinct_widths, budget, cost vs uniform base)
         "mixed": mixed.summary(),
         "tuned_blocks": tuned_blocks,
+        # non-dense family decode rows keyed by family name ("ssm", "moe")
+        "families": family_rows,
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
@@ -259,9 +305,25 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     for phase, row in tuned_blocks.items():
         emit(f"serving_tuned_block_{phase}", row["us_per_call"],
              f"block={tuple(row['block'])}")
+    for fam, row in family_rows.items():
+        emit(f"serving_family_{fam}_int4",
+             1e6 / row["int4_packed_tok_s"],
+             f"{row['int4_packed_tok_s']:.1f} tok/s "
+             f"({row['int4_packed_vs_float']:.2f}x float; {row['arch']})")
     return result
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--family", action="append", metavar="ARCH", default=None,
+        help="registry arch for a family decode row (repeatable; "
+             f"default: {', '.join(FAMILY_ARCHS)})",
+    )
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="output JSON path")
+    cli = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run(cli.out, families=cli.family)

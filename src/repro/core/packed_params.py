@@ -58,6 +58,7 @@ __all__ = [
     "is_packed_leaf",
     "is_dsp_tuned_leaf",
     "iter_packable_weights",
+    "split_expert_stacks",
     "pack_signed_nibbles",
     "unpack_signed_nibbles",
     "DspTunedLeaf",
@@ -242,10 +243,16 @@ def iter_packable_weights(
     so plan tables and converted trees always agree on coverage."""
     if not isinstance(params, dict):
         return
+    parent = path.rsplit("/", 1)[-1]
     for k, v in params.items():
         p = f"{path}/{k}"
+        # per-expert leaves from ``split_expert_stacks`` ("up/e0", "down/e3"…)
+        expert_leaf = (
+            k.startswith("e") and k[1:].isdigit()
+            and parent in ("up", "gate", "down")
+        )
         if (
-            k in ("w", "up", "gate", "down")
+            (k in ("w", "up", "gate", "down") or expert_leaf)
             and hasattr(v, "ndim")
             and v.ndim >= 2
             and "embed" not in path
@@ -258,6 +265,39 @@ def iter_packable_weights(
             yield p, v
         else:
             yield from iter_packable_weights(v, min_dim, p)
+
+
+def split_expert_stacks(params):
+    """Split stacked MoE expert weights into per-expert leaves.
+
+    ``init_moe`` stores each projection as one ``(…, E, d_in, d_out)``
+    stack.  A single stack can only carry a single quantization plan, and a
+    stacked packed leaf dequantizes at use (``apply_linear``'s prepacked
+    fast path needs a 2-D payload).  Splitting the stack into
+    ``{"e0": (…, d_in, d_out), "e1": …}`` children gives every expert its
+    own tree path — its own plan, its own sensitivity row, its own
+    prepacked leaf — and ``moe_ffn`` then routes each expert's capacity
+    buffer through ``apply_linear``.  Expert stacks are recognized
+    structurally: an ``up``/``gate``/``down`` array of ``ndim >= 3`` whose
+    parent dict also holds a ``router`` (the expert axis is always
+    third-from-last, under any outer layer stacking).  Idempotent — an
+    already-split tree passes through unchanged.
+    """
+    if not isinstance(params, dict):
+        return params
+    out = {}
+    is_moe = "router" in params
+    for k, v in params.items():
+        if (
+            is_moe
+            and k in ("up", "gate", "down")
+            and hasattr(v, "ndim")
+            and v.ndim >= 3
+        ):
+            out[k] = {f"e{i}": v[..., i, :, :] for i in range(v.shape[-3])}
+        else:
+            out[k] = split_expert_stacks(v)
+    return out
 
 
 # ---- projection fusion ----------------------------------------------------
@@ -414,6 +454,7 @@ def quantize_params_for_serving(params, min_dim: int = MIN_DIM,
     ``prepack=False`` (default) stores nibbles only — the checkpoint/HBM
     density representation; the engine passes ``prepack=True`` to also
     build the decode-speed operands."""
+    params = split_expert_stacks(params)
     targets = {p: None for p, _ in iter_packable_weights(params, min_dim)}
     return _convert_tree(
         params, targets, lambda w, _: _pack_matrix(w, prepack=prepack)
@@ -451,6 +492,10 @@ def quantize_for_serving(params, mode: str = "int4_packed",
     """
     if mode not in SERVING_MODES:
         raise ValueError(f"serving mode {mode!r} not in {SERVING_MODES}")
+    if mode not in ("native", "none"):
+        # MoE expert stacks get per-expert leaves under every quantizing
+        # mode (int8/dsp_packed quantize per expert at the point of use)
+        params = split_expert_stacks(params)
     if mode == "int4_packed":
         return quantize_params_for_serving(
             params, min_dim=min_dim, prepack=prepack

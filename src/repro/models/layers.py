@@ -158,7 +158,6 @@ def attention(
         # whose exp underflows to exactly 0 — so paged attention is
         # bit-identical to the dense cache over the valid positions.
         assert page_table is not None, "paged cache needs a page_table"
-        assert not cfg.sliding_window, "paged cache is full-attention only"
         pages_k, pages_v = cache["pages_k"], cache["pages_v"]
         n_pages, ps = pages_k.shape[0], pages_k.shape[1]
         max_blocks = page_table.shape[1]
@@ -167,14 +166,24 @@ def attention(
         else:
             row_pos = jnp.broadcast_to(positions.reshape(-1)[:1], (b,))
         pos = row_pos[:, None] + jnp.arange(s)[None]          # (B, S)
-        blk = pos // ps
+        if cfg.sliding_window:
+            # ring-buffer pages: the logical slot wraps at the window, so a
+            # lane's pool is bounded by ceil(window/page_size) pages.  The
+            # serving engines keep chunk-1 prefill for sliding windows
+            # (chunked prefill over a ring overwrites slots still needed by
+            # earlier in-chunk queries), so s == 1 whenever wrapping can
+            # occur.
+            slot = pos % cfg.sliding_window
+        else:
+            slot = pos
+        blk = slot // ps
         page = jnp.take_along_axis(
             page_table, jnp.clip(blk, 0, max_blocks - 1), axis=1
         )
         # positions past the logical window must not clamp into a live
         # block: force them to the drop sentinel
         page = jnp.where(blk < max_blocks, page, n_pages)
-        off = pos % ps
+        off = slot % ps
         pages_k = pages_k.at[page, off].set(
             k.astype(pages_k.dtype), mode="drop"
         )
@@ -189,10 +198,19 @@ def attention(
         v = pages_v[page_table].reshape(b, window, nkv, hd)
         cache_positions = jnp.arange(window)
         qidx = jnp.arange(s)
-        valid = (
-            cache_positions[None, None, :]
-            <= row_pos[:, None, None] + qidx[None, :, None]
-        )
+        if cfg.sliding_window:
+            # every written ring slot is in-window (dense ring branch
+            # semantics); gathered slots past the ring are never written
+            ring = cfg.sliding_window
+            valid = (
+                (cache_positions[None, None, :] <= slot[:, :, None])
+                | (pos[:, :, None] >= ring)
+            ) & (cache_positions[None, None, :] < ring)
+        else:
+            valid = (
+                cache_positions[None, None, :]
+                <= row_pos[:, None, None] + qidx[None, :, None]
+            )
         mask = jnp.where(valid[:, None, :, :], 0.0, NEG_INF)
     elif cache is not None:
         # decode (s==1) or cached chunked prefill (s>1, full attention only):

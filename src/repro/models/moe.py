@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.packed_linear import LinearSpec, init_linear
+from ..core.packed_linear import LinearSpec, apply_linear, init_linear
 from ..core.packed_params import materialize_weight
 from ..runtime.act_sharding import constrain
 from .config import ModelConfig
@@ -43,19 +43,42 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 
 def moe_ffn(
-    params: Params, x: jax.Array, cfg: ModelConfig, spec: LinearSpec | None = None
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: LinearSpec | None = None,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (output, aux_load_balancing_loss)."""
+    """Returns (output, aux_load_balancing_loss).
+
+    ``valid`` (B, S) bool marks the serving path: padding tokens route to
+    the overflow bin and produce zeros, and dispatch runs **dropless**
+    (capacity = every valid assignment).  Shape-dependent capacity
+    ``ceil(T·k/E·cf)`` would make a token's output depend on the static
+    batch shape — chunked prefill would drop different tokens than
+    chunk-1 prefill and lanes would couple through the capacity race,
+    breaking both the recurrent-chunking invariant and cross-engine token
+    identity.  Dropless serving makes each token's MoE output a pure
+    function of its own hidden state.  Training (``valid=None``) keeps
+    the capacity-factor drop semantics.
+    """
     b, s, d = x.shape
     t = b * s
     e, k = cfg.n_experts, cfg.experts_per_token
-    cap = int(max(1, (t * k / e) * cfg.capacity_factor))
+    cap = t * k if valid is not None else int(
+        max(1, (t * k / e) * cfg.capacity_factor)
+    )
     xt = x.reshape(t, d)
 
     logits = xt.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
     gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    if valid is not None:
+        # expert id ``e`` is a virtual "no expert": stable argsort parks these
+        # entries after every real assignment, so real tokens' ranks (and
+        # therefore capacity drops) are independent of padding lanes
+        expert_idx = jnp.where(valid.reshape(t)[:, None], expert_idx, e)
 
     # ---- sort-based dispatch ------------------------------------------
     flat_e = expert_idx.reshape(t * k)
@@ -63,8 +86,8 @@ def moe_ffn(
     sorted_e = flat_e[order]
     # rank within the expert group = index - first index of that expert
     first = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
-    rank = jnp.arange(t * k) - first[sorted_e]
-    keep = rank < cap
+    rank = jnp.arange(t * k) - first[jnp.minimum(sorted_e, e - 1)]
+    keep = (rank < cap) & (sorted_e < e)
     slot = jnp.where(keep, sorted_e * cap + rank, e * cap)  # overflow bin
 
     token_of = order // k  # token feeding each sorted entry
@@ -74,10 +97,24 @@ def moe_ffn(
     buf = constrain(xt_pad[buf_src[: e * cap]].reshape(e, cap, d), "expert")
 
     # ---- expert compute (EP-shardable over the leading E axis) --------
-    up = jnp.einsum("ecd,edf->ecf", buf, materialize_weight(params["up"], x.dtype).astype(x.dtype))
-    gate = jnp.einsum("ecd,edf->ecf", buf, materialize_weight(params["gate"], x.dtype).astype(x.dtype))
-    act = jax.nn.silu(gate) * up
-    out_buf = jnp.einsum("ecf,efd->ecd", act, materialize_weight(params["down"], x.dtype).astype(x.dtype))
+    up_w, gate_w, down_w = params["up"], params["gate"], params["down"]
+    if isinstance(up_w, dict):
+        # per-expert serving leaves (core.packed_params.split_expert_stacks):
+        # each expert's capacity buffer routes through apply_linear so every
+        # expert runs ITS OWN packed plan — per-expert mixed widths
+        spec = spec if spec is not None else LinearSpec()
+        outs = []
+        for i in range(e):
+            key = f"e{i}"
+            u = apply_linear({"w": up_w[key]}, buf[i], spec)
+            g = apply_linear({"w": gate_w[key]}, buf[i], spec)
+            outs.append(apply_linear({"w": down_w[key]}, jax.nn.silu(g) * u, spec))
+        out_buf = jnp.stack(outs)  # (E, cap, d)
+    else:
+        up = jnp.einsum("ecd,edf->ecf", buf, materialize_weight(up_w, x.dtype).astype(x.dtype))
+        gate = jnp.einsum("ecd,edf->ecf", buf, materialize_weight(gate_w, x.dtype).astype(x.dtype))
+        act = jax.nn.silu(gate) * up
+        out_buf = jnp.einsum("ecf,efd->ecd", act, materialize_weight(down_w, x.dtype).astype(x.dtype))
 
     # ---- combine -------------------------------------------------------
     # invert the sort: where did (token, choice) land?

@@ -7,6 +7,14 @@ Training/prefill uses chunked scans (``lax.scan`` over chunks of
 ``CHUNK`` tokens, parallel math within a chunk) to bound activation memory
 and keep the lowered HLO small; decode advances the carried state one step.
 Projections route through PackedLinear like every other matmul.
+
+Serving chunked prefill passes ``valid`` (a per-row *prefix* mask over the
+chunk): the mixer then runs a strictly sequential per-token scan that
+re-applies the exact single-token chunk math and gates the carried state with
+``where(valid_t, new, old)``.  Because each step is literally the chunk
+computation at length 1, a chunk of C tokens is bit-for-bit identical to C
+single-token calls — the invariant the serving engines' recurrent-state
+chunking (and preemption resume) is built on.
 """
 
 from __future__ import annotations
@@ -75,6 +83,7 @@ def mamba(
     x: jax.Array,
     cfg: ModelConfig,
     cache: Params | None = None,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None]:
     b, l, d = x.shape
     di = d * cfg.mamba_expand
@@ -122,14 +131,38 @@ def mamba(
         y = jnp.einsum("bcds,bcs->bcd", h_t, c_c)
         return h_t[:, -1], y
 
-    n_chunks = max(1, l // CHUNK)
-    cl = l // n_chunks
-    assert cl * n_chunks == l, (l, CHUNK)
-    resh = lambda v: v.reshape(b, n_chunks, cl, v.shape[-1]).swapaxes(0, 1)
-    h_fin, ys = jax.lax.scan(
-        chunk_step, h0, (resh(dt), resh(bmat), resh(cmat), resh(xf))
-    )
-    y = ys.swapaxes(0, 1).reshape(b, l, di)
+    if valid is not None:
+        # sequential masked prefill: one chunk_step per token (cl=1), carry
+        # gated so padding tails never advance the state (see module docstring)
+        def tok_step(h, args):
+            dt_t, b_t, c_t, u_t, ok = args
+            h_new, y = chunk_step(h, (dt_t, b_t, c_t, u_t))
+            return jnp.where(ok[:, None, None], h_new, h), y
+
+        per_tok = lambda v: v.reshape(b, l, 1, v.shape[-1]).swapaxes(0, 1)
+        h_fin, ys = jax.lax.scan(
+            tok_step,
+            h0,
+            (per_tok(dt), per_tok(bmat), per_tok(cmat), per_tok(xf),
+             valid.swapaxes(0, 1)),
+        )
+        y = ys.swapaxes(0, 1).reshape(b, l, di)
+        # conv window after the last *valid* token (pure gather — bit-exact):
+        # xp = [prev ++ xin]; after n valid tokens the window is xp[n : n+dc-1]
+        dc = cfg.mamba_d_conv
+        xp = jnp.concatenate([prev, xin], axis=1)
+        n_valid = jnp.sum(valid, axis=1, dtype=jnp.int32)
+        idx = n_valid[:, None] + jnp.arange(dc - 1, dtype=jnp.int32)[None]
+        conv_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    else:
+        n_chunks = max(1, l // CHUNK)
+        cl = l // n_chunks
+        assert cl * n_chunks == l, (l, CHUNK)
+        resh = lambda v: v.reshape(b, n_chunks, cl, v.shape[-1]).swapaxes(0, 1)
+        h_fin, ys = jax.lax.scan(
+            chunk_step, h0, (resh(dt), resh(bmat), resh(cmat), resh(xf))
+        )
+        y = ys.swapaxes(0, 1).reshape(b, l, di)
     y = y + xf * params["d_skip"][None, None, :]
     out = (y.astype(x.dtype)) * jax.nn.silu(z)
     out = apply_linear(params["out_proj"], out, spec)
@@ -172,6 +205,7 @@ def mlstm(
     x: jax.Array,
     cfg: ModelConfig,
     cache: Params | None = None,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None]:
     """Chunkwise stabilized mLSTM: C_t = f C_{t-1} + i v kᵀ; y = Cq/max(n·q,1)."""
     b, l, d = x.shape
@@ -198,13 +232,10 @@ def mlstm(
         n0 = jnp.zeros((b, h, hd), jnp.float32)
         m0 = jnp.full((b, h), -30.0, jnp.float32)
 
-    n_chunks = max(1, l // CHUNK)
-    cl = l // n_chunks
-    assert cl * n_chunks == l
-
     def chunk_step(carry, args):
         c, n, m = carry
         q_c, k_c, v_c, i_c, lf_c = args  # (B,H,C,·)
+        cl = q_c.shape[2]
         csum = jnp.cumsum(lf_c, axis=-1)  # Σ_{t<=j} log f_t  (B,H,C)
         total = csum[..., -1]
         # per-position stabilizer: m_j = g_j + csum_j with
@@ -236,13 +267,38 @@ def mlstm(
         n_upd = n * dec_c[..., None] + jnp.einsum("bhc,bhcd->bhd", add_w, k_c)
         return (c_new, n_upd, g_last + total), y
 
-    resh = lambda t: t.reshape(b, h, n_chunks, cl, *t.shape[3:]).transpose(
-        2, 0, 1, 3, *range(4, t.ndim + 1)
-    )
-    q_s, k_s, v_s = (resh(t) for t in (q, k, v))
-    i_s = ig.reshape(b, h, n_chunks, cl).transpose(2, 0, 1, 3)
-    f_s = logf.reshape(b, h, n_chunks, cl).transpose(2, 0, 1, 3)
-    (c_f, n_f, m_f), ys = jax.lax.scan(chunk_step, (c0, n0, m0), (q_s, k_s, v_s, i_s, f_s))
+    if valid is not None:
+        # sequential masked prefill: chunk_step at cl=1 per token, carry gated
+        # per row (see module docstring for the bit-for-bit invariant)
+        def tok_step(carry, args):
+            q_t, k_t, v_t, i_t, lf_t, ok = args
+            new_carry, y = chunk_step(carry, (q_t, k_t, v_t, i_t, lf_t))
+            gated = tuple(
+                jnp.where(ok.reshape((b,) + (1,) * (nw.ndim - 1)), nw, old)
+                for nw, old in zip(new_carry, carry)
+            )
+            return gated, y
+
+        per_tok = lambda t: t.reshape(b, h, l, 1, *t.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, t.ndim + 1)
+        )
+        q_s, k_s, v_s = (per_tok(t) for t in (q, k, v))
+        i_s = ig.reshape(b, h, l, 1).transpose(2, 0, 1, 3)
+        f_s = logf.reshape(b, h, l, 1).transpose(2, 0, 1, 3)
+        (c_f, n_f, m_f), ys = jax.lax.scan(
+            tok_step, (c0, n0, m0), (q_s, k_s, v_s, i_s, f_s, valid.swapaxes(0, 1))
+        )
+    else:
+        n_chunks = max(1, l // CHUNK)
+        cl = l // n_chunks
+        assert cl * n_chunks == l
+        resh = lambda t: t.reshape(b, h, n_chunks, cl, *t.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, t.ndim + 1)
+        )
+        q_s, k_s, v_s = (resh(t) for t in (q, k, v))
+        i_s = ig.reshape(b, h, n_chunks, cl).transpose(2, 0, 1, 3)
+        f_s = logf.reshape(b, h, n_chunks, cl).transpose(2, 0, 1, 3)
+        (c_f, n_f, m_f), ys = jax.lax.scan(chunk_step, (c0, n0, m0), (q_s, k_s, v_s, i_s, f_s))
     y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, l, hd).transpose(0, 2, 1, 3)
     y = y.reshape(b, l, d).astype(x.dtype)
     out = apply_linear(params["wo"], rmsnorm(params["norm"], y), spec)
@@ -284,6 +340,7 @@ def slstm(
     x: jax.Array,
     cfg: ModelConfig,
     cache: Params | None = None,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None]:
     b, l, d = x.shape
     spec = cfg.quant
@@ -312,7 +369,19 @@ def slstm(
         return (c_new, n_new, m_new), h
 
     xs = tuple(t.swapaxes(0, 1) for t in (z, ig, fg, og))  # (L, B, d)
-    (c_f, n_f, m_f), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    if valid is not None:
+        # already sequential — just gate the carry on the per-row prefix mask
+        def masked_step(carry, args):
+            new_carry, hh = step(carry, args[:4])
+            ok = args[4][:, None]
+            gated = tuple(jnp.where(ok, nw, old) for nw, old in zip(new_carry, carry))
+            return gated, hh
+
+        (c_f, n_f, m_f), hs = jax.lax.scan(
+            masked_step, (c0, n0, m0), xs + (valid.swapaxes(0, 1),)
+        )
+    else:
+        (c_f, n_f, m_f), hs = jax.lax.scan(step, (c0, n0, m0), xs)
     y = hs.swapaxes(0, 1).astype(x.dtype)
     out = apply_linear(params["wo"], rmsnorm(params["norm"], y), spec)
     new_cache = (

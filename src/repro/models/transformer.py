@@ -194,28 +194,41 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     )
 
 
-def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int, dtype=None):
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=None, batch: int | None = None):
     """Stacked (n_groups, ...) paged decode cache: per-layer physical page
     pools written/read through a per-lane page table (the continuous
     serving engine's cache — see ``serving.paged_cache``).
 
-    Only families whose whole decode state is full-attention KV can page:
-    recurrent state (ssm/hybrid) has no positional layout to page, and a
-    sliding-window ring buffer already bounds its own memory.
+    Full-attention KV pages through the table.  Recurrent state
+    (ssm / hybrid mamba) has no positional layout to page — it is O(1) per
+    lane — so it rides along as ordinary per-lane state arrays with a
+    ``batch`` (= n_lanes) leading axis, exactly the ``init_cache`` layout;
+    hybrid caches mix both kinds of leaf in one tree.  Sliding-window KV
+    pages the ring buffer itself: page tables address ring slots
+    ``pos % window`` rather than absolute positions, so the pool per lane
+    is bounded by the window.
     """
     if dtype is None:
         dtype = _dtype(cfg)
-    if cfg.family not in ("dense", "vlm", "moe", "encdec"):
+    fam = cfg.family
+    if fam in ("ssm", "hybrid") and batch is None:
         raise ValueError(
-            f"paged cache needs a pure full-attention family, got "
-            f"{cfg.family!r} (recurrent state cannot be paged)"
+            f"family {fam!r} keeps per-lane recurrent state in its paged "
+            "cache: pass batch=<n_lanes>"
         )
-    if cfg.sliding_window:
-        raise ValueError(
-            "paged cache does not support sliding-window attention "
-            "(the ring buffer already bounds cache memory)"
-        )
-    one = {"attn": init_paged_kv_cache(cfg, n_pages, page_size, dtype)}
+    if fam == "ssm":
+        # no KV anywhere: the "paged" cache is pure per-lane state
+        return init_cache(cfg, batch, 1, dtype)
+    if fam == "hybrid":
+        g = cfg.attn_every
+        mam = [init_mamba_cache(cfg, batch, jnp.float32) for _ in range(g - 1)]
+        one = {
+            "attn": init_paged_kv_cache(cfg, n_pages, page_size, dtype),
+            "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *mam),
+        }
+    else:
+        one = {"attn": init_paged_kv_cache(cfg, n_pages, page_size, dtype)}
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape).copy(), one
     )
@@ -235,8 +248,17 @@ def _apply_group(
     encoder_out: jax.Array | None,
     causal: bool = True,
     page_table: jax.Array | None = None,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    ``valid`` (B, S) bool is the serving engines' per-row prefix mask:
+    recurrent mixers gate their carried state on it (so a chunked prefill
+    advances each lane's state by exactly its valid tokens — see
+    ``models.ssm``) and MoE dispatch drops invalid tokens from the
+    capacity competition.  ``None`` (training / full-batch eval) keeps the
+    chunked/batched fast paths.
+    """
     fam = cfg.family
     spec = cfg.quant
     aux = jnp.zeros((), jnp.float32)
@@ -262,7 +284,10 @@ def _apply_group(
             page_table=page_table,
         )
         x = add(x, h)
-        y, aux = moe_ffn(gp["moe"], rmsnorm(gp["ln2"], x, cfg.norm_eps), cfg, spec)
+        y, aux = moe_ffn(
+            gp["moe"], rmsnorm(gp["ln2"], x, cfg.norm_eps), cfg, spec,
+            valid=valid,
+        )
         return add(x, y), None if new_kv is None else {"attn": new_kv}, aux
 
     if fam == "encdec":  # decoder group
@@ -284,7 +309,7 @@ def _apply_group(
         g = cfg.group_size
         h, new_s = slstm(
             gp["slstm"], rmsnorm(gp["ln_s"], x, cfg.norm_eps), cfg,
-            cache=None if cache is None else cache["slstm"],
+            cache=None if cache is None else cache["slstm"], valid=valid,
         )
         x = add(x, h)
         new_ml = []
@@ -293,7 +318,7 @@ def _apply_group(
             c_i = None if cache is None else jax.tree.map(lambda t: t[i], cache["mlstm"])
             h, nc = mlstm(
                 sub, rmsnorm({"scale": gp["ln_m"]["scale"][i]}, x, cfg.norm_eps),
-                cfg, cache=c_i,
+                cfg, cache=c_i, valid=valid,
             )
             x = add(x, h)
             new_ml.append(nc)
@@ -318,6 +343,7 @@ def _apply_group(
                 h, new_kv = attention(
                     gp["attn"], rmsnorm(ln_mix, x, cfg.norm_eps), cfg, positions,
                     cache=None if cache is None else cache["attn"],
+                    page_table=page_table,
                 )
                 x = add(x, h)
             else:
@@ -327,13 +353,19 @@ def _apply_group(
                     if cache is None
                     else jax.tree.map(lambda t: t[mamba_i], cache["mamba"])
                 )
-                h, nc = mamba(sub, rmsnorm(ln_mix, x, cfg.norm_eps), cfg, cache=c_i)
+                h, nc = mamba(
+                    sub, rmsnorm(ln_mix, x, cfg.norm_eps), cfg, cache=c_i,
+                    valid=valid,
+                )
                 x = add(x, h)
                 new_mam.append(nc)
                 mamba_i += 1
             if slot % 2 == 1 and cfg.n_experts:
                 sub = jax.tree.map(lambda t: t[moe_i], gp["moe"])
-                y, a = moe_ffn(sub, rmsnorm(ln_ffn, x, cfg.norm_eps), cfg, spec)
+                y, a = moe_ffn(
+                    sub, rmsnorm(ln_ffn, x, cfg.norm_eps), cfg, spec,
+                    valid=valid,
+                )
                 x = add(x, y)
                 aux = aux + a
                 moe_i += 1
@@ -368,14 +400,15 @@ def _remat(fn, policy: str):
 
 
 def _scan_groups(
-    groups, x, cfg, positions, cache, encoder_out, causal=True, page_table=None
+    groups, x, cfg, positions, cache, encoder_out, causal=True,
+    page_table=None, valid=None,
 ):
     def body(carry, xs):
         gp, cache_g = xs
         gp = constrain_group_params(gp)
         y, new_c, aux = _apply_group(
             gp, constrain(carry, "residual"), cfg, positions, cache_g,
-            encoder_out, causal, page_table=page_table,
+            encoder_out, causal, page_table=page_table, valid=valid,
         )
         return constrain(y, "residual"), (new_c, aux)
 
@@ -431,6 +464,7 @@ def forward(
     logits_dtype=jnp.float32,
     return_hidden: bool = False,
     page_table: jax.Array | None = None,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Token ids → logits.  Returns (logits, new_cache, aux_loss).
 
@@ -441,6 +475,9 @@ def forward(
     last prompt position, not every position of every chunk.
     ``page_table`` (B, max_blocks) routes KV writes/reads through a paged
     cache (``init_paged_cache``) instead of per-lane dense windows.
+    ``valid`` (B, S) bool marks which token slots are real (serving
+    engines' per-row prefix mask): recurrent state advances only on valid
+    tokens and MoE capacity ignores invalid ones.
     """
     x = params["embed"]["w"][tokens].astype(_dtype(cfg))
     if patch_embeds is not None:
@@ -452,7 +489,7 @@ def forward(
 
     x, new_cache, aux = _scan_groups(
         params["groups"], x, cfg, positions, cache, encoder_out,
-        page_table=page_table,
+        page_table=page_table, valid=valid,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if return_hidden:

@@ -5,6 +5,36 @@ Two engines share the scheduler, sampler and quantized-weight build:
 ``ContinuousEngine`` (continuous batching over a paged KV cache with
 preemption and prefix sharing).  See their docstrings for the
 architecture overviews.
+
+**The recurrent-state chunking invariant.**  Every registry family —
+recurrent state (SSM/hybrid) included — prefills through the shared
+``(n_slots, prefill_chunk)`` grid, and chunked prefill must leave the
+engine in the same state as chunk-1 prefill.  The pieces that make that
+hold, and that changes to prefill or the mixers must preserve:
+
+* The prefill forward receives a per-row ``valid`` length mask, and the
+  recurrent mixers run **sequential** scan math under it — a masked-out
+  position carries the previous state forward bitwise unchanged, so a
+  padded chunk advances each row's state by exactly its real tokens
+  (``tests/test_ssm.py`` pins chunked-masked == per-token bitwise at the
+  mixer level).
+* MoE dispatch is **dropless** on the serving path (``valid`` given):
+  expert capacity covers every valid assignment, so a token's expert
+  output is a pure function of its own hidden state, never of the static
+  batch shape or of the other lanes.  Training (``valid=None``) keeps
+  capacity-factor drop semantics.
+* The engine-level guarantee is therefore: chunked prefill reproduces
+  chunk-1 tokens and decode state — bitwise for ssm; for hybrid within
+  ulp-level tolerance, because XLA fuses the chunk-C and chunk-1
+  compiled programs differently around mamba's exp/softplus chains (the
+  mixer math itself is bit-exact; only program fusion differs).
+  ``tests/test_family_serving.py`` holds the fixed-case and property
+  forms, plus staggered joins and preemption/resume of recurrent state.
+
+The one family-shaped restriction left is prefix sharing: recurrent and
+sliding-window families reject ``register_shared_prefix`` with an error
+naming the blocking feature (their decode state is not shareable KV
+pages).
 """
 
 from .engine import ContinuousEngine, Engine, ServeConfig

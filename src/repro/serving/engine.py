@@ -283,13 +283,16 @@ class Engine:
         self.params = params
         self.scfg = serve_cfg
         b = serve_cfg.n_slots
-        # Chunked prefill needs (a) contiguous full-attention cache writes —
-        # ring-buffer (sliding-window) caches only support single-position
-        # writes — and (b) per-position masking, which recurrent state
-        # (ssm/hybrid) doesn't have: a padded chunk would advance the
-        # recurrent state past the prompt.  Both fall back to chunk=1.
-        recurrent = cfg.family in ("ssm", "hybrid")
-        self._chunk = 1 if (cfg.sliding_window or recurrent) else max(
+        # Chunked prefill needs contiguous cache writes, and a ring-buffer
+        # (sliding-window) cache only supports single-position writes — a
+        # chunk landing in the ring would overwrite slots that earlier
+        # in-chunk queries still need — so sliding windows keep chunk=1.
+        # Recurrent families (ssm/hybrid) prefill in full chunks: the
+        # forward's ``valid`` mask advances each row's state by exactly its
+        # own prompt tokens, and the mixers' masked scan re-applies the
+        # single-token chunk math so a chunk of C tokens is bit-identical
+        # to C single-token calls (the invariant — see ``models.ssm``).
+        self._chunk = 1 if cfg.sliding_window else max(
             1, min(serve_cfg.prefill_chunk, serve_cfg.max_len)
         )
         # the prefill grid is padded to whole chunks, so allocate the cache
@@ -367,9 +370,12 @@ class Engine:
         """
         b, c = tokens.shape
         positions = jnp.broadcast_to(base + jnp.arange(c)[None], (b, c))
+        # per-row prefix mask: recurrent state advances only over each
+        # row's real prompt tokens; MoE capacity ignores everything else
+        valid = row_mask[:, None] & (positions <= last_idx[:, None])
         hidden, new_cache, _ = T.forward(
             params, self.cfg, tokens, positions=positions, cache=cache,
-            return_hidden=True,
+            return_hidden=True, valid=valid,
         )
         cache = jax.tree.map(
             lambda old, new, ax: jnp.where(
@@ -420,15 +426,17 @@ class Engine:
         advance on device (active rows only — mirroring the host loop), so
         steady-state decode does no host→device transfers at all."""
         tokens, positions = state["tokens"], state["positions"]
+        active = state["active"]
+        # valid=active: inactive rows neither advance recurrent state nor
+        # compete for MoE expert capacity
         logits, new_cache, _ = T.forward(
             params, self.cfg, tokens[:, None], positions=positions[:, None],
-            cache=cache,
+            cache=cache, valid=active[:, None],
         )
         nxt = sample_tokens(
             logits[:, -1], state["keys"], positions, state["temperature"],
             state["top_k"], state["top_p"],
         )
-        active = state["active"]
         new_state = dict(
             state,
             tokens=jnp.where(active, nxt, tokens),
@@ -663,9 +671,17 @@ class ContinuousEngine:
     Token-identity contract: for the same single-request workload this
     engine emits exactly the tokens ``Engine`` emits, in every quant mode
     — the paged attention branch masks to the same valid positions and
-    the sampler draws from the same (rid, position) streams.  Recurrent
-    families (ssm/hybrid) and sliding-window models have no pageable KV
-    layout and must use ``Engine``.
+    the sampler draws from the same (rid, position) streams.
+
+    Every registry family serves here.  Recurrent state (ssm / hybrid
+    mamba) is O(1) per lane, so it lives as per-lane arrays beside the KV
+    pools (``init_paged_cache(batch=...)``); the forward's ``valid`` mask
+    keeps each lane's state advancing only over its own real tokens, and
+    because the mixers' masked scan is bit-identical to single-token calls
+    (``models.ssm``), chunked prefill — and the re-prefill that resumes a
+    preempted request — reproduce the uninterrupted state exactly.
+    Sliding-window KV pages the ring buffer (chunk-1 prefill, as in
+    ``Engine``); a pure-ssm model needs no pages at all.
     """
 
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
@@ -673,25 +689,30 @@ class ContinuousEngine:
         cfg, params, self.plan_table, self.mixed_allocation = (
             _prepare_serving_params(cfg, params, serve_cfg, mixed_allocation)
         )
-        if cfg.family in ("ssm", "hybrid") or cfg.sliding_window:
-            raise ValueError(
-                f"ContinuousEngine needs a pure full-attention model, got "
-                f"family={cfg.family!r} sliding_window={cfg.sliding_window!r}"
-                " (use the fixed-slot Engine)"
-            )
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
         b = serve_cfg.n_slots
-        self._chunk = max(1, min(serve_cfg.prefill_chunk, serve_cfg.max_len))
+        # sliding windows keep chunk-1 prefill (ring writes are single-
+        # position); recurrent families chunk via the ``valid`` mask
+        self._chunk = 1 if cfg.sliding_window else max(
+            1, min(serve_cfg.prefill_chunk, serve_cfg.max_len)
+        )
         # the per-lane logical window is the chunk-padded grid, exactly like
         # the dense engine's cache window — identical attention windows are
         # what make the two engines token-identical
         grid = -(-serve_cfg.max_len // self._chunk) * self._chunk
         ps = serve_cfg.page_size
-        self._max_blocks = -(-grid // ps)
+        if cfg.family == "ssm":
+            # pure recurrent state: O(1) per lane, nothing to page
+            self._max_blocks = 0
+        elif cfg.sliding_window:
+            # ring pages: a lane never addresses more than the window
+            self._max_blocks = -(-min(grid, cfg.sliding_window) // ps)
+        else:
+            self._max_blocks = -(-grid // ps)
         n_pages = (serve_cfg.n_pages if serve_cfg.n_pages is not None
-                   else b * self._max_blocks)
+                   else max(1, b * self._max_blocks))
         if n_pages < self._max_blocks:
             raise ValueError(
                 f"n_pages={n_pages} cannot hold one max-length request "
@@ -700,7 +721,27 @@ class ContinuousEngine:
         wm = (serve_cfg.watermark_pages
               if serve_cfg.watermark_pages is not None else b)
         self.alloc = PageAllocator(n_pages, ps, min(wm, n_pages - 1))
-        self.cache = T.init_paged_cache(cfg, n_pages, ps)
+        self.cache = T.init_paged_cache(cfg, n_pages, ps, batch=b)
+        # Per-leaf lane axis: recurrent-state leaves carry the lane (batch)
+        # axis, page-pool leaves don't — locate it by shape difference
+        # between a b-lane and a (b+1)-lane cache, sentinel -1 for pool
+        # leaves.  Drives admission state resets and restricts CoW page
+        # copies to pool leaves.
+        s_b = jax.eval_shape(
+            lambda: T.init_paged_cache(cfg, n_pages, ps, batch=b)
+        )
+        s_b1 = jax.eval_shape(
+            lambda: T.init_paged_cache(cfg, n_pages, ps, batch=b + 1)
+        )
+        self._lane_axes = jax.tree.map(
+            lambda x, y: next(
+                (i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                 if p != q),
+                -1,
+            ),
+            s_b, s_b1,
+        )
+        self._has_state = cfg.family in ("ssm", "hybrid")
         # host lane state (authoritative for scheduling; mirrored on device
         # for the decode loop, _push_state)
         self.positions = np.zeros(b, np.int32)   # next cache write index
@@ -731,18 +772,35 @@ class ContinuousEngine:
 
     # ---- jitted steps ---------------------------------------------------
     @partial(jax.jit, static_argnums=(0,))
+    def _reset_lanes(self, cache, lane_mask):
+        """Zero the recurrent-state leaves of the lanes in ``lane_mask`` —
+        a freshly admitted request must not continue from the previous
+        occupant's state.  Pool leaves (lane axis -1) are untouched: page
+        recycling already isolates them."""
+        return jax.tree.map(
+            lambda leaf, ax: leaf if ax < 0 else jnp.where(
+                Engine._row_select(lane_mask, leaf, ax),
+                jnp.zeros((), leaf.dtype), leaf,
+            ),
+            cache, self._lane_axes,
+        )
+
+    @partial(jax.jit, static_argnums=(0,))
     def _prefill_chunk(self, params, cache, tokens, base, page_table,
                        row_mask, last_idx, last_hidden):
         """One prefill chunk for every prefilling lane at once; lanes sit
         at *different* depths (per-row ``base``).  Rows outside
-        ``row_mask`` get the invalid page sentinel, so their writes drop —
-        no cache merge pass needed (unlike the dense engine)."""
+        ``row_mask`` get the invalid page sentinel, so their KV writes
+        drop, and ``valid`` is False across their whole chunk, so the
+        masked recurrent scan returns their state bit-unchanged — no cache
+        merge pass needed (unlike the dense engine)."""
         b, c = tokens.shape
         positions = base[:, None] + jnp.arange(c)[None]
         pt_eff = jnp.where(row_mask[:, None], page_table, self.alloc.invalid)
+        valid = row_mask[:, None] & (positions <= last_idx[:, None])
         hidden, new_cache, _ = T.forward(
             params, self.cfg, tokens, positions=positions, cache=cache,
-            return_hidden=True, page_table=pt_eff,
+            return_hidden=True, page_table=pt_eff, valid=valid,
         )
         idx = jnp.clip(last_idx - base, 0, c - 1)
         row_hidden = jnp.take_along_axis(
@@ -771,7 +829,9 @@ class ContinuousEngine:
     def _decode_step(self, params, cache, state):
         """Advance every decoding lane one token (device-resident state,
         as in ``Engine``); non-decoding lanes get the invalid page
-        sentinel so their writes drop and their outputs are ignored."""
+        sentinel so their KV writes drop, and ``valid=active`` so their
+        recurrent state stays bit-unchanged (a still-prefilling lane must
+        not advance on a junk decode token)."""
         tokens, positions = state["tokens"], state["positions"]
         active = state["active"]
         pt_eff = jnp.where(
@@ -779,7 +839,7 @@ class ContinuousEngine:
         )
         logits, new_cache, _ = T.forward(
             params, self.cfg, tokens[:, None], positions=positions[:, None],
-            cache=cache, page_table=pt_eff,
+            cache=cache, page_table=pt_eff, valid=active[:, None],
         )
         nxt = sample_tokens(
             logits[:, -1], state["keys"], positions, state["temperature"],
@@ -795,9 +855,13 @@ class ContinuousEngine:
     @partial(jax.jit, static_argnums=(0,))
     def _copy_page(self, cache, src, dst):
         """Copy-on-write device copy: physical page ``src`` -> ``dst``
-        across every layer's K and V pool."""
+        across every layer's K and V pool (recurrent-state leaves have no
+        pages — untouched)."""
         return jax.tree.map(
-            lambda leaf: leaf.at[:, dst].set(leaf[:, src]), cache
+            lambda leaf, ax: (
+                leaf if ax >= 0 else leaf.at[:, dst].set(leaf[:, src])
+            ),
+            cache, self._lane_axes,
         )
 
     def _push_state(self, decode_mask) -> None:
@@ -822,6 +886,30 @@ class ContinuousEngine:
         that starts with it prefills it once; every later request that
         starts with it adopts those pages (refcounted, CoW on write)
         and prefills only its own suffix."""
+        # Shared prefixes are the one feature that still excludes some
+        # families — each guard names the exact blocking feature.
+        if self.cfg.family == "ssm":
+            raise ValueError(
+                f"register_shared_prefix: unsupported for {self.cfg.name!r} "
+                "(family 'ssm'); blocking feature: recurrent state — the "
+                "prefix's decode state is a per-lane array, not shareable "
+                "KV pages"
+            )
+        if self.cfg.family == "hybrid":
+            raise ValueError(
+                f"register_shared_prefix: unsupported for {self.cfg.name!r} "
+                "(family 'hybrid'); blocking feature: mamba recurrent "
+                "state — shared KV pages capture only the attention "
+                "layers' prefix state, so an adopting request would resume "
+                "from a zero mamba state"
+            )
+        if self.cfg.sliding_window:
+            raise ValueError(
+                f"register_shared_prefix: unsupported for {self.cfg.name!r}"
+                f"; blocking feature: sliding_window={self.cfg.sliding_window}"
+                " — ring slots are position-ambiguous across requests "
+                "(slot = pos % window), so prefix pages cannot be adopted"
+            )
         if self._shared_prefix is not None:
             raise ValueError("shared prefix already registered")
         if not tokens:
@@ -927,6 +1015,13 @@ class ContinuousEngine:
                     self.cache = self._copy_page(
                         self.cache, jnp.int32(src), jnp.int32(page)
                     )
+            if self._has_state:
+                # the new occupant must start from zero recurrent state
+                lane_mask = np.zeros(self.scfg.n_slots, bool)
+                lane_mask[lane] = True
+                self.cache = self._reset_lanes(
+                    self.cache, jnp.asarray(lane_mask)
+                )
             self._lane_rid[lane] = req.rid
             self.active[lane] = True
             self._prefilling[lane] = True
@@ -1055,7 +1150,14 @@ class ContinuousEngine:
             if not self.active[lane]:
                 continue  # preempted by an earlier lane's growth
             rid = int(self._lane_rid[lane])
-            needed = int(self.positions[lane]) // self.alloc.page_size + 1
+            # a lane never addresses more than _max_blocks blocks: the ring
+            # (sliding window) wraps, and a pure-ssm lane has no pages
+            needed = min(
+                int(self.positions[lane]) // self.alloc.page_size + 1,
+                self._max_blocks,
+            )
+            if needed == 0:
+                continue
             while True:
                 try:
                     if self.alloc.grow(rid, needed):
@@ -1073,7 +1175,14 @@ class ContinuousEngine:
                         break
             if not self.active[lane]:
                 continue
-            page, src = self.alloc.make_writable(rid, needed - 1)
+            if self.cfg.sliding_window:
+                # the next write lands at ring slot pos % window
+                wblk = (
+                    int(self.positions[lane]) % self.cfg.sliding_window
+                ) // self.alloc.page_size
+            else:
+                wblk = needed - 1
+            page, src = self.alloc.make_writable(rid, wblk)
             if src is not None:
                 self.cache = self._copy_page(
                     self.cache, jnp.int32(src), jnp.int32(page)

@@ -177,8 +177,17 @@ def measure_layer_sensitivity(
     per ``(params, cfg, widths, seed)`` — the allocator and its tests
     rely on that.  ``cfg.quant.mode`` must route tuned leaves (the engine
     passes its already-switched ``dsp_tuned`` config)."""
-    from ..core.packed_params import iter_packable_weights, quantize_for_serving
+    from ..core.packed_params import (
+        iter_packable_weights,
+        quantize_for_serving,
+        split_expert_stacks,
+    )
     from ..models import transformer as T
+
+    # Per-expert sensitivity: stacked MoE expert weights split into e<N>
+    # leaves so each expert is probed (and later width-allocated) on its
+    # own.  Idempotent — already-split trees pass through unchanged.
+    params = split_expert_stacks(params)
 
     key = jax.random.PRNGKey(seed)
     tokens = jax.random.randint(

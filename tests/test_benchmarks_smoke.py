@@ -118,7 +118,8 @@ def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
     declare the prepacked path, carry the vs-float ratios (dsp_mixed adds
     the vs-uniform-int4 ratio and its per-layer width allocation), and the
     per-phase tuned blocks (small-M decode GEMV vs prefill grid) ride in
-    ``tuned_blocks``."""
+    ``tuned_blocks``, and the non-dense family rows (one SSM, one MoE)
+    land under ``families`` keyed by family name."""
     from benchmarks import serving_bench
 
     monkeypatch.setattr(serving_bench, "SLOTS", 2)
@@ -129,12 +130,13 @@ def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
     monkeypatch.setattr(serving_bench, "DECODE_TRIALS", 1)
     monkeypatch.setattr(serving_bench, "MIXED_WIDTHS", ((4, 4), (8, 8)))
     monkeypatch.setattr(serving_bench, "CALIB_TOKENS", 8)
+    monkeypatch.setattr(serving_bench, "FAMILY_MAX_LEN", 48)
     out = tmp_path / "BENCH_serving.json"
     result = serving_bench.run(out_path=str(out))
     blob = json.loads(out.read_text())
     assert blob == result
     assert {"config", "prefill", "decode", "mixed",
-            "tuned_blocks"} <= set(blob)
+            "tuned_blocks", "families"} <= set(blob)
     assert blob["prefill"]["chunked_tok_s"] > 0
     dec = blob["decode"]
     assert dec["decode_path"] == "prepacked"
@@ -153,6 +155,16 @@ def test_serving_bench_schema(tmp_path, monkeypatch, capsys):
         assert len(row["block"]) == 3 and row["us_per_call"] > 0
     # the decode phase tunes to a small-M GEMV block, prefill to a wide one
     assert blob["tuned_blocks"]["decode"]["block"][0] <= 16
+    # the family rows: one SSM and one MoE registry smoke config, each
+    # carrying float + prepacked-int4 decode and the gated ratio
+    fams = blob["families"]
+    assert {"ssm", "moe"} <= set(fams)
+    for fam, row in fams.items():
+        assert row["family"] == fam
+        assert row["float_tok_s"] > 0 and row["int4_packed_tok_s"] > 0
+        assert row["int4_packed_vs_float"] > 0
+    assert fams["ssm"]["arch"] == "xlstm-1.3b"
+    assert fams["moe"]["arch"] == "moonshot-v1-16b-a3b"
     assert _csv_rows(capsys)
 
 
@@ -162,23 +174,39 @@ def test_check_bench_gate(tmp_path):
     from benchmarks import check_bench
 
     healthy = {"decode": {"int4_packed_vs_float": 1.05,
-                          "dsp_mixed_vs_uniform_int4": 1.01}}
+                          "dsp_mixed_vs_uniform_int4": 1.01},
+               "families": {"moe": {"int4_packed_vs_float": 0.8}}}
     p = tmp_path / "ok.json"
     p.write_text(json.dumps(healthy))
     assert check_bench.check(str(p)) == []
     assert check_bench.main(["--bench", str(p)]) == 0
 
     regressed = {"decode": {"int4_packed_vs_float": 0.8,
-                            "dsp_mixed_vs_uniform_int4": 1.2}}
+                            "dsp_mixed_vs_uniform_int4": 1.2},
+                 "families": {"moe": {"int4_packed_vs_float": 0.8}}}
     p2 = tmp_path / "bad.json"
     p2.write_text(json.dumps(regressed))
     failures = check_bench.check(str(p2))
     assert len(failures) == 1 and "int4_packed_vs_float" in failures[0]
     assert check_bench.main(["--bench", str(p2)]) == 1
 
+    # the per-expert MoE row below its documented floor: the repack/
+    # per-token regression class the family gate exists for
+    moe_bad = {"decode": {"int4_packed_vs_float": 1.05,
+                          "dsp_mixed_vs_uniform_int4": 1.01},
+               "families": {"moe": {"int4_packed_vs_float": 0.29}}}
+    pm = tmp_path / "moe_bad.json"
+    pm.write_text(json.dumps(moe_bad))
+    failures = check_bench.check(str(pm))
+    assert len(failures) == 1
+    assert "families.moe.int4_packed_vs_float" in failures[0]
+
     # within-slack parity passes by default but fails under --strict
+    # (the moe row sits above its own floor so the strict failures are
+    # exactly the two decode parity keys)
     parity = {"decode": {"int4_packed_vs_float": 0.99,
-                         "dsp_mixed_vs_uniform_int4": 0.995}}
+                         "dsp_mixed_vs_uniform_int4": 0.995},
+              "families": {"moe": {"int4_packed_vs_float": 0.76}}}
     p3 = tmp_path / "parity.json"
     p3.write_text(json.dumps(parity))
     assert check_bench.main(["--bench", str(p3)]) == 0
@@ -188,7 +216,9 @@ def test_check_bench_gate(tmp_path):
     p4 = tmp_path / "missing.json"
     p4.write_text(json.dumps(missing))
     failures = check_bench.check(str(p4))
-    assert len(failures) == 1 and "dsp_mixed_vs_uniform_int4" in failures[0]
+    assert len(failures) == 2  # every absent gated key is named
+    assert "dsp_mixed_vs_uniform_int4" in failures[0]
+    assert "families.moe.int4_packed_vs_float" in failures[1]
     assert check_bench.check(str(tmp_path / "nope.json"))  # unreadable fails
 
     # multiple --bench files: ALL failures reported in one pass
@@ -286,7 +316,8 @@ def test_check_bench_traffic_gate(tmp_path):
     assert check_bench.check(
         str(p), gates=check_bench.TRAFFIC_GATES) == []
     ok_serving = {"decode": {"int4_packed_vs_float": 1.05,
-                             "dsp_mixed_vs_uniform_int4": 1.01}}
+                             "dsp_mixed_vs_uniform_int4": 1.01},
+                  "families": {"moe": {"int4_packed_vs_float": 0.8}}}
     ps = tmp_path / "serving_ok.json"
     ps.write_text(json.dumps(ok_serving))
     assert check_bench.main(

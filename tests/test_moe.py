@@ -76,3 +76,132 @@ def test_moe_grad_flows():
     g = jax.grad(loss)(p)
     gn = sum(float(jnp.abs(v).sum()) for v in jax.tree.leaves(g))
     assert np.isfinite(gn) and gn > 0
+
+
+# ---- per-expert packed serving (split expert stacks) ---------------------
+
+
+def _registry_moe_cfgs():
+    import dataclasses
+
+    from repro.models.registry import get_config, list_archs
+
+    out = []
+    for arch in list_archs():
+        cfg = dataclasses.replace(get_config(arch, smoke=True),
+                                  dtype="float32")
+        if cfg.n_experts:
+            out.append(cfg)
+    return out
+
+
+def test_iter_packable_weights_discovers_every_moe_expert_stack():
+    """``split_expert_stacks`` + ``iter_packable_weights`` must surface a
+    2-D per-expert leaf for every expert of every up/gate/down stack in
+    every MoE-bearing registry config (MoE and hybrid families)."""
+    import re
+
+    from repro.core.packed_params import (
+        iter_packable_weights,
+        split_expert_stacks,
+    )
+    from repro.models import transformer as T
+
+    cfgs = _registry_moe_cfgs()
+    assert len(cfgs) >= 3  # dbrx, moonshot, jamba at minimum
+    for cfg in cfgs:
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        split = split_expert_stacks(params)
+        # idempotent: a second split is a no-op
+        assert jax.tree.structure(split_expert_stacks(split)) == \
+            jax.tree.structure(split)
+        expert_leaves = {}
+        for path, leaf in iter_packable_weights(split):
+            m = re.search(r"/(up|gate|down)/e(\d+)$", path)
+            if m:
+                # per-expert matmul dims, under any leading stack axes
+                # (group scan and hybrid per-group layer stacks slice
+                # those off at runtime)
+                d, f = cfg.d_model, cfg.d_ff
+                want = (f, d) if m.group(1) == "down" else (d, f)
+                assert leaf.shape[-2:] == want, (path, leaf.shape)
+                expert_leaves.setdefault(m.group(1), set()).add(
+                    int(m.group(2)))
+        assert set(expert_leaves) == {"up", "gate", "down"}, cfg.name
+        for proj, ids in expert_leaves.items():
+            assert ids == set(range(cfg.n_experts)), (cfg.name, proj, ids)
+
+
+def test_per_expert_packed_decode_matches_float_within_bound():
+    """Every expert served through its own int4 packed plan: the forward
+    must stay within calibrated int4 quantization noise of float (and the
+    packed tree must actually carry per-expert packed leaves — before the
+    split, expert stacks silently served in float)."""
+    import dataclasses
+
+    from repro.core.packed_params import quantize_for_serving
+    from repro.models import transformer as T
+    from repro.models.registry import get_config
+
+    cfg = dataclasses.replace(get_config("moonshot-v1-16b-a3b", smoke=True),
+                              dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 2,
+                              cfg.vocab_size, jnp.int32)
+    ref, _, _ = T.forward(params, cfg, toks)
+    q = quantize_for_serving(params, "int4_packed")
+    leaves = jax.tree_util.tree_flatten_with_path(q)[0]
+    assert any("'e0'" in str(p) and "'packed'" in str(p) for p, _ in leaves)
+    got, _, _ = T.forward(q, cfg, toks)
+    ref_l = np.asarray(ref[:, -1]).reshape(-1)
+    got_l = np.asarray(got[:, -1]).reshape(-1)
+    assert np.isfinite(got_l).all()
+    rel = float(np.abs(got_l - ref_l).mean() / np.abs(ref_l).mean())
+    cos = float(np.dot(got_l, ref_l)
+                / (np.linalg.norm(got_l) * np.linalg.norm(ref_l)))
+    # same calibrated smoke-net bounds as the serving packed-decode test
+    assert rel < 1.0, rel
+    assert cos > 0.6, cos
+
+
+def test_sort_dispatch_determinism_and_padding_independence():
+    """Same tokens => same routing => bitwise-identical outputs across
+    calls; and a real token's output must not depend on junk padding rows
+    sharing the batch (dropless serving dispatch parks invalid tokens in
+    the overflow bin behind every real assignment)."""
+    key = jax.random.PRNGKey(10)
+    p = init_moe(key, CFG)
+    x = jax.random.normal(key, (2, 6, 16))
+    valid = jnp.ones((2, 6), bool)
+    a, _ = moe_ffn(p, x, CFG, valid=valid)
+    b, _ = moe_ffn(p, x, CFG, valid=valid)
+    assert bool(jnp.all(a == b))
+
+    # junk third row, masked invalid: real rows' outputs are unperturbed
+    junk = jnp.concatenate([x, 100.0 * jnp.ones((1, 6, 16))], axis=0)
+    vj = jnp.concatenate([valid, jnp.zeros((1, 6), bool)], axis=0)
+    c, _ = moe_ffn(p, junk, CFG, valid=vj)
+    np.testing.assert_allclose(np.asarray(c[:2]), np.asarray(a),
+                               rtol=0, atol=2e-6)
+    # the invalid row contributes nothing and receives zeros
+    assert float(jnp.abs(c[2]).max()) == 0.0
+
+
+def test_dropless_serving_vs_capacity_training_paths():
+    """valid=None keeps the training capacity-drop semantics; the serving
+    path (valid given) must be dropless — no zero output rows even at a
+    capacity factor that drops tokens in training."""
+    import dataclasses
+
+    tight = dataclasses.replace(CFG, capacity_factor=0.25)
+    key = jax.random.PRNGKey(11)
+    p = init_moe(key, tight)
+    x = jax.random.normal(key, (2, 16, 16))
+    train_out, _ = moe_ffn(p, x, tight)
+    train_norms = np.linalg.norm(np.asarray(train_out).reshape(-1, 16),
+                                 axis=-1)
+    assert (train_norms < 1e-6).any()  # capacity drops in training
+    serve_out, _ = moe_ffn(p, x, tight, valid=jnp.ones((2, 16), bool))
+    serve_norms = np.linalg.norm(np.asarray(serve_out).reshape(-1, 16),
+                                 axis=-1)
+    assert (serve_norms > 1e-6).all()  # dropless in serving

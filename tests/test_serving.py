@@ -609,11 +609,16 @@ def test_continuous_stats_surface_page_state():
     assert "p99_ttft_s" in st and "p99_tpot_s" in st
 
 
-def test_continuous_rejects_recurrent_families():
+def test_continuous_serves_recurrent_families():
+    """The old construction-time family rejection is gone: recurrent
+    configs build and serve (the full conformance matrix, the chunking
+    invariant, and the shared-prefix guard messages that replaced the
+    rejection live in tests/test_family_serving.py)."""
     cfg = dataclasses.replace(get_config("xlstm-1.3b", smoke=True),
                               dtype="float32")
     params = T.init_params(KEY, cfg)
-    with pytest.raises(ValueError):
-        ContinuousEngine(cfg, params, ServeConfig(
-            n_slots=2, max_len=32, prefill_chunk=8, page_size=8
-        ))
+    eng = ContinuousEngine(cfg, params, ServeConfig(
+        n_slots=2, max_len=32, prefill_chunk=8, page_size=8
+    ))
+    out = eng.generate([[5, 6, 7, 8, 9]], max_new=3)[0]
+    assert len(out) == 3

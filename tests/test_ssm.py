@@ -71,3 +71,78 @@ def test_mamba_state_carries_information():
     _, c1 = ssm.mamba(p, x1, HYB, cache=cache)
     assert float(jnp.abs(c1["h"]).sum()) > 0
     assert c1["conv"].shape == cache["conv"].shape
+
+
+# ---- masked sequential prefill (the serving chunking invariant) ----------
+
+
+def _mixers():
+    k = jax.random.PRNGKey(5)
+    return [
+        (ssm.mamba, ssm.init_mamba(k, HYB), HYB,
+         lambda b: ssm.init_mamba_cache(HYB, b)),
+        (ssm.mlstm, ssm.init_mlstm(k, CFG), CFG,
+         lambda b: ssm.init_mlstm_cache(CFG, b)),
+        (ssm.slstm, ssm.init_slstm(k, CFG), CFG,
+         lambda b: ssm.init_slstm_cache(CFG, b)),
+    ]
+
+
+def test_masked_chunked_equals_sequential_bitwise():
+    """With ``valid`` the mixers advance state through one exact chunk
+    step per token, so a C-token masked call must equal C single-token
+    masked calls BIT-FOR-BIT — state and outputs.  This is the invariant
+    that lets the serving engines chunk recurrent prefill."""
+    for fn, p, cfg, mk_cache in _mixers():
+        x = jax.random.normal(jax.random.PRNGKey(6), (2, 12, 32)) * 0.5
+        ones = jnp.ones((2, 12), bool)
+        y_all, c_all = fn(p, x, cfg, cache=mk_cache(2), valid=ones)
+        cache = mk_cache(2)
+        ys = []
+        for t in range(12):
+            y1, cache = fn(p, x[:, t:t + 1], cfg, cache=cache,
+                           valid=ones[:, t:t + 1])
+            ys.append(y1)
+        y_seq = jnp.concatenate(ys, axis=1)
+        name = fn.__name__
+        assert bool(jnp.all(y_all == y_seq)), name
+        for leaf_a, leaf_b in zip(jax.tree.leaves(c_all),
+                                  jax.tree.leaves(cache)):
+            assert bool(jnp.all(leaf_a == leaf_b)), name
+
+
+def test_masked_rows_keep_state_bit_unchanged():
+    """An all-invalid row's carry must come back bitwise identical — the
+    property that lets a decoding lane sit masked through another lane's
+    prefill chunks without a cache merge."""
+    for fn, p, cfg, mk_cache in _mixers():
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 6, 32))
+        cache = mk_cache(2)
+        # warm both rows so the state is nonzero
+        warm = jnp.ones((2, 6), bool)
+        _, cache = fn(p, x, cfg, cache=cache, valid=warm)
+        # row 1 masked out entirely; row 0 advances on fresh inputs
+        x2 = jax.random.normal(jax.random.PRNGKey(9), (2, 6, 32))
+        valid = jnp.stack([jnp.ones((6,), bool), jnp.zeros((6,), bool)])
+        _, after = fn(p, x2, cfg, cache=cache, valid=valid)
+        name = fn.__name__
+        for leaf_a, leaf_b in zip(jax.tree.leaves(cache),
+                                  jax.tree.leaves(after)):
+            a, b = np.asarray(leaf_a), np.asarray(leaf_b)
+            assert np.array_equal(a[1:2], b[1:2]), f"{name}: masked row moved"
+            assert not np.array_equal(a[0:1], b[0:1]), (
+                f"{name}: valid row did not advance"
+            )
+
+
+def test_masked_full_valid_matches_unmasked_decode():
+    """valid=all-ones at l=1 must reproduce the unmasked decode path
+    bitwise (the engines always pass valid; training never does)."""
+    for fn, p, cfg, mk_cache in _mixers():
+        x = jax.random.normal(jax.random.PRNGKey(8), (2, 1, 32))
+        y_a, c_a = fn(p, x, cfg, cache=mk_cache(2))
+        y_b, c_b = fn(p, x, cfg, cache=mk_cache(2),
+                      valid=jnp.ones((2, 1), bool))
+        assert bool(jnp.all(y_a == y_b)), fn.__name__
+        for leaf_a, leaf_b in zip(jax.tree.leaves(c_a), jax.tree.leaves(c_b)):
+            assert bool(jnp.all(leaf_a == leaf_b)), fn.__name__
