@@ -39,10 +39,13 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._async_error: BaseException | None = None
 
     # ---- save -----------------------------------------------------------
     def save(self, step: int, tree: Any, extra: dict | None = None) -> str:
@@ -53,14 +56,29 @@ class Checkpointer:
         self.wait()  # one outstanding write at a time
         host_tree = jax.device_get(tree)  # snapshot before returning
         self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree, extra or {}), daemon=True
+            target=self._write_guarded, args=(step, host_tree, extra or {}),
+            daemon=True,
         )
         self._thread.start()
 
+    def _write_guarded(self, step: int, host_tree: Any, extra: dict) -> None:
+        try:
+            self._write(step, host_tree, extra)
+        except BaseException as e:  # surfaced at the next wait()
+            self._async_error = e
+
     def wait(self) -> None:
+        """Join the in-flight async write.  A background write that died
+        (disk full, torn process state) re-raises HERE instead of
+        disappearing with the daemon thread — a caller that believes its
+        save landed when it didn't would later "restore" an older step
+        and silently lose work."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_error is not None:
+            err, self._async_error = self._async_error, None
+            raise RuntimeError("async checkpoint write failed") from err
 
     def _write(self, step: int, host_tree: Any, extra: dict) -> str:
         final = os.path.join(self.directory, f"step_{step:08d}")
@@ -92,10 +110,17 @@ class Checkpointer:
 
     # ---- restore ----------------------------------------------------------
     def all_steps(self) -> list[int]:
+        """Steps with a COMPLETE checkpoint.  ``.tmp`` directories (a
+        writer died mid-write before the atomic rename) and stray
+        non-checkpoint names are ignored — a torn write must never be
+        offered for restore."""
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name.split("_")[1]))
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            suffix = name.split("_", 1)[1]
+            if suffix.isdigit():
+                out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> int | None:

@@ -92,6 +92,23 @@ def main() -> None:
                          "(fused splits cost more than they save inside the "
                          "scanned CPU decode step — default 'none'; flip on "
                          "for TPU)")
+    ap.add_argument("--plan-db", default=None, metavar="DIR",
+                    help="persisted plan database directory "
+                         "(tuning.plandb): engine build consults it before "
+                         "running the dsp_tuned/dsp_mixed plan searches and "
+                         "stores cold results back — a restarted engine "
+                         "builds in seconds")
+    ap.add_argument("--governor", action="store_true",
+                    help="load-adaptive precision governor "
+                         "(serving.governor): hold a uniformly-narrow "
+                         "fallback weight tier beside the primary plan and "
+                         "swap to it when the queue backs up — graceful "
+                         "quality degradation instead of latency collapse "
+                         "(dsp_tuned/dsp_mixed only)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock deadline from submission; "
+                         "requests past it are shed (finish_reason "
+                         "'deadline') instead of occupying lanes")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -114,6 +131,9 @@ def main() -> None:
         page_size=args.page_size,
         n_pages=args.n_pages,
         watermark_pages=args.watermark_pages,
+        plan_db=args.plan_db,
+        governor=args.governor,
+        deadline_ms=args.deadline_ms,
     ))
     if engine.mixed_allocation is not None:
         alloc = engine.mixed_allocation
@@ -136,6 +156,10 @@ def main() -> None:
             }
             print("[serve] per-phase tuned blocks: "
                   + "; ".join(sorted(per_phase)))
+    if engine.tiers is not None:
+        print("[serve] governor tiers: " + "; ".join(
+            f"{i}:{t.name} (certified MAE <= {t.max_certified_mae:g})"
+            for i, t in enumerate(engine.tiers)))
     sampling = SamplingParams(args.temperature, args.top_k, args.top_p)
 
     rng = np.random.default_rng(0)
@@ -175,6 +199,20 @@ def main() -> None:
               f"(page_size {stats['page_size']}, watermark "
               f"{stats['watermark_pages']}, "
               f"preempted {stats['preempted']})")
+    if args.deadline_ms is not None:
+        print(f"[serve] shed {stats['shed']} of "
+              f"{stats['finished'] + stats['cancelled']} requests at the "
+              f"{args.deadline_ms:.0f}ms deadline")
+    if "plan_db" in stats:
+        db = stats["plan_db"]
+        warm = "warm" if db["hits"] else "cold"
+        print(f"[serve] plan db {db['directory']}: {warm} build "
+              f"({db['hits']} hit / {db['misses']} miss / "
+              f"{db['stale']} stale, key {db['key'][:12]})")
+    if "governor" in stats:
+        g = stats["governor"]
+        print(f"[serve] governor: tier {g['tier']} ({g['tier_name']}) "
+              f"after {g['swaps']} swaps over {g['observations']} steps")
 
 
 if __name__ == "__main__":

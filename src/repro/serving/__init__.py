@@ -38,14 +38,19 @@ pages).
 """
 
 from .engine import ContinuousEngine, Engine, ServeConfig
+from .governor import Governor, GovernorConfig, Tier, build_tiers
 from .paged_cache import OutOfPages, PageAllocator
 from .sampling import GREEDY, SamplingParams
-from .scheduler import Request, Scheduler, percentile
+from .scheduler import CANCEL_REASONS, Request, Scheduler, percentile
 
 __all__ = [
     "Engine",
     "ContinuousEngine",
     "ServeConfig",
+    "Governor",
+    "GovernorConfig",
+    "Tier",
+    "build_tiers",
     "PageAllocator",
     "OutOfPages",
     "SamplingParams",
@@ -53,4 +58,5 @@ __all__ = [
     "Request",
     "Scheduler",
     "percentile",
+    "CANCEL_REASONS",
 ]

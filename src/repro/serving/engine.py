@@ -55,6 +55,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -122,6 +123,23 @@ class ServeConfig:
     page_size: int = 16
     n_pages: int | None = None
     watermark_pages: int | None = None
+    # persisted plan database (tuning.plandb): a Checkpointer directory the
+    # build consults before running the dsp_tuned/dsp_mixed plan searches
+    # and writes back to after a cold search, so restarted engines build in
+    # seconds.  None = always search.  Keyed by plan_key(model, backend,
+    # shapes, search settings) — anything that would change the search
+    # result misses instead of serving stale plans.
+    plan_db: str | None = None
+    # per-request wall-clock deadline (milliseconds from submit).  A
+    # request past its deadline is SHED — cancelled with finish_reason
+    # "deadline" — at the next admission/step boundary instead of
+    # occupying a lane; queued requests are shed without ever admitting.
+    # None = no deadlines.
+    deadline_ms: float | None = None
+    # load-adaptive precision governor (serving.governor): hold prebuilt
+    # degraded weight tiers and swap under load.  False = off; True =
+    # default GovernorConfig; or a GovernorConfig instance.
+    governor: Any = False
     # default sampling (submit can override per request)
     temperature: float = 0.0
     top_k: int = 0
@@ -164,6 +182,17 @@ class ServeConfig:
             raise ValueError(
                 f"mixed_budget must be >= 0, got {self.mixed_budget}"
             )
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {self.deadline_ms}"
+            )
+        if self.governor and self.quant_mode not in ("dsp_tuned", "dsp_mixed"):
+            # governor tiers are per-layer DspTunedLeaf plan tables; the
+            # other modes have no plan machinery to re-tier through
+            raise ValueError(
+                "governor needs quant_mode dsp_tuned or dsp_mixed, got "
+                f"{self.quant_mode!r}"
+            )
         if self.quant_mode == "dsp_mixed" and self.autotune_plans:
             # the width allocator selects plans by cost proxy only; a
             # silent no-op here would let the flag lie about what ran
@@ -181,10 +210,25 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
     same-input projections, run the dsp_tuned/dsp_mixed plan searches and
     quantize the weights onto the chosen plans.
 
-    Returns ``(cfg, params, plan_table, mixed_allocation)``.
+    Returns ``(cfg, params, plan_table, mixed_allocation, float_params,
+    plan_db_stats)`` where ``float_params`` is the post-fusion float tree
+    the quantized ``params`` were built from — the governor builds its
+    degraded weight tiers from it so every tier's leaf paths line up with
+    the primary's — and ``plan_db_stats`` records the DB consultation
+    (hits/misses/stale + the key), or None when no DB was configured.
+
+    When ``serve_cfg.plan_db`` names a plan-database directory, the
+    dsp_tuned/dsp_mixed plan searches consult it first (keyed by
+    ``tuning.plan_key`` over the post-fusion tree — the tree actually
+    quantized) and fall back to search-and-store on a miss, so a warm
+    build runs no measurement at all.  A caller-supplied
+    ``mixed_allocation`` bypasses the DB in both directions: it is served
+    as given and never written back (its paths may not match this key).
     """
     plan_table: dict = {}
     resolved_mixed = None
+    float_params = params
+    db = db_key = None
     if mixed_allocation is not None and serve_cfg.quant_mode != "dsp_mixed":
         # dropping a caller-measured allocation would silently serve
         # different plans than the caller benchmarked
@@ -217,7 +261,22 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
             params = fuse_projection_weights(
                 params, fuse_attn=fuse in (True, "all"), fuse_mlp=True
             )
+        float_params = params  # post-fusion, pre-quantization
+        if (serve_cfg.plan_db
+                and serve_cfg.quant_mode in ("dsp_tuned", "dsp_mixed")):
+            from ..tuning.plandb import PlanDB, plan_key
+
+            db = PlanDB(serve_cfg.plan_db)
+            db_key = plan_key(cfg, serve_cfg, params)
         if serve_cfg.quant_mode == "dsp_mixed":
+            if mixed_allocation is None and db is not None:
+                entry = db.get(db_key)
+                if entry is not None and entry.get("kind") == "mixed":
+                    from ..tuning.plandb import allocation_from_json
+
+                    mixed_allocation = allocation_from_json(
+                        entry["allocation"]
+                    )
             if mixed_allocation is None:
                 from ..tuning.mixed import (
                     DEFAULT_WIDTH_CANDIDATES,
@@ -239,6 +298,13 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
                     seed=serve_cfg.seed,
                     exact_first=not serve_cfg.use_kernel,
                 )
+                if db is not None:
+                    from ..tuning.plandb import allocation_to_json
+
+                    db.put(db_key, {
+                        "kind": "mixed",
+                        "allocation": allocation_to_json(mixed_allocation),
+                    })
             resolved_mixed = mixed_allocation
             plan_table = mixed_allocation.plans
             params = quantize_for_serving(
@@ -246,17 +312,37 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
                 prepack=serve_cfg.prepack,
             )
         elif serve_cfg.quant_mode == "dsp_tuned":
-            from ..tuning import plan_linear_layers
+            plan_table = None
+            if db is not None:
+                entry = db.get(db_key)
+                if entry is not None and entry.get("kind") == "tuned":
+                    from ..tuning.plandb import report_from_json
 
-            a_bits, w_bits = serve_cfg.plan_bits
-            plan_table = plan_linear_layers(
-                params, a_bits=a_bits, w_bits=w_bits,
-                error_budget=serve_cfg.error_budget,
-                autotune=serve_cfg.autotune_plans,
-                # non-kernel serving runs proven-exact plans through the
-                # f32-GEMM shortcut — rank those first (see rank_plans)
-                exact_first=not serve_cfg.use_kernel,
-            )
+                    plan_table = {
+                        p: report_from_json(r)
+                        for p, r in entry["plans"].items()
+                    }
+            if plan_table is None:
+                from ..tuning import plan_linear_layers
+
+                a_bits, w_bits = serve_cfg.plan_bits
+                plan_table = plan_linear_layers(
+                    params, a_bits=a_bits, w_bits=w_bits,
+                    error_budget=serve_cfg.error_budget,
+                    autotune=serve_cfg.autotune_plans,
+                    # non-kernel serving runs proven-exact plans through
+                    # the f32-GEMM shortcut — rank those first (see
+                    # rank_plans)
+                    exact_first=not serve_cfg.use_kernel,
+                )
+                if db is not None:
+                    from ..tuning.plandb import report_to_json
+
+                    db.put(db_key, {
+                        "kind": "tuned",
+                        "plans": {p: report_to_json(r)
+                                  for p, r in plan_table.items()},
+                    })
             params = quantize_for_serving(
                 params, "dsp_tuned", plans=plan_table,
                 prepack=serve_cfg.prepack,
@@ -265,7 +351,31 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
             params = quantize_for_serving(
                 params, serve_cfg.quant_mode, prepack=serve_cfg.prepack
             )
-    return cfg, params, plan_table, resolved_mixed
+    db_stats = None if db is None else {
+        "directory": db.directory, "key": db_key,
+        "hits": db.n_hits, "misses": db.n_misses, "stale": db.n_stale,
+    }
+    return cfg, params, plan_table, resolved_mixed, float_params, db_stats
+
+
+def _setup_governor(engine, cfg, float_params, serve_cfg) -> None:
+    """Attach the load-adaptive precision governor (shared by both
+    engines): build the tier ladder from the post-fusion float weights
+    and hold it prequantized, ready to swap at a step boundary."""
+    engine.governor = None
+    engine.tiers = None
+    engine.active_tier = 0
+    if not serve_cfg.governor:
+        return
+    from .governor import Governor, GovernorConfig, build_tiers
+
+    gcfg = (serve_cfg.governor
+            if isinstance(serve_cfg.governor, GovernorConfig)
+            else GovernorConfig())
+    engine.tiers = build_tiers(
+        cfg, float_params, serve_cfg, engine.params, engine.plan_table, gcfg
+    )
+    engine.governor = Governor(gcfg, len(engine.tiers))
 
 
 class Engine:
@@ -276,12 +386,14 @@ class Engine:
         per-layer plan table instead — for callers that already measured
         (the serving benchmark probes budgets before building).  Its paths
         must match this engine's param tree (same fusion settings)."""
-        cfg, params, self.plan_table, self.mixed_allocation = (
-            _prepare_serving_params(cfg, params, serve_cfg, mixed_allocation)
+        (cfg, params, self.plan_table, self.mixed_allocation, float_params,
+         self.plan_db_stats) = _prepare_serving_params(
+            cfg, params, serve_cfg, mixed_allocation
         )
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
+        _setup_governor(self, cfg, float_params, serve_cfg)
         b = serve_cfg.n_slots
         # Chunked prefill needs contiguous cache writes, and a ring-buffer
         # (sliding-window) cache only supports single-position writes — a
@@ -447,11 +559,14 @@ class Engine:
     # ---- request lifecycle ----------------------------------------------
     def submit(self, prompt: list[int], max_new: int | None = None,
                sampling: SamplingParams | None = None,
-               admit: bool = True) -> int:
+               admit: bool = True, deadline_ms: float | None = None) -> int:
         """Enqueue a request; it is admitted as soon as a slot frees up.
 
         ``admit=False`` defers admission to the next ``step()`` so that a
         burst of submissions shares one batched prefill pass.
+        ``deadline_ms`` overrides the engine-wide ``ServeConfig.deadline_ms``
+        for this request (wall-clock budget from submission; a request
+        still unfinished past it is shed with finish_reason "deadline").
         Returns the request id (outputs appear in ``outputs[rid]``).
         """
         # exact capacity bound: the cache holds max_len token positions (its
@@ -471,7 +586,12 @@ class Engine:
             sampling = SamplingParams(
                 self.scfg.temperature, self.scfg.top_k, self.scfg.top_p
             )
-        rid = self.scheduler.submit(prompt, max_new, sampling)
+        if deadline_ms is None:
+            deadline_ms = self.scfg.deadline_ms
+        rid = self.scheduler.submit(
+            prompt, max_new, sampling,
+            deadline_s=None if deadline_ms is None else deadline_ms / 1e3,
+        )
         if admit:
             self._admit()
         return rid
@@ -569,9 +689,67 @@ class Engine:
         self.scheduler.finish(rid, reason)
         return rid
 
+    def _release_rid(self, rid: int) -> None:
+        """Free the slot of a cancelled *running* request (scheduler
+        accounting already done by ``Scheduler.cancel``)."""
+        for slot in np.flatnonzero(self._slot_rid == rid):
+            self.active[slot] = False
+            self._slot_rid[slot] = -1
+            self._dev_dirty = True
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> None:
+        """Abort an unfinished request immediately: a queued rid is
+        dequeued without admission, a running rid's slot frees for the
+        next admission.  Emitted tokens stay in ``outputs[rid]``."""
+        if not self.scheduler.cancel(rid, reason):
+            self._release_rid(rid)
+
+    def _shed_expired(self) -> list[int]:
+        """Cancel every deadline-expired request (finish_reason
+        "deadline") — queued ones never occupy a slot, running ones free
+        theirs at this step boundary."""
+        shed = []
+        for rid in self.scheduler.expired():
+            if not self.scheduler.cancel(rid, "deadline"):
+                self._release_rid(rid)
+            shed.append(rid)
+        return shed
+
+    def set_tier(self, tier: int) -> None:
+        """Swap the active precision tier at a step boundary.  Weights and
+        plan table repoint; KV cache, positions and sampling state are
+        untouched — the jitted steps specialize per plan table, so the
+        next step simply runs the other arithmetic."""
+        if self.tiers is None:
+            raise RuntimeError(
+                "engine was built without a governor (ServeConfig.governor)"
+            )
+        if not 0 <= tier < len(self.tiers):
+            raise ValueError(
+                f"tier {tier} out of range [0, {len(self.tiers)})"
+            )
+        if tier == self.active_tier:
+            return
+        t = self.tiers[tier]
+        self.params = t.params
+        self.plan_table = t.plan_table
+        self.active_tier = tier
+
+    def _govern(self, slow_step_ms: float | None = None) -> None:
+        if self.governor is None:
+            return
+        target = self.governor.observe(
+            self.scheduler.n_queued, slow_step_ms=slow_step_ms
+        )
+        if target != self.active_tier:
+            self.set_tier(target)
+
     def step(self) -> list[int]:
-        """Admit what fits, then advance every active slot one token.
-        Returns the rids that finished this step."""
+        """Shed expired requests, let the governor re-tier, admit what
+        fits, then advance every active slot one token.  Returns the rids
+        that finished this step."""
+        self._shed_expired()
+        self._govern()
         finished = self._admit()
         if not self.active.any():
             return finished
@@ -639,7 +817,15 @@ class Engine:
         return np.asarray(logits[:, -1].astype(jnp.float32))
 
     def stats(self) -> dict:
-        return self.scheduler.stats()
+        s = self.scheduler.stats()
+        if self.governor is not None:
+            s["governor"] = dict(
+                self.governor.stats(),
+                tier_name=self.tiers[self.active_tier].name,
+            )
+        if self.plan_db_stats is not None:
+            s["plan_db"] = dict(self.plan_db_stats)
+        return s
 
 
 class ContinuousEngine:
@@ -686,12 +872,24 @@ class ContinuousEngine:
 
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
                  mixed_allocation=None):
-        cfg, params, self.plan_table, self.mixed_allocation = (
-            _prepare_serving_params(cfg, params, serve_cfg, mixed_allocation)
+        (cfg, params, self.plan_table, self.mixed_allocation, float_params,
+         self.plan_db_stats) = _prepare_serving_params(
+            cfg, params, serve_cfg, mixed_allocation
         )
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
+        _setup_governor(self, cfg, float_params, serve_cfg)
+        # per-step decode wall times feed the governor's slow-step signal
+        # (rolling median over the retained window); recorded whether or
+        # not a governor is attached — stats() surfaces the median either
+        # way (runtime.fault_tolerance.StragglerDetector, host id 0)
+        from ..runtime.fault_tolerance import StragglerDetector
+
+        self.straggler = StragglerDetector(
+            window=(self.governor.config.window
+                    if self.governor is not None else 16)
+        )
         b = serve_cfg.n_slots
         # sliding windows keep chunk-1 prefill (ring writes are single-
         # position); recurrent families chunk via the ``valid`` mask
@@ -936,7 +1134,7 @@ class ContinuousEngine:
     # ---- request lifecycle ----------------------------------------------
     def submit(self, prompt: list[int], max_new: int | None = None,
                sampling: SamplingParams | None = None,
-               admit: bool = True) -> int:
+               admit: bool = True, deadline_ms: float | None = None) -> int:
         """Enqueue a request (same contract as ``Engine.submit``); it is
         admitted as soon as a lane and its pages are free."""
         if len(prompt) > self.scfg.max_len:
@@ -951,7 +1149,12 @@ class ContinuousEngine:
             sampling = SamplingParams(
                 self.scfg.temperature, self.scfg.top_k, self.scfg.top_p
             )
-        rid = self.scheduler.submit(prompt, max_new, sampling)
+        if deadline_ms is None:
+            deadline_ms = self.scfg.deadline_ms
+        rid = self.scheduler.submit(
+            prompt, max_new, sampling,
+            deadline_s=None if deadline_ms is None else deadline_ms / 1e3,
+        )
         if admit:
             self._admit_new()
         return rid
@@ -1212,7 +1415,9 @@ class ContinuousEngine:
             self.params, self.cache, self._dev_state
         )
         nxt = np.asarray(nxt)
-        self.scheduler.note_decode(len(lanes), time.monotonic() - t0)
+        dt = time.monotonic() - t0
+        self.scheduler.note_decode(len(lanes), dt)
+        self.straggler.record(0, dt)
         finished = []
         for lane in lanes:
             self.positions[lane] += 1
@@ -1252,11 +1457,73 @@ class ContinuousEngine:
         self._dev_dirty = True
         return rid
 
+    def _release_rid(self, rid: int) -> None:
+        """Free the lane and pages of a cancelled *running* request
+        (scheduler accounting already done by ``Scheduler.cancel``)."""
+        for lane in np.flatnonzero(self._lane_rid == rid):
+            self.active[lane] = False
+            self._prefilling[lane] = False
+            self._lane_rid[lane] = -1
+            self._seq.pop(int(lane), None)
+            self._dev_dirty = True
+        if rid == self._shared_pending_rid:
+            self._shared_pending_rid = -1  # its prefix pages never landed
+        self.alloc.free(rid)
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> None:
+        """Abort an unfinished request immediately: a queued rid is
+        dequeued without admission, a running rid's lane and pages free
+        for the next admission.  Emitted tokens stay in ``outputs``."""
+        if not self.scheduler.cancel(rid, reason):
+            self._release_rid(rid)
+
+    def _shed_expired(self) -> list[int]:
+        """Cancel every deadline-expired request (finish_reason
+        "deadline") at this step boundary — see ``Engine._shed_expired``."""
+        shed = []
+        for rid in self.scheduler.expired():
+            if not self.scheduler.cancel(rid, "deadline"):
+                self._release_rid(rid)
+            shed.append(rid)
+        return shed
+
+    def set_tier(self, tier: int) -> None:
+        """Swap the active precision tier at a step boundary (same
+        contract as ``Engine.set_tier``: weights and plan table repoint,
+        KV pages and lane state untouched)."""
+        if self.tiers is None:
+            raise RuntimeError(
+                "engine was built without a governor (ServeConfig.governor)"
+            )
+        if not 0 <= tier < len(self.tiers):
+            raise ValueError(
+                f"tier {tier} out of range [0, {len(self.tiers)})"
+            )
+        if tier == self.active_tier:
+            return
+        t = self.tiers[tier]
+        self.params = t.params
+        self.plan_table = t.plan_table
+        self.active_tier = tier
+
+    def _govern(self) -> None:
+        if self.governor is None:
+            return
+        target = self.governor.observe(
+            self.scheduler.n_queued,
+            slow_step_ms=1e3 * self.straggler.rolling_median(),
+        )
+        if target != self.active_tier:
+            self.set_tier(target)
+
     def step(self) -> list[int]:
-        """Admit what fits, prefill one chunk per prefilling lane, advance
-        the decode batch one token.  A lane that completed its prefill
-        this step decodes from the NEXT step (the decode batch is
-        snapshotted before the prefill phase).  Returns finished rids."""
+        """Shed expired requests, let the governor re-tier, admit what
+        fits, prefill one chunk per prefilling lane, advance the decode
+        batch one token.  A lane that completed its prefill this step
+        decodes from the NEXT step (the decode batch is snapshotted
+        before the prefill phase).  Returns finished rids."""
+        self._shed_expired()
+        self._govern()
         self._admit_new()
         decode_mask = (self.active & ~self._prefilling).copy()
         finished = self._prefill_step()
@@ -1304,5 +1571,13 @@ class ContinuousEngine:
             free_pages=self.alloc.n_free,
             page_size=self.alloc.page_size,
             watermark_pages=self.alloc.watermark,
+            decode_median_step_s=self.straggler.rolling_median(),
         )
+        if self.governor is not None:
+            s["governor"] = dict(
+                self.governor.stats(),
+                tier_name=self.tiers[self.active_tier].name,
+            )
+        if self.plan_db_stats is not None:
+            s["plan_db"] = dict(self.plan_db_stats)
         return s

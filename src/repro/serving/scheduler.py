@@ -32,7 +32,15 @@ from collections import deque
 
 from .sampling import GREEDY, SamplingParams
 
-__all__ = ["Request", "Scheduler", "percentile"]
+__all__ = ["Request", "Scheduler", "percentile", "CANCEL_REASONS"]
+
+# Finish reasons that mean "the scheduler gave up on the request", not
+# "the request completed": explicit caller cancellation and deadline
+# shedding.  stats() counts these separately from completions and keeps
+# them out of the latency metrics — a shed request has no latency, and
+# folding its short life into p99 would make load-shedding look like a
+# latency win.
+CANCEL_REASONS = ("cancelled", "deadline")
 
 
 def percentile(xs: list[float], q: float) -> float:
@@ -72,12 +80,20 @@ class Request:
     submitted_at: float = 0.0
     prefill_done_at: float | None = None
     finished_at: float | None = None
-    finish_reason: str | None = None  # "eos" | "length" | None while running
+    # "eos" | "length" | "cancelled" | "deadline" | None while running
+    finish_reason: str | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
+    # absolute clock time after which the request is shed (None = no
+    # deadline); stamped at submit from the relative deadline_s budget
+    deadline_at: float | None = None
 
     @property
     def done(self) -> bool:
         return self.finish_reason is not None
+
+    @property
+    def cancelled(self) -> bool:
+        return self.finish_reason in CANCEL_REASONS
 
 
 class Scheduler:
@@ -94,17 +110,32 @@ class Scheduler:
         self.n_finished = 0
         self.n_running = 0
         self.n_preempted = 0
+        self.n_cancelled = 0
+        self.n_shed = 0  # the "deadline" subset of n_cancelled
+        # unfinished rids carrying a deadline — expired() scans only these,
+        # so engines without deadlines pay nothing per step
+        self._deadlined: set[int] = set()
 
     # ---- queue ---------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int,
-               sampling: SamplingParams = GREEDY) -> int:
+               sampling: SamplingParams = GREEDY,
+               deadline_s: float | None = None) -> int:
+        """``deadline_s`` is a relative wall-clock budget from submission;
+        a request still unfinished ``deadline_s`` after submit is eligible
+        for shedding (``expired`` → ``cancel(reason="deadline")``)."""
         if not prompt:
             raise ValueError("empty prompt")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
         rid = self._next_rid
         self._next_rid += 1
+        now = self._clock()
         self.requests[rid] = Request(
-            rid, list(prompt), max_new, sampling, submitted_at=self._clock()
+            rid, list(prompt), max_new, sampling, submitted_at=now,
+            deadline_at=None if deadline_s is None else now + deadline_s,
         )
+        if deadline_s is not None:
+            self._deadlined.add(rid)
         self._queue.append(rid)
         return rid
 
@@ -172,17 +203,69 @@ class Scheduler:
         self.decode_time_s += dt_s
 
     def finish(self, rid: int, reason: str) -> None:
+        """Complete a request.  A still-queued rid (never admitted, or
+        preempted back to the queue) is dequeued cleanly — it was not
+        running, so ``n_running`` must not move for it (the old
+        unconditional decrement corrupted the running count for every
+        finish-from-queue path)."""
         req = self.requests[rid]
         if req.done:
             raise RuntimeError(f"request {rid} finished twice")
+        if rid in self._queue:
+            self._queue.remove(rid)
+        else:
+            self.n_running -= 1
         req.finish_reason = reason
         req.finished_at = self._clock()
         self.n_finished += 1
-        self.n_running -= 1
+        self._deadlined.discard(rid)
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Abort a request with a cancellation reason (``CANCEL_REASONS``).
+
+        Queued requests are dequeued without ever being admitted; running
+        requests are marked done here and the engine frees their
+        lane/slot at its next step boundary.  Returns True when the
+        request was still queued (the caller learns no device state needs
+        releasing).  Counted under ``n_cancelled`` (and ``n_shed`` for
+        deadline sheds) — never ``n_finished``.
+        """
+        if reason not in CANCEL_REASONS:
+            raise ValueError(
+                f"cancel reason {reason!r} not in {CANCEL_REASONS}"
+            )
+        req = self.requests[rid]
+        if req.done:
+            raise RuntimeError(f"request {rid} is finished, cannot cancel")
+        was_queued = rid in self._queue
+        if was_queued:
+            self._queue.remove(rid)
+        else:
+            self.n_running -= 1
+        req.finish_reason = reason
+        req.finished_at = self._clock()
+        self.n_cancelled += 1
+        if reason == "deadline":
+            self.n_shed += 1
+        self._deadlined.discard(rid)
+        return was_queued
+
+    def expired(self, now: float | None = None) -> list[int]:
+        """Unfinished rids past their deadline (queued and running alike),
+        oldest first — the engine sheds these at step boundaries."""
+        now = self._clock() if now is None else now
+        return [
+            rid for rid in sorted(self._deadlined)
+            if now > self.requests[rid].deadline_at
+        ]
 
     # ---- reporting -----------------------------------------------------
     def stats(self) -> dict:
-        done = [r for r in self.requests.values() if r.done]
+        # completed only: a cancelled/shed request has no honest latency —
+        # folding its short life into the percentiles would make shedding
+        # itself look like a latency improvement
+        done = [r for r in self.requests.values()
+                if r.done and not r.cancelled]
         ttft = [r.prefill_done_at - r.submitted_at for r in done
                 if r.prefill_done_at is not None]
         lat = [r.finished_at - r.submitted_at for r in done]
@@ -197,6 +280,8 @@ class Scheduler:
             "queued": self.n_queued,
             "running": self.n_running,
             "finished": self.n_finished,
+            "cancelled": self.n_cancelled,
+            "shed": self.n_shed,
             "preempted": self.n_preempted,
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,

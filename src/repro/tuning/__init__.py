@@ -27,16 +27,28 @@ from .plans import (
     enumerate_packing_configs,
     enumerate_specs,
     min_exact_p,
+    spec_from_json,
+    spec_to_json,
 )
 from .mixed import (
     DEFAULT_MIXED_BUDGET,
     DEFAULT_WIDTH_CANDIDATES,
+    PROBES,
     LayerSensitivity,
     MixedAllocation,
     allocate_mixed_plans,
     measure_layer_sensitivity,
     mixed_precision_plan,
     suggest_budget,
+)
+from .plandb import (
+    SCHEMA_VERSION,
+    PlanDB,
+    allocation_from_json,
+    allocation_to_json,
+    plan_key,
+    report_from_json,
+    report_to_json,
 )
 from .score import SpecScore, config_error_stats, plan_cost_proxy, spec_error_stats
 from .tuner import (
@@ -69,6 +81,16 @@ __all__ = [
     "DEFAULT_ERROR_BUDGET",
     "DEFAULT_MIXED_BUDGET",
     "DEFAULT_WIDTH_CANDIDATES",
+    "PROBES",
+    "SCHEMA_VERSION",
+    "PlanDB",
+    "plan_key",
+    "allocation_to_json",
+    "allocation_from_json",
+    "report_to_json",
+    "report_from_json",
+    "spec_to_json",
+    "spec_from_json",
     "LayerSensitivity",
     "MixedAllocation",
     "allocate_mixed_plans",

@@ -50,11 +50,31 @@ __all__ = [
     "DEFAULT_MIXED_BUDGET",
     "LayerSensitivity",
     "MixedAllocation",
+    "PROBES",
     "measure_layer_sensitivity",
     "allocate_mixed_plans",
     "suggest_budget",
     "mixed_precision_plan",
 ]
+
+
+class _ProbeCounter:
+    """Counts sensitivity-probe forwards (the expensive part of a mixed
+    build).  The plan database's warm-build tests assert this stays at
+    zero across a cache-hit engine build — the proof that a warm build
+    skipped measurement entirely rather than re-running it and discarding
+    the result."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def reset(self) -> int:
+        """Zero the counter, returning the value it held."""
+        prev, self.count = self.count, 0
+        return prev
+
+
+PROBES = _ProbeCounter()
 
 # Candidate (a_bits, w_bits) pairs searched per layer.  Every pair has
 # proven-exact plans in the enumerator (a4w4/a8w4 single-word, a4w8/a8w8
@@ -217,6 +237,7 @@ def measure_layer_sensitivity(
                 params, "dsp_tuned", plans={path: specs[bits]},
                 only_planned=True, prepack=True,
             )
+            PROBES.count += 1
             errors[bits] = _divergence(base_logits, fwd(probe), metric)
         out.append(LayerSensitivity(path, sizes[path], errors))
     return out

@@ -1,0 +1,296 @@
+"""Persisted plan database: engine builds consult before they measure.
+
+Build-time plan search is the expensive part of bringing a packed engine
+up — the dsp_mixed sensitivity pass alone runs ``n_paths × n_widths``
+calibration forwards — and it is repeated on every start even though its
+result is a pure function of (model config, backend, weight shapes,
+search settings).  This module persists that function's outputs so a
+restarted or recovered production engine builds in seconds: the engine
+computes a :func:`plan_key` fingerprint, asks :class:`PlanDB` for it, and
+only falls back to measure-and-store on a miss.
+
+Storage rides :class:`~repro.checkpoint.checkpointer.Checkpointer`
+end-to-end rather than reimplementing durability:
+
+* **Whole-DB-per-step.**  Every ``put`` writes ALL entries as one new
+  checkpoint step (entries are small JSON — plans and measured floats, no
+  arrays), so the newest step is always the complete database and the
+  checkpointer's ``keep``-GC of older steps can never delete an entry a
+  live engine was built from — whatever step it read, every entry it saw
+  is also in every newer step.
+* **Atomicity for free.**  ``Checkpointer._write`` publishes via
+  tmp-dir + ``os.rename``; a crash mid-``put`` leaves the previous step
+  intact and ``all_steps`` never offers the torn ``.tmp`` for restore, so
+  the DB cannot be read half-written.
+* **Explicit invalidation.**  Entries are wrapped in a
+  ``{"schema": SCHEMA_VERSION, "entries": …}`` envelope; a version bump
+  (or a corrupt envelope) makes :class:`PlanDB` treat the store as empty
+  instead of deserializing stale layouts, and :meth:`PlanDB.invalidate`
+  drops keys on demand.  Key staleness is structural: :func:`plan_key`
+  folds in everything the search result depends on — model config,
+  ``jax.default_backend()``, packable (path, shape) coverage, width
+  candidates, budgets, seeds — so a changed model or backend simply
+  misses rather than serving wrong plans.
+
+Serialization round-trips the FULL measured record — every
+:class:`~repro.tuning.tuner.PlanReport` float and, for dsp_mixed, the
+complete :class:`~repro.tuning.mixed.MixedAllocation` including per-layer
+sensitivities — so a warm build re-runs no scoring at all (the
+``tuning.mixed.PROBES`` counter stays at zero; tests assert it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any
+
+from ..checkpoint.checkpointer import Checkpointer
+from .mixed import LayerSensitivity, MixedAllocation
+from .plans import spec_from_json, spec_to_json
+from .tuner import PlanReport
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "PlanDB",
+    "plan_key",
+    "report_to_json",
+    "report_from_json",
+    "allocation_to_json",
+    "allocation_from_json",
+]
+
+# Bump whenever the serialized layout (report fields, allocation envelope,
+# key recipe) changes shape: old stores then read as empty and rebuild,
+# never as garbled plans.
+SCHEMA_VERSION = 1
+
+
+# ---- (de)serialization -----------------------------------------------------
+
+
+def report_to_json(report: PlanReport) -> dict:
+    """Loss-free JSON form of a scored/timed plan (all measured floats
+    ride along — a warm load re-runs NO scoring)."""
+    return {
+        "spec": spec_to_json(report.spec),
+        "mae": report.mae,
+        "mae_per_extraction": report.mae_per_extraction,
+        "ep": report.ep,
+        "wce": report.wce,
+        "cost_proxy": report.cost_proxy,
+        "exhaustive": report.exhaustive,
+        "block": list(report.block) if report.block else None,
+        "us_per_call": report.us_per_call,
+        "decode_block": (
+            list(report.decode_block) if report.decode_block else None
+        ),
+        "decode_us_per_call": report.decode_us_per_call,
+    }
+
+
+def report_from_json(d: dict) -> PlanReport:
+    return PlanReport(
+        spec=spec_from_json(d["spec"]),
+        mae=d["mae"],
+        mae_per_extraction=d["mae_per_extraction"],
+        ep=d["ep"],
+        wce=int(d["wce"]),
+        cost_proxy=d["cost_proxy"],
+        exhaustive=bool(d["exhaustive"]),
+        block=tuple(d["block"]) if d["block"] else None,
+        us_per_call=d["us_per_call"],
+        decode_block=tuple(d["decode_block"]) if d["decode_block"] else None,
+        decode_us_per_call=d["decode_us_per_call"],
+    )
+
+
+def _bits_key(bits: tuple[int, int]) -> str:
+    return f"{bits[0]},{bits[1]}"
+
+
+def _bits_from_key(s: str) -> tuple[int, int]:
+    a, w = s.split(",")
+    return (int(a), int(w))
+
+
+def allocation_to_json(alloc: MixedAllocation) -> dict:
+    """Full mixed-allocation record, sensitivities included (so a warm
+    engine exposes the same ``mixed_allocation`` a cold build would)."""
+    return {
+        "assignments": {p: list(b) for p, b in alloc.assignments.items()},
+        "plans": {p: report_to_json(r) for p, r in alloc.plans.items()},
+        "base_bits": list(alloc.base_bits),
+        "budget": alloc.budget,
+        "predicted_error": alloc.predicted_error,
+        "cost": alloc.cost,
+        "base_cost": alloc.base_cost,
+        "sensitivities": [
+            {
+                "path": s.path,
+                "n_values": s.n_values,
+                "errors": {_bits_key(b): e for b, e in s.errors.items()},
+            }
+            for s in alloc.sensitivities
+        ],
+    }
+
+
+def allocation_from_json(d: dict) -> MixedAllocation:
+    return MixedAllocation(
+        assignments={p: tuple(b) for p, b in d["assignments"].items()},
+        plans={p: report_from_json(r) for p, r in d["plans"].items()},
+        base_bits=tuple(d["base_bits"]),
+        budget=d["budget"],
+        predicted_error=d["predicted_error"],
+        cost=d["cost"],
+        base_cost=d["base_cost"],
+        sensitivities=tuple(
+            LayerSensitivity(
+                path=s["path"],
+                n_values=int(s["n_values"]),
+                errors={_bits_from_key(k): v for k, v in s["errors"].items()},
+            )
+            for s in d["sensitivities"]
+        ),
+    )
+
+
+# ---- keying ----------------------------------------------------------------
+
+
+def _jsonable(obj: Any) -> Any:
+    """Canonical JSON-able form for fingerprint material (tuples→lists,
+    dataclasses→sorted dicts)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return _jsonable(dataclasses.asdict(obj))
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    return obj
+
+
+def plan_key(cfg, serve_cfg, params) -> str:
+    """Fingerprint of everything the plan search's result depends on.
+
+    Folds in the full model config, the JAX backend (plan ranking is
+    backend-aware via ``exact_first``/autotune timings), the packable
+    (path, shape) coverage of the ACTUAL tree being quantized (post any
+    projection fusion — the caller passes the tree it will quantize), and
+    every ``ServeConfig`` knob the search reads.  Anything else changing
+    (sampling, slots, pages…) keeps the key stable — those never alter
+    plans.  A changed model/backend/search setting changes the key, so
+    stale entries are unreachable rather than wrong.
+    """
+    import jax
+
+    from ..core.packed_params import iter_packable_weights, split_expert_stacks
+
+    shapes = sorted(
+        (path, list(leaf.shape))
+        for path, leaf in iter_packable_weights(split_expert_stacks(params))
+    )
+    material = {
+        "schema": SCHEMA_VERSION,
+        "model": _jsonable(cfg),
+        "backend": jax.default_backend(),
+        "shapes": [[p, s] for p, s in shapes],
+        "search": {
+            "quant_mode": serve_cfg.quant_mode,
+            "plan_bits": _jsonable(serve_cfg.plan_bits),
+            "error_budget": serve_cfg.error_budget,
+            "autotune_plans": serve_cfg.autotune_plans,
+            "mixed_budget": serve_cfg.mixed_budget,
+            "width_candidates": _jsonable(serve_cfg.width_candidates),
+            "calib_tokens": serve_cfg.calib_tokens,
+            "seed": serve_cfg.seed,
+            "use_kernel": serve_cfg.use_kernel,
+            "fuse_projections": serve_cfg.fuse_projections,
+        },
+    }
+    blob = json.dumps(material, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ---- the database ----------------------------------------------------------
+
+
+class PlanDB:
+    """Plan store over a ``Checkpointer`` directory (see module docstring
+    for the whole-DB-per-step durability argument).
+
+    Hit/miss/stale counters are plain attributes — the engine surfaces
+    them in ``stats()`` and the warm-build tests assert on them.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self._ckpt = Checkpointer(directory, keep=keep)
+        self.n_hits = 0
+        self.n_misses = 0
+        self.n_stale = 0
+
+    @property
+    def directory(self) -> str:
+        return self._ckpt.directory
+
+    # -- internal: read the newest complete envelope ------------------------
+    def _load(self) -> dict[str, dict]:
+        step = self._ckpt.latest_step()
+        if step is None:
+            return {}
+        _, extra = self._ckpt.restore(step, like={})
+        if not isinstance(extra, dict) or extra.get("schema") != SCHEMA_VERSION:
+            # a different schema (or a foreign checkpoint dir) reads as
+            # empty: rebuild-and-overwrite, never deserialize stale layouts
+            self.n_stale += 1
+            return {}
+        entries = extra.get("entries", {})
+        return entries if isinstance(entries, dict) else {}
+
+    def _store(self, entries: dict[str, dict]) -> None:
+        step = self._ckpt.latest_step()
+        next_step = 0 if step is None else step + 1
+        self._ckpt.save(
+            next_step, {}, extra={"schema": SCHEMA_VERSION, "entries": entries}
+        )
+
+    # -- public API ---------------------------------------------------------
+    def get(self, key: str) -> dict | None:
+        """The stored entry for ``key`` (a JSON dict as given to ``put``),
+        or None on miss."""
+        entry = self._load().get(key)
+        if entry is None:
+            self.n_misses += 1
+            return None
+        self.n_hits += 1
+        return entry
+
+    def put(self, key: str, entry: dict) -> None:
+        """Store ``entry`` under ``key`` as a new atomic step carrying the
+        whole database (read-modify-write; last writer wins per key)."""
+        entries = self._load()
+        entries[key] = entry
+        self._store(entries)
+
+    def invalidate(self, key: str | None = None) -> int:
+        """Drop one key (or every key when ``key`` is None); returns the
+        number of entries dropped.  Written as a new step — the drop is
+        atomic and crash-safe like any ``put``."""
+        entries = self._load()
+        if key is None:
+            dropped = len(entries)
+            entries = {}
+        else:
+            dropped = int(key in entries)
+            entries.pop(key, None)
+        if dropped:
+            self._store(entries)
+        return dropped
+
+    def keys(self) -> list[str]:
+        return sorted(self._load())
+
+    def __len__(self) -> int:
+        return len(self._load())

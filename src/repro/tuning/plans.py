@@ -26,6 +26,8 @@ materializes that family for both compute models in the repo:
 
 from __future__ import annotations
 
+import dataclasses
+
 from ..core.packing import PackingConfig, intn_packing
 from ..kernels.ref import CORRECTIONS, PackedDotSpec
 
@@ -34,10 +36,34 @@ __all__ = [
     "enumerate_specs",
     "certified_plans",
     "enumerate_packing_configs",
+    "spec_to_json",
+    "spec_from_json",
     "DEFAULT_N_PAIRS",
     "DEFAULT_MAX_MR_BITS",
     "DEFAULT_N_COLUMNS",
 ]
+
+
+def spec_to_json(spec: PackedDotSpec) -> dict:
+    """Loss-free JSON form of a spec (plan-database persistence).
+
+    Field-for-field ``asdict``: round-tripping through
+    :func:`spec_from_json` re-runs the constructor's legality checks, so a
+    stored plan that predates a tightened invariant fails loudly at load
+    instead of serving an illegal layout."""
+    return dataclasses.asdict(spec)
+
+
+def spec_from_json(d: dict) -> PackedDotSpec:
+    """Inverse of :func:`spec_to_json` (revalidates via ``__post_init__``)."""
+    fields = {f.name for f in dataclasses.fields(PackedDotSpec)}
+    unknown = set(d) - fields
+    if unknown:
+        raise ValueError(
+            f"unknown PackedDotSpec fields {sorted(unknown)} — stale "
+            "plan-database entry from a different schema; invalidate it"
+        )
+    return PackedDotSpec(**d)
 
 DEFAULT_N_PAIRS = (1, 2, 4, 8, 16, 32)
 DEFAULT_MAX_MR_BITS = 4

@@ -1,0 +1,85 @@
+"""Fault-injection harness for the serving engines (helper module — must
+register ZERO tests; ``test_collection_sanity`` enforces it).
+
+Drives adversarial serving scenarios against either engine without
+wall-clock sleeps: bursts that outrun capacity, page exhaustion,
+deadline expiry forced by rewriting a request's ``deadline_at`` (the
+scheduler's own shedding path then fires deterministically), and
+tier-swap storms through the governor.  Tests compose these into the
+burst → degrade → recover → verify scenarios in ``test_faultinject.py``
+and ``test_governor.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "burst",
+    "drain",
+    "force_expire",
+    "run_steps",
+    "step_until",
+]
+
+
+def burst(engine, n, rng=None, prompt_len=(4, 8), max_new=4,
+          deadline_ms=None) -> list[int]:
+    """Submit ``n`` requests at once without stepping (``admit=False``) —
+    the queue depth the governor and the deadline machinery see is the
+    whole burst.  Returns the rids in submission order."""
+    rng = np.random.default_rng(0) if rng is None else rng
+    lo, hi = prompt_len
+    rids = []
+    for _ in range(n):
+        prompt = list(rng.integers(2, engine.cfg.vocab_size,
+                                   size=int(rng.integers(lo, hi))))
+        rids.append(engine.submit(prompt, max_new=max_new, admit=False,
+                                  deadline_ms=deadline_ms))
+    return rids
+
+
+def drain(engine, max_steps=500) -> int:
+    """Step until the engine is idle; returns the steps taken.  Raises if
+    the engine fails to drain — a hung drain is itself the bug class this
+    harness exists to catch (e.g. shed requests never freeing lanes)."""
+    for steps in range(max_steps):
+        if not (engine.active.any() or engine.scheduler.n_queued):
+            return steps
+        engine.step()
+    raise AssertionError(
+        f"engine failed to drain within {max_steps} steps: "
+        f"{int(engine.active.sum())} active, "
+        f"{engine.scheduler.n_queued} queued"
+    )
+
+
+def run_steps(engine, n) -> None:
+    """Step exactly ``n`` times regardless of idleness (the governor
+    observes every step, so calm observation windows need idle steps)."""
+    for _ in range(n):
+        engine.step()
+
+
+def step_until(engine, predicate, max_steps=500) -> int:
+    """Step until ``predicate(engine)`` holds; returns the steps taken."""
+    for steps in range(max_steps):
+        if predicate(engine):
+            return steps
+        engine.step()
+    raise AssertionError(f"predicate never held within {max_steps} steps")
+
+
+def force_expire(engine, rids) -> None:
+    """Inject deadline expiry: backdate each request's ``deadline_at`` so
+    the scheduler's next ``expired()`` scan sheds it — no sleeping, and
+    the shedding path under test is the production one."""
+    sched = engine.scheduler
+    past = sched._clock() - 1.0
+    for rid in rids:
+        req = sched.requests[rid]
+        if req.done:
+            raise AssertionError(f"request {rid} already finished — "
+                                 "cannot inject expiry")
+        req.deadline_at = past
+        sched._deadlined.add(rid)

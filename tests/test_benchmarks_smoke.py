@@ -289,20 +289,33 @@ def test_traffic_bench_schema_tiny(tmp_path, monkeypatch, capsys):
     monkeypatch.setattr(traffic_bench, "LONG_MAX_NEW", (4, 6))
     monkeypatch.setattr(traffic_bench, "XL_PROMPT", (16, 25))
     monkeypatch.setattr(traffic_bench, "XL_MAX_NEW", (4, 6))
+    monkeypatch.setattr(traffic_bench, "DEGRADE_REQUESTS", 4)
     out = tmp_path / "BENCH_traffic.json"
     result = traffic_bench.run(out_path=str(out))
     blob = json.loads(out.read_text())
     assert blob == result
-    assert {"config", "fifo", "continuous", "ratios"} <= set(blob)
+    assert {"config", "fifo", "continuous", "degradation",
+            "ratios"} <= set(blob)
     for row in (blob["fifo"], blob["continuous"]):
         assert row["finished"] == 6
         assert row["total_tokens"] > 0 and row["sustained_tok_s"] > 0
         assert row["p99_ttft_s"] >= row["p50_ttft_s"] >= 0
         assert {"p50_tpot_s", "p99_tpot_s", "mean_latency_s",
                 "preempted", "makespan_s"} <= set(row)
+    # degradation replay schema: the ungoverned twin serves everything;
+    # the governed engine accounts every burst request as served or shed
+    # (whether anything is actually shed at smoke speed is timing-
+    # dependent — the slow lane's saturating burst pins the ratio)
+    deg = blob["degradation"]
+    assert deg["deadline_ms"] > 0
+    assert deg["ungoverned"]["finished"] == 4
+    assert deg["ungoverned"]["shed"] == 0
+    assert deg["governed"]["finished"] + deg["governed"]["shed"] == 4
+    assert {"governor_swaps", "final_tier"} <= set(deg["governed"])
     # the gated keys must exist (no throughput assertion at smoke shapes)
     assert blob["ratios"]["continuous_vs_fifo_tok_s"] > 0
     assert blob["ratios"]["fifo_vs_continuous_ttft_p99"] > 0
+    assert blob["ratios"]["ungoverned_vs_governed_ttft_p99"] >= 0
     assert _csv_rows(capsys)
 
 
@@ -310,7 +323,8 @@ def test_check_bench_traffic_gate(tmp_path):
     from benchmarks import check_bench
 
     healthy = {"ratios": {"continuous_vs_fifo_tok_s": 1.1,
-                          "fifo_vs_continuous_ttft_p99": 1.2}}
+                          "fifo_vs_continuous_ttft_p99": 1.2,
+                          "ungoverned_vs_governed_ttft_p99": 2.4}}
     p = tmp_path / "traffic_ok.json"
     p.write_text(json.dumps(healthy))
     assert check_bench.check(
@@ -324,7 +338,8 @@ def test_check_bench_traffic_gate(tmp_path):
         ["--bench", str(ps), "--traffic", str(p)]) == 0
 
     regressed = {"ratios": {"continuous_vs_fifo_tok_s": 0.7,
-                            "fifo_vs_continuous_ttft_p99": 1.2}}
+                            "fifo_vs_continuous_ttft_p99": 1.2,
+                            "ungoverned_vs_governed_ttft_p99": 2.4}}
     p2 = tmp_path / "traffic_bad.json"
     p2.write_text(json.dumps(regressed))
     failures = check_bench.check(str(p2), gates=check_bench.TRAFFIC_GATES)
@@ -332,6 +347,18 @@ def test_check_bench_traffic_gate(tmp_path):
     assert "continuous_vs_fifo_tok_s" in failures[0]
     assert check_bench.main(
         ["--bench", str(ps), "--traffic", str(p2)]) == 1
+
+    # the degradation machinery not engaging (nothing shed, no swap)
+    # collapses the governed ratio to ~1.0 — below the 1.2 floor even
+    # with the default slack
+    no_degrade = {"ratios": {"continuous_vs_fifo_tok_s": 1.1,
+                             "fifo_vs_continuous_ttft_p99": 1.2,
+                             "ungoverned_vs_governed_ttft_p99": 1.0}}
+    p3 = tmp_path / "traffic_no_degrade.json"
+    p3.write_text(json.dumps(no_degrade))
+    failures = check_bench.check(str(p3), gates=check_bench.TRAFFIC_GATES)
+    assert len(failures) == 1
+    assert "ungoverned_vs_governed_ttft_p99" in failures[0]
 
 
 def test_fast_prepacked_engine_decodes(tmp_path):

@@ -24,7 +24,8 @@ import proptest
 
 TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
 REPO_ROOT = os.path.dirname(TESTS_DIR)
-HELPER_MODULES = ("proptest.py", "dsp_sim.py", "conftest.py")
+HELPER_MODULES = ("proptest.py", "dsp_sim.py", "conftest.py",
+                  "faultinject.py")
 
 
 def _collect_counts() -> dict[str, int]:

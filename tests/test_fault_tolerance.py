@@ -5,6 +5,7 @@ import time
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.runtime.compression import compressed_grads, init_error_feedback
 from repro.runtime.fault_tolerance import (
@@ -37,6 +38,35 @@ def test_straggler_detection():
         for host in range(4):
             det.record(host, 1.0 if host != 2 else 2.5)
     assert det.stragglers() == [2]
+
+
+def test_straggler_window_validation():
+    with pytest.raises(ValueError, match="window"):
+        StragglerDetector(window=0)
+    with pytest.raises(ValueError, match="window"):
+        StragglerDetector(window=-3)
+
+
+def test_rolling_median_empty_then_correct():
+    det = StragglerDetector(window=4)
+    # empty buffer: 0.0 means "no signal", never a crash
+    assert det.rolling_median() == 0.0
+    assert det.n_recorded() == 0
+    for t in (1.0, 3.0, 2.0):
+        det.record(0, t)
+    assert det.rolling_median() == 2.0  # odd count: middle element
+    det.record(0, 10.0)
+    assert det.rolling_median() == 2.5  # even count: mean of middle pair
+
+
+def test_straggler_buffer_bounded_at_window():
+    """The retained history is O(window) no matter how long the job runs,
+    and the median tracks only the newest window."""
+    det = StragglerDetector(window=4)
+    for t in range(1000):
+        det.record(7, float(t))
+    assert det.n_recorded(7) == 4
+    assert det.rolling_median(7) == 997.5  # median of 996..999
 
 
 def test_restart_policy():

@@ -1,0 +1,225 @@
+"""Load-adaptive precision governor: hysteresis controller unit tests,
+tier-ladder construction (narrow certified-exact fallback, overpacked
+emergency tier with a certified MAE ceiling), and the engine-level swap
+acceptance — a same-width tier swap mid-stream is bit-identical to never
+swapping, and requests admitted *after* a swap match an engine built
+directly on the target tier."""
+
+import dataclasses
+
+import jax
+import pytest
+
+import faultinject as fi
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.serving import (
+    ContinuousEngine,
+    Engine,
+    Governor,
+    GovernorConfig,
+    ServeConfig,
+)
+
+KEY = jax.random.PRNGKey(0)
+CFG = dataclasses.replace(get_config("qwen1.5-110b", smoke=True),
+                          dtype="float32")
+PARAMS = T.init_params(KEY, CFG)
+
+
+def _engine(quant="dsp_tuned", slots=2, chunk=4, **kw):
+    return Engine(CFG, PARAMS, ServeConfig(
+        n_slots=slots, max_len=32, prefill_chunk=chunk, quant_mode=quant, **kw
+    ))
+
+
+def _cengine(quant="dsp_tuned", slots=2, chunk=4, **kw):
+    kw.setdefault("page_size", 8)
+    return ContinuousEngine(CFG, PARAMS, ServeConfig(
+        n_slots=slots, max_len=32, prefill_chunk=chunk, quant_mode=quant, **kw
+    ))
+
+
+# ---- config validation ---------------------------------------------------
+
+
+def test_governor_config_validation():
+    with pytest.raises(ValueError, match="hysteresis band"):
+        GovernorConfig(queue_high=2, queue_low=2)
+    with pytest.raises(ValueError, match="emergency_queue_high"):
+        GovernorConfig(queue_high=8, emergency_queue_high=8)
+    with pytest.raises(ValueError, match="hold_steps"):
+        GovernorConfig(hold_steps=0)
+    with pytest.raises(ValueError, match="window"):
+        GovernorConfig(window=0)
+
+
+def test_governor_needs_two_tiers():
+    with pytest.raises(ValueError, match="2 tiers"):
+        Governor(GovernorConfig(), n_tiers=1)
+
+
+def test_governor_requires_packed_quant_mode():
+    with pytest.raises(ValueError, match="governor"):
+        ServeConfig(n_slots=2, max_len=32, governor=True, quant_mode="native")
+
+
+# ---- hysteresis controller (pure unit tests) -----------------------------
+
+
+def test_no_swap_before_hold_steps():
+    g = Governor(GovernorConfig(queue_high=4, hold_steps=3), n_tiers=2)
+    assert g.observe(10) == 0 and g.observe(10) == 0
+    assert g.observe(10) == 1  # third consecutive hot observation fires
+    assert g.n_swaps == 1 and g.history == [(3, 0, 1)]
+
+
+def test_noise_below_hold_steps_never_swaps():
+    g = Governor(GovernorConfig(queue_high=4, hold_steps=3), n_tiers=2)
+    for _ in range(10):  # hot, hot, calm, hot, hot, calm...
+        assert g.observe(10) == 0
+        assert g.observe(10) == 0
+        assert g.observe(0) == 0
+    assert g.n_swaps == 0
+
+
+def test_hysteresis_band_holds_current_tier():
+    cfg = GovernorConfig(queue_high=8, queue_low=2, hold_steps=2)
+    g = Governor(cfg, n_tiers=2)
+    for _ in range(2):
+        g.observe(9)
+    assert g.active == 1
+    # depth inside (queue_low, queue_high): hold forever, no recovery
+    for _ in range(20):
+        assert g.observe(5) == 1
+    assert g.n_swaps == 1
+    # only a drained queue recovers
+    g.observe(1)
+    assert g.observe(1) == 0 and g.n_swaps == 2
+
+
+def test_recovery_steps_down_one_rung_at_a_time():
+    cfg = GovernorConfig(queue_high=4, emergency_queue_high=10, hold_steps=2)
+    g = Governor(cfg, n_tiers=3)
+    for _ in range(2):
+        g.observe(20)  # escalates straight to the emergency tier
+    assert g.active == 2
+    for _ in range(2):
+        g.observe(0)
+    assert g.active == 1, "recovery must re-earn each rung"
+    for _ in range(2):
+        g.observe(0)
+    assert g.active == 0
+    assert [h[1:] for h in g.history] == [(0, 2), (2, 1), (1, 0)]
+
+
+def test_slow_step_signal_degrades_without_queue():
+    cfg = GovernorConfig(queue_high=100, emergency_queue_high=200,
+                         slow_step_ms=5.0, hold_steps=2)
+    g = Governor(cfg, n_tiers=2)
+    g.observe(0, slow_step_ms=50.0)
+    assert g.observe(0, slow_step_ms=50.0) == 1
+    # 0.0 means "no signal recorded yet", never hot
+    g2 = Governor(cfg, n_tiers=2)
+    for _ in range(5):
+        assert g2.observe(0, slow_step_ms=0.0) == 0
+
+
+def test_counters_reset_on_swap_min_dwell():
+    g = Governor(GovernorConfig(queue_high=4, hold_steps=3), n_tiers=2)
+    for _ in range(3):
+        g.observe(10)
+    assert g.active == 1
+    # immediately calm: still needs a full hold_steps run to recover
+    g.observe(0)
+    g.observe(0)
+    assert g.active == 1
+    g.observe(0)
+    assert g.active == 0
+
+
+# ---- tier ladder construction --------------------------------------------
+
+
+def test_build_tiers_narrow_is_certified_exact():
+    eng = _engine(governor=GovernorConfig(narrow_bits=(4, 4)))
+    assert [t.name for t in eng.tiers] == ["primary", "narrow"]
+    for tier in eng.tiers:
+        assert tier.max_certified_mae == 0.0 and tier.summary()["exact"]
+    # tier tables cover the same layers as the primary plan table
+    assert set(eng.tiers[1].plan_table) == set(eng.plan_table)
+
+
+def test_emergency_tier_is_overpacked_within_ceiling():
+    eng = _engine(governor=GovernorConfig(emergency_tier=True,
+                                          emergency_max_mae=0.5))
+    assert [t.name for t in eng.tiers] == ["primary", "narrow", "emergency"]
+    emergency = eng.tiers[2]
+    assert 0.0 < emergency.max_certified_mae <= 0.5
+    for report in emergency.plan_table.values():
+        assert not report.certificate.exact  # genuinely overpacked
+    assert emergency.summary()["exact"] is False
+
+
+def test_emergency_tier_impossible_ceiling_raises():
+    # below every non-exact plan's certified bound (the tightest
+    # overpacked a4w4 certificate sits around 5.6e-21)
+    with pytest.raises(ValueError, match="emergency_max_mae"):
+        _engine(governor=GovernorConfig(emergency_tier=True,
+                                        emergency_max_mae=1e-30))
+
+
+def test_set_tier_validation():
+    plain = _engine(quant="dsp_tuned")
+    with pytest.raises(RuntimeError, match="governor"):
+        plain.set_tier(1)
+    gov = _engine(governor=GovernorConfig())
+    with pytest.raises(ValueError, match="out of range"):
+        gov.set_tier(5)
+    gov.set_tier(0)  # same-tier no-op
+    assert gov.active_tier == 0
+
+
+# ---- swap acceptance (the bit-identity claims) ---------------------------
+
+
+def _tokens(engine, rid):
+    return list(engine.scheduler.requests[rid].tokens)
+
+
+def test_same_width_swap_is_bit_identical_mid_stream():
+    """Both tiers hold certified-exact a4w4 plans — identical integer
+    matmuls — so swapping mid-stream must not change a single token
+    versus the never-swapped engine."""
+    prompt = [5, 6, 7, 8]
+    want = _engine(quant="dsp_tuned").generate([prompt], max_new=8)[0]
+
+    eng = _engine(governor=GovernorConfig(hold_steps=10_000))
+    rid = eng.submit(prompt, max_new=8)
+    fi.run_steps(eng, 3)
+    pre_swap = _tokens(eng, rid)
+    assert pre_swap == want[:len(pre_swap)]  # prefix matches before swap
+    eng.governor.active = 1  # pin: hold_steps keeps the governor quiet
+    eng.set_tier(1)
+    fi.drain(eng)
+    assert _tokens(eng, rid) == want
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("make", [_engine, _cengine], ids=["slot", "cont"])
+def test_post_swap_admission_matches_target_tier_engine(make):
+    """A request admitted *after* the swap runs entirely on the narrow
+    tier — its stream must match an engine built directly on that tier
+    (narrow = uniform a4w4 exact plans = plan_bits (4,4), budget 0)."""
+    prompt = [9, 10, 11]
+    target = make(quant="dsp_tuned", plan_bits=(4, 4), error_budget=0.0)
+    want = target.generate([prompt], max_new=8)[0]
+
+    eng = make(quant="dsp_tuned", plan_bits=(8, 8),
+               governor=GovernorConfig(hold_steps=10_000,
+                                       narrow_bits=(4, 4)))
+    eng.governor.active = 1
+    eng.set_tier(1)
+    rid = eng.submit(prompt, max_new=8)
+    fi.drain(eng)
+    assert _tokens(eng, rid) == want

@@ -1,0 +1,198 @@
+"""Persisted plan database: key fingerprinting, loss-free round-trips,
+schema invalidation, crash consistency through the Checkpointer's atomic
+publish, and the headline warm-build contract — an engine built against a
+warm DB runs ZERO measurement (the ``tuning.mixed.PROBES`` counter stays
+at zero) and serves tokens identical to the cold build that populated
+it."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import pytest
+
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.serving import ContinuousEngine, Engine, ServeConfig
+from repro.tuning import (
+    PROBES,
+    PlanDB,
+    SCHEMA_VERSION,
+    plan_key,
+    report_from_json,
+    report_to_json,
+    select_plan,
+)
+from repro.tuning.plans import spec_from_json, spec_to_json
+
+KEY = jax.random.PRNGKey(0)
+CFG = dataclasses.replace(get_config("qwen1.5-110b", smoke=True),
+                          dtype="float32")
+PARAMS = T.init_params(KEY, CFG)
+
+
+def _scfg(**kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 4)
+    return ServeConfig(**kw)
+
+
+# ---- serialization -------------------------------------------------------
+
+
+def test_report_json_roundtrip_is_lossless():
+    for budget, exact_first in ((0.0, True), (0.5, False)):
+        report = select_plan(4, 4, error_budget=budget,
+                             exact_first=exact_first)
+        blob = json.dumps(report_to_json(report))  # genuinely JSON-able
+        assert report_from_json(json.loads(blob)) == report
+
+
+def test_spec_json_rejects_unknown_fields():
+    d = spec_to_json(select_plan(4, 4).spec)
+    assert spec_from_json(dict(d)) == select_plan(4, 4).spec
+    d["mystery_knob"] = 7
+    with pytest.raises(ValueError, match="mystery_knob"):
+        spec_from_json(d)
+
+
+# ---- keying --------------------------------------------------------------
+
+
+def test_plan_key_stable_and_search_sensitive():
+    scfg = _scfg(quant_mode="dsp_tuned")
+    k = plan_key(CFG, scfg, PARAMS)
+    assert k == plan_key(CFG, scfg, PARAMS)  # deterministic
+    # knobs the search reads change the key...
+    assert k != plan_key(CFG, dataclasses.replace(scfg, plan_bits=(8, 8)),
+                         PARAMS)
+    assert k != plan_key(CFG, dataclasses.replace(scfg, error_budget=0.9),
+                         PARAMS)
+    assert k != plan_key(CFG, dataclasses.replace(scfg,
+                                                  quant_mode="dsp_mixed"),
+                         PARAMS)
+    # ...a changed model config too...
+    other_cfg = dataclasses.replace(CFG, name="other")
+    assert k != plan_key(other_cfg, scfg, PARAMS)
+    # ...but serving-only knobs (slots, sampling, pages) never do
+    assert k == plan_key(CFG, dataclasses.replace(scfg, n_slots=7), PARAMS)
+    assert k == plan_key(CFG, dataclasses.replace(scfg, temperature=0.8),
+                         PARAMS)
+
+
+# ---- the database --------------------------------------------------------
+
+
+def test_plandb_put_get_persists_across_instances(tmp_path):
+    db = PlanDB(str(tmp_path / "db"))
+    assert db.get("k") is None and db.n_misses == 1
+    entry = {"kind": "tuned", "plans": {"x": report_to_json(select_plan())}}
+    db.put("k", entry)
+    got = db.get("k")
+    assert got == entry and db.n_hits == 1
+    # a fresh instance (a restarted engine) reads the same entry
+    db2 = PlanDB(str(tmp_path / "db"))
+    assert db2.get("k") == entry
+    assert len(db2) == 1 and db2.keys() == ["k"]
+
+
+def test_plandb_invalidate(tmp_path):
+    db = PlanDB(str(tmp_path / "db"))
+    db.put("a", {"kind": "tuned"})
+    db.put("b", {"kind": "tuned"})
+    assert db.invalidate("missing") == 0
+    assert db.invalidate("a") == 1
+    assert db.keys() == ["b"]
+    assert db.invalidate() == 1 and len(db) == 0
+    # the drop persists like any put
+    assert PlanDB(str(tmp_path / "db")).get("b") is None
+
+
+def test_schema_mismatch_reads_as_empty(tmp_path):
+    db = PlanDB(str(tmp_path / "db"))
+    db.put("k", {"kind": "tuned"})
+    # a future writer bumps the schema: this reader must not deserialize
+    db._ckpt.save(99, {}, extra={"schema": SCHEMA_VERSION + 1,
+                                 "entries": {"k": {"kind": "garbled"}}})
+    assert db.get("k") is None
+    assert db.n_stale == 1
+    # ...and a put from this reader rebuilds a valid envelope on top
+    db.put("k", {"kind": "tuned"})
+    assert db.get("k") == {"kind": "tuned"}
+
+
+def test_torn_write_is_invisible(tmp_path):
+    """A writer killed mid-put leaves only a ``.tmp`` directory — the
+    Checkpointer's ``all_steps`` never offers it, so readers keep seeing
+    the previous complete database."""
+    db = PlanDB(str(tmp_path / "db"))
+    db.put("k", {"kind": "tuned"})
+    step = db._ckpt.latest_step()
+    torn = os.path.join(db.directory, f"step_{step + 1:08d}.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "extra.json"), "w") as f:
+        f.write("{\"schema\": 1, \"entries\"")  # half-written JSON
+    assert db._ckpt.latest_step() == step
+    assert db.get("k") == {"kind": "tuned"}
+    # the next put publishes past the torn dir without tripping on it
+    db.put("k2", {"kind": "tuned"})
+    assert sorted(db.keys()) == ["k", "k2"]
+
+
+def test_keep_gc_never_drops_live_entries(tmp_path):
+    """Whole-DB-per-step: every put rewrites ALL entries, so however many
+    old steps the keep-GC deletes, the newest step still carries every
+    key any live engine was built from."""
+    db = PlanDB(str(tmp_path / "db"), keep=2)
+    for i in range(6):
+        db.put(f"k{i}", {"kind": "tuned", "i": i})
+    assert len(db._ckpt.all_steps()) == 2  # GC ran
+    assert db.keys() == sorted(f"k{i}" for i in range(6))
+    for i in range(6):
+        assert db.get(f"k{i}") == {"kind": "tuned", "i": i}
+
+
+# ---- warm-build contract -------------------------------------------------
+
+
+def test_dsp_tuned_warm_build_serves_identical_tokens(tmp_path):
+    dbdir = str(tmp_path / "db")
+    prompts = [[2, 3, 4, 5], [7, 8, 9]]
+
+    cold = Engine(CFG, PARAMS, _scfg(quant_mode="dsp_tuned", plan_db=dbdir))
+    assert cold.plan_db_stats["misses"] == 1
+    assert cold.plan_db_stats["hits"] == 0
+    cold_out = cold.generate(prompts, max_new=6)
+
+    warm = Engine(CFG, PARAMS, _scfg(quant_mode="dsp_tuned", plan_db=dbdir))
+    assert warm.plan_db_stats["hits"] == 1
+    assert warm.plan_db_stats["misses"] == 0
+    assert warm.generate(prompts, max_new=6) == cold_out
+    # the warm table IS the cold table, measured floats included
+    assert warm.plan_table == cold.plan_table
+
+
+@pytest.mark.slow
+def test_dsp_mixed_warm_build_runs_zero_probes(tmp_path):
+    """The expensive path: a cold dsp_mixed build runs the sensitivity
+    probe forwards; the warm build against the same DB runs NONE (the
+    module-level probe counter stays at zero) and exposes the identical
+    allocation and token stream."""
+    dbdir = str(tmp_path / "db")
+    prompts = [[2, 3, 4, 5], [7, 8, 9]]
+    scfg = dict(quant_mode="dsp_mixed", plan_bits="auto", plan_db=dbdir,
+                calib_tokens=8, width_candidates=((4, 4), (8, 8)))
+
+    PROBES.reset()
+    cold = ContinuousEngine(CFG, PARAMS, _scfg(page_size=8, **scfg))
+    assert PROBES.count > 0  # the cold build really measured
+    cold_out = cold.generate(prompts, max_new=6)
+
+    PROBES.reset()
+    warm = ContinuousEngine(CFG, PARAMS, _scfg(page_size=8, **scfg))
+    assert PROBES.count == 0, "warm build re-ran sensitivity probes"
+    assert warm.plan_db_stats["hits"] == 1
+    assert warm.mixed_allocation == cold.mixed_allocation
+    assert warm.generate(prompts, max_new=6) == cold_out

@@ -17,6 +17,7 @@ from repro.serving import (
     ServeConfig,
 )
 from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import Scheduler
 
 KEY = jax.random.PRNGKey(0)
 CFG = dataclasses.replace(get_config("qwen1.5-110b", smoke=True), dtype="float32")
@@ -505,6 +506,90 @@ def test_preemption_resumes_bit_identical():
     assert got == calm
     tight.alloc.check()
     assert tight.alloc.n_free == tight.alloc.n_pages
+
+
+# ---- scheduler edge cases (pure unit tests, injected clock) --------------
+
+
+def _ticking_scheduler():
+    """Scheduler on a deterministic clock: each read advances 1.0s."""
+    counter = {"t": 0.0}
+
+    def clock():
+        counter["t"] += 1.0
+        return counter["t"]
+
+    return Scheduler(clock=clock), counter
+
+
+def test_scheduler_finish_from_queue_never_touches_running():
+    """Finishing a never-admitted (still-queued) request dequeues it
+    cleanly; n_running belongs to admitted requests only."""
+    sched, _ = _ticking_scheduler()
+    rids = [sched.submit([2, 3], max_new=2) for _ in range(3)]
+    sched.admit(2)
+    assert sched.n_running == 2 and sched.n_queued == 1
+    sched.finish(rids[2], "eos")  # queued rid: dequeue, don't decrement
+    assert sched.n_running == 2 and sched.n_queued == 0
+    assert sched.n_finished == 1
+    with pytest.raises(RuntimeError, match="finished twice"):
+        sched.finish(rids[2], "eos")
+    # the two admitted requests finish through the normal path
+    for rid in rids[:2]:
+        sched.finish(rid, "length")
+    assert sched.n_running == 0 and sched.n_finished == 3
+
+
+def test_scheduler_cancel_queued_vs_running():
+    sched, _ = _ticking_scheduler()
+    r0 = sched.submit([2, 3], max_new=2)
+    r1 = sched.submit([4, 5], max_new=2)
+    sched.admit(1)  # r0 running, r1 queued
+    assert sched.cancel(r1) is True  # queued: no device state to release
+    assert sched.cancel(r0) is False  # running: engine must free the lane
+    assert sched.n_running == 0 and sched.n_queued == 0
+    assert sched.n_cancelled == 2 and sched.n_shed == 0
+    assert sched.n_finished == 0  # cancellations are not completions
+    with pytest.raises(RuntimeError, match="cannot cancel"):
+        sched.cancel(r0)
+    with pytest.raises(ValueError, match="not in"):
+        sched.cancel(sched.submit([6], max_new=1), reason="boredom")
+
+
+def test_scheduler_deadline_validation_and_expiry_scan():
+    sched, counter = _ticking_scheduler()
+    with pytest.raises(ValueError, match="deadline_s"):
+        sched.submit([2], max_new=1, deadline_s=0.0)
+    tight = sched.submit([2, 3], max_new=2, deadline_s=10.0)
+    loose = sched.submit([4, 5], max_new=2, deadline_s=500.0)
+    none = sched.submit([6, 7], max_new=2)
+    assert none not in sched._deadlined
+    assert sched.expired() == []  # nothing past deadline yet
+    counter["t"] += 100.0
+    assert sched.expired() == [tight]  # only the tight one, loose survives
+    sched.cancel(tight, reason="deadline")
+    assert sched.expired() == []  # shed rids leave the deadline index
+    assert sched.n_shed == 1 == sched.n_cancelled
+
+
+def test_scheduler_stats_exclude_cancelled_from_latency():
+    """A shed request has no honest latency — stats() must keep cancelled
+    requests out of every percentile while still counting them."""
+    sched, _ = _ticking_scheduler()
+    done_rid = sched.submit([2, 3], max_new=2)
+    shed_rid = sched.submit([4, 5], max_new=2, deadline_s=1e-3)
+    sched.admit(2)
+    req = sched.requests[done_rid]
+    sched.note_prefill_done([req])
+    sched.requests[done_rid].tokens = [7, 8]
+    sched.finish(done_rid, "length")
+    sched.cancel(shed_rid, reason="deadline")
+    st = sched.stats()
+    assert st["finished"] == 1 and st["cancelled"] == 1 and st["shed"] == 1
+    completed_latency = req.finished_at - req.submitted_at
+    assert st["p99_latency_s"] == st["p50_latency_s"] == completed_latency
+    assert st["mean_latency_s"] == completed_latency
+    assert st["p99_ttft_s"] == req.prefill_done_at - req.submitted_at
 
 
 def test_shared_prefix_cow_matches_unshared():

@@ -6,6 +6,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import DataConfig, SyntheticStream
@@ -93,6 +94,70 @@ def test_checkpoint_async(tmp_path):
     ck.save_async(7, {"w": jnp.ones(4)})
     ck.wait()
     assert ck.latest_step() == 7
+
+
+def test_torn_async_save_invisible_then_recoverable(tmp_path, monkeypatch):
+    """A background writer that dies mid-write (disk full before the atomic
+    rename) must re-raise at wait(), leave every read path pointing at the
+    last COMPLETE step, and not poison the next save of the same step."""
+    from repro.checkpoint import checkpointer as C
+
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(6.0)}
+    ck.save(1, tree, extra={"tag": "live"})
+
+    real_savez, torn = np.savez, {"fail": True}
+
+    def flaky_savez(*args, **kwargs):
+        if torn["fail"]:
+            raise OSError("No space left on device")
+        return real_savez(*args, **kwargs)
+
+    monkeypatch.setattr(C.np, "savez", flaky_savez)
+    ck.save_async(2, tree)
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        ck.wait()
+    ck.wait()  # the error is surfaced once, not re-raised forever
+
+    # the torn step is invisible to every read path...
+    assert any(f.endswith(".tmp") for f in os.listdir(tmp_path))
+    assert ck.all_steps() == [1]
+    assert ck.latest_step() == 1
+    restored, extra = ck.restore(1, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(6.0))
+    assert extra["tag"] == "live"
+
+    # ...and a retry of the SAME step clears the stale tmp and publishes
+    torn["fail"] = False
+    ck.save(2, tree)
+    assert ck.all_steps() == [1, 2]
+    assert not any(f.endswith(".tmp") for f in os.listdir(tmp_path))
+
+
+def test_torn_sync_save_keeps_previous_step_restorable(tmp_path, monkeypatch):
+    """Synchronous-path variant: the exception propagates to the caller and
+    the previous checkpoint restores bit-exact afterwards."""
+    from repro.checkpoint import checkpointer as C
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, {"w": jnp.full(4, 2.0)})
+
+    def boom(*args, **kwargs):
+        raise OSError("No space left on device")
+
+    monkeypatch.setattr(C.np, "savez", boom)
+    with pytest.raises(OSError):
+        ck.save(4, {"w": jnp.full(4, 9.0)})
+    monkeypatch.undo()
+
+    assert ck.latest_step() == 3
+    restored, _ = ck.restore(3, {"w": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.full(4, 2.0))
+
+
+def test_checkpointer_keep_validation(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        Checkpointer(str(tmp_path), keep=0)
 
 
 def test_data_pipeline_determinism_and_hosts():
