@@ -1,3 +1,10 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core packing math and packed-parameter plumbing.
+
+The paper's arithmetic lives here framework-side: ``packing`` (the
+pair-packing/extraction algebra), ``quantizers``, ``packed_linear``
+(the ``apply_linear`` dispatch over float / packed / tuned / TP-wrapped
+leaves), ``packed_params`` (serving-time weight quantization, fusion
+and per-expert splitting) and ``addpack`` (accumulator packing, §VII).
+Kernel-shaped entry points live in ``repro.kernels``; plan selection in
+``repro.tuning``.
+"""

@@ -73,6 +73,20 @@ def apply_linear(params, x: jax.Array, spec: LinearSpec = LinearSpec()) -> jax.A
 
     w = params["w"]
     mode = spec.mode
+    if type(w).__name__ == "TpLinear":
+        # tensor-parallel serving: the leaf was mesh-partitioned at engine
+        # build (runtime.tp_packed.shard_params_tp); the wrapper carries
+        # the partition kind and runs the shard_map'd arithmetic
+        from ..runtime.tp_packed import TpLinear, apply_tp_linear
+
+        if isinstance(w, TpLinear):
+            x2, lead = _flatten_batch(x.astype(jnp.float32))
+            y = apply_tp_linear(w, x2, spec)
+            n_out = y.shape[-1]
+            y = y.reshape(*lead, n_out).astype(x.dtype)
+            if "b" in params:
+                y = y + params["b"].astype(y.dtype)
+            return y
     if is_dsp_tuned_leaf(w):
         if w.payload.ndim == 2:
             # serving decode path: this layer's tuned plan rides on the leaf

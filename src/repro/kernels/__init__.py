@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels and their bit-accurate jnp oracles.
+
+``ref`` holds the pure-jnp reference implementations (``PackedDotSpec``,
+pack/compute split, widening); ``packed_matmul`` / ``int4_matmul`` /
+``addpack_acc`` are the Pallas entries, each pinned bit-identical to the
+oracle by ``tests/test_kernel_parity_matrix.py``; ``ops`` is the
+dispatch layer the serving engines call.
+"""

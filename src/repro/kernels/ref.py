@@ -42,6 +42,7 @@ __all__ = [
     "INT4_NAIVE",
     "INT4_MR_OVERPACKED",
     "INT2_EXACT",
+    "widen_for_shards",
     "extract_accumulated_field",
     "contamination_mask",
     "contamination_term",
@@ -304,6 +305,43 @@ INT4_MR_OVERPACKED = PackedDotSpec(
     bits_a=4, bits_w=4, p=10, n_pairs=16, correction="mr+full", mr_bits=3
 )
 INT2_EXACT = PackedDotSpec(bits_a=2, bits_w=2, p=10, n_pairs=32, correction="full")
+
+
+def widen_for_shards(spec: PackedDotSpec, n_shards: int) -> PackedDotSpec:
+    """The spec a ``n_shards``-way contraction-axis sharding must satisfy.
+
+    Tensor-parallel row sharding reduces packed partial sums across devices
+    IN WORD SPACE (psum of int32 packed words BEFORE field extraction — the
+    same shifted-summation algebra as column recombination, stretched across
+    the mesh).  The post-reduce word therefore accumulates
+    ``n_shards * n_pairs`` products per extraction group, and every legality
+    budget of :class:`PackedDotSpec` — the int32 accumulator ceiling, the
+    middle-field width, extraction aliasing — must hold at THAT effective
+    accumulation length, not the per-device one.
+
+    Constructing the widened spec IS the legality check: an illegal sharding
+    raises the constructor's certificate-clause-citing ``ValueError``
+    (CLAUSE_INT32_ACCUMULATOR / CLAUSE_MIDDLE_FIELD /
+    CLAUSE_EXTRACTION_ALIAS), exactly like an illegal ``n_pairs`` would.
+    Extraction itself reads only ``p`` / ``extract_width`` / the correction
+    — never ``n_pairs`` — so extracting the psummed word with the original
+    spec is the same operation as extracting with the widened one; widening
+    matters only for build-time legality and certification
+    (see DESIGN.md §4).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards} must be >= 1")
+    if n_shards == 1:
+        return spec
+    try:
+        return dataclasses.replace(spec, n_pairs=n_shards * spec.n_pairs)
+    except ValueError as e:
+        raise ValueError(
+            f"{spec.name()} cannot be row-sharded {n_shards} ways: the "
+            f"cross-device word-space reduction accumulates "
+            f"{n_shards}x{spec.n_pairs} products per extraction group and "
+            f"the widened spec is illegal — {e}"
+        ) from e
 
 
 def _sext(v: jax.Array, width: int) -> jax.Array:

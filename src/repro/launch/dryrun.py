@@ -1,8 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-# ^ MUST precede every other import (jax locks device count on first init).
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this produces the compiled SPMD executable on 512 (or 256)
@@ -19,6 +14,12 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
       --shape train_4k [--multi-pod] [--all] [--out artifacts/dryrun]
 """
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
 
 import argparse
 import dataclasses
@@ -389,6 +390,69 @@ def run_cell(
     return record
 
 
+PACKED_TP_ARCHS = ("qwen1.5-110b", "dbrx-132b", "jamba-v0.1-52b")
+
+
+def packed_tp_projection(arch: str, tp: int, smoke: bool = False) -> dict:
+    """Per-shard packed-serving memory + interconnect projection, from
+    shapes alone.
+
+    Projects what ``runtime.tp_packed.shard_params_tp`` would place on
+    each of ``tp`` devices — prepacked int32 weight words plus per-column
+    scales — and what one decode step moves over the interconnect, without
+    constructing a single weight: the tree is ``jax.eval_shape`` abstract
+    and every number below is arithmetic on leaf shapes.
+
+    Accounting (per (…, K, N) packable leaf, ``lead`` = stacked dims):
+
+    * words HBM: ``lead · K/2 · N · 4`` bytes (two int4 pairs per int32
+      word, the prepacked operand layout) — divided by ``tp`` along N for
+      column-parallel leaves and along K for row-parallel ones, when the
+      axis divides; otherwise the leaf replicates.
+    * scales: ``lead · N · 4`` bytes, replicated (per-output-channel).
+    * decode interconnect, batch row ``m=1``: column-parallel leaves
+      all-gather their output row (ring: ``(tp-1)/tp · N·4`` bytes);
+      row-parallel leaves all-reduce the accumulator row (ring:
+      ``2·(tp-1)/tp · N·4`` bytes).  Replicated leaves move nothing.
+    """
+    from ..core.packed_params import iter_packable_weights
+    from ..runtime.sharding import linear_partition
+
+    cfg = get_config(arch, smoke=smoke)
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+    )
+    rows = {}
+    tot_shard = tot_repl = tot_net = 0.0
+    for path, leaf in iter_packable_weights(params_shape):
+        *lead, k_dim, n_dim = leaf.shape
+        lead_n = math.prod(lead) if lead else 1
+        words = lead_n * (k_dim // 2) * n_dim * 4.0
+        scales = lead_n * n_dim * 4.0
+        kind = linear_partition(path)
+        if kind == "col" and n_dim % tp == 0:
+            shard, net = words / tp, (tp - 1) / tp * n_dim * 4.0
+        elif kind == "row" and k_dim % tp == 0:
+            shard, net = words / tp, 2 * (tp - 1) / tp * n_dim * 4.0
+        else:
+            kind, shard, net = "replicate", words, 0.0
+        rows[path] = {
+            "shape": list(leaf.shape), "partition": kind,
+            "words_bytes_per_shard": shard, "scale_bytes": scales,
+            "decode_net_bytes": lead_n * net,
+        }
+        tot_shard += shard
+        tot_repl += scales
+        tot_net += lead_n * net
+    return {
+        "arch": arch, "tp": tp,
+        "packed_words_bytes_per_shard": tot_shard,
+        "replicated_scale_bytes": tot_repl,
+        "decode_step_interconnect_bytes": tot_net,
+        "layers": rows,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -399,7 +463,33 @@ def main() -> None:
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--packed-tp", type=int, default=None, metavar="N",
+                    help="project per-shard packed-weight HBM and per-"
+                         "decode-step interconnect bytes for an N-way "
+                         "tensor-parallel packed engine (shapes only, no "
+                         "weights; default archs: "
+                         + ", ".join(PACKED_TP_ARCHS) + ")")
     args = ap.parse_args()
+
+    if args.packed_tp is not None:
+        archs = [args.arch] if args.arch else list(PACKED_TP_ARCHS)
+        for arch in archs:
+            rec = packed_tp_projection(arch, args.packed_tp, args.smoke)
+            gib = 1 << 30
+            print(f"[dryrun] {arch} packed tp={args.packed_tp}: "
+                  f"{rec['packed_words_bytes_per_shard'] / gib:.2f} GiB "
+                  f"packed words/shard + "
+                  f"{rec['replicated_scale_bytes'] / gib:.3f} GiB "
+                  f"replicated scales, "
+                  f"{rec['decode_step_interconnect_bytes'] / 1e6:.2f} MB "
+                  f"interconnect per decode row", flush=True)
+            os.makedirs(args.out, exist_ok=True)
+            path = os.path.join(
+                args.out, f"{arch}__packed_tp{args.packed_tp}.json"
+            )
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        return
 
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     if args.all:

@@ -7,8 +7,9 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_serving_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,3 +24,26 @@ def make_local_mesh(data: int | None = None, model: int = 1):
     n = len(jax.devices())
     data = data if data is not None else max(1, n // model)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(tp: int):
+    """A (1, tp) ("data", "model") mesh over the FIRST ``tp`` devices.
+
+    Unlike :func:`make_local_mesh` this takes a device subset, so a tp=2
+    engine on an 8-device host (``--xla_force_host_platform_device_count``)
+    uses exactly 2 devices — the shape tested by the sharded-serving bit-
+    identity suite.  Data parallelism is replica-level (``serving.replica``
+    runs one engine per replica), so the "data" axis stays 1 here.
+    """
+    devs = jax.devices()
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp > len(devs):
+        raise ValueError(
+            f"tp={tp} exceeds the {len(devs)} visible devices "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N for "
+            "host-local meshes)"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(devs[:tp]).reshape(1, tp), ("data", "model"))

@@ -17,7 +17,13 @@ import numpy as np
 
 from ..models import transformer as T
 from ..models.registry import get_config
-from ..serving import ContinuousEngine, Engine, SamplingParams, ServeConfig
+from ..serving import (
+    ContinuousEngine,
+    Engine,
+    ReplicaFront,
+    SamplingParams,
+    ServeConfig,
+)
 
 
 def main() -> None:
@@ -109,6 +115,16 @@ def main() -> None:
                     help="per-request wall-clock deadline from submission; "
                          "requests past it are shed (finish_reason "
                          "'deadline') instead of occupying lanes")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard packed weights over "
+                         "the first --tp devices (runtime.tp_packed; decode "
+                         "stays bit-identical to --tp 1). CPU smoke: set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind a "
+                         "join-shortest-queue front (serving.replica); each "
+                         "replica is a full engine — combine with --tp for "
+                         "2D scaling")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -118,7 +134,7 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
-    engine = engine_cls(cfg, params, ServeConfig(
+    serve_cfg = ServeConfig(
         n_slots=args.slots, max_len=args.max_len,
         prefill_chunk=args.prefill_chunk, quant_mode=args.quant,
         seed=args.seed, error_budget=args.error_budget,
@@ -134,7 +150,34 @@ def main() -> None:
         plan_db=args.plan_db,
         governor=args.governor,
         deadline_ms=args.deadline_ms,
-    ))
+        tp=args.tp,
+    )
+    if args.replicas > 1:
+        if args.stream:
+            raise SystemExit("--replicas does not support --stream "
+                             "(per-replica token streams interleave)")
+        front = ReplicaFront(cfg, params, serve_cfg,
+                             n_replicas=args.replicas,
+                             engine_cls=engine_cls)
+        rng = np.random.default_rng(0)
+        prompts = [
+            list(rng.integers(2, cfg.vocab_size, size=rng.integers(4, 10)))
+            for _ in range(args.requests)
+        ]
+        t0 = time.time()
+        outputs = front.generate(prompts, max_new=args.max_new)
+        dt = time.time() - t0
+        total_tokens = sum(len(v) for v in outputs.values())
+        for grid, toks in sorted(outputs.items()):
+            print(f"[serve] request {grid} (replica "
+                  f"{front.replica_of(grid)}): {len(toks)} tokens "
+                  f"-> {toks[:8]}...")
+        stats = front.stats()
+        print(f"[serve] {total_tokens} tokens in {dt:.2f}s across "
+              f"{stats['n_replicas']} replicas (tp={args.tp}, "
+              f"quant={args.quant}, finished {stats['finished']})")
+        return
+    engine = engine_cls(cfg, params, serve_cfg)
     if engine.mixed_allocation is not None:
         alloc = engine.mixed_allocation
         print(f"[serve] mixed-precision allocation (budget "

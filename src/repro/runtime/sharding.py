@@ -21,13 +21,48 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
+    "COL_TOKENS",
+    "ROW_TOKENS",
     "fsdp_axes",
+    "linear_partition",
     "param_pspec",
     "param_shardings",
     "batch_pspec",
     "cache_pspec",
     "logits_pspec",
 ]
+
+# Megatron linear-partition conventions, shared by the training-time
+# PartitionSpec policy (param_pspec) and the serving-time tensor-parallel
+# wrapper (runtime.tp_packed).  Column-parallel linears shard their OUTPUT
+# dim over "model" (no cross-device reduction: each shard owns whole
+# output channels); row-parallel linears shard their INPUT (contraction)
+# dim and need one reduction per call.  Fused projection names (wqkv,
+# upgate — core.packed_params.fuse_projection_weights) are column-parallel
+# like their unfused parts: fusion concatenates along the output dim.
+COL_TOKENS = frozenset({
+    "wq", "wk", "wv", "wqkv", "up", "gate", "upgate", "in_proj", "wz",
+    "wi", "wf", "wo_gate", "lm_head", "x_proj", "dt_proj", "patch_proj",
+})
+ROW_TOKENS = frozenset({"wo", "down", "out_proj"})
+
+
+def linear_partition(path: str) -> str | None:
+    """Megatron partition kind for a linear weight's tree path.
+
+    Returns ``"col"`` (output dim on "model"), ``"row"`` (contraction dim
+    on "model", reduction after the shard-local matmul) or ``None``
+    (replicate — norms, embeddings, router weights and anything the
+    conventions don't name).  Tokens are matched exactly against the
+    "/"-split path, never by substring ('groups' must not match 'up' —
+    §Perf iteration 7).
+    """
+    tokens = set(path.lower().split("/"))
+    if tokens & COL_TOKENS:
+        return "col"
+    if tokens & ROW_TOKENS:
+        return "row"
+    return None
 
 
 def fsdp_axes(mesh: Mesh):
@@ -65,17 +100,12 @@ def param_pspec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
     lead = ndim - 2  # stacked axes (groups, experts, slots...)
     d_in, d_out = shape[-2], shape[-1]
 
-    # exact path-token matching (substring matching once made 'groups'
-    # match 'up' and col-sharded every stacked weight — §Perf iteration 7)
-    tokens = set(name.split("/"))
-    col = bool(
-        tokens
-        & {
-            "wq", "wk", "wv", "up", "gate", "in_proj", "wz", "wi", "wf",
-            "wo_gate", "lm_head", "x_proj", "dt_proj", "patch_proj",
-        }
-    )
-    row = bool(tokens & {"wo", "down", "out_proj"})
+    # exact path-token matching via the shared Megatron convention tables
+    # (substring matching once made 'groups' match 'up' and col-sharded
+    # every stacked weight — §Perf iteration 7)
+    kind = linear_partition(name)
+    col = kind == "col"
+    row = kind == "row"
     if "embed" in name:
         # (vocab, d): vocab on model (TP vocab-parallel), d on fsdp
         spec = [None] * ndim

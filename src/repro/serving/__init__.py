@@ -40,6 +40,7 @@ pages).
 from .engine import ContinuousEngine, Engine, ServeConfig
 from .governor import Governor, GovernorConfig, Tier, build_tiers
 from .paged_cache import OutOfPages, PageAllocator
+from .replica import ReplicaFront
 from .sampling import GREEDY, SamplingParams
 from .scheduler import CANCEL_REASONS, Request, Scheduler, percentile
 
@@ -53,6 +54,7 @@ __all__ = [
     "build_tiers",
     "PageAllocator",
     "OutOfPages",
+    "ReplicaFront",
     "SamplingParams",
     "GREEDY",
     "Request",

@@ -77,6 +77,20 @@ __all__ = ["ServeConfig", "Engine", "ContinuousEngine"]
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Everything the engines decide at build time, in one frozen record.
+
+    The knobs split into capacity (``n_slots`` / ``max_len`` /
+    ``prefill_chunk`` / the paged-cache group), arithmetic
+    (``quant_mode`` and the plan-search group — these select which packed
+    representation ``core.packed_params.quantize_for_serving`` builds),
+    placement (``tp`` — tensor parallelism over the serving mesh,
+    DESIGN.md §4) and policy (deadlines, the governor, default sampling).
+    ``__post_init__`` rejects contradictory combinations at construction
+    so an engine never has to re-validate; the one mutation it performs
+    is promoting ``plan_bits="auto"`` + dsp_tuned to ``dsp_mixed``
+    (per-layer width allocation IS the mixed mode).
+    """
+
     n_slots: int = 8
     max_len: int = 512
     prefill_chunk: int = 16
@@ -140,6 +154,14 @@ class ServeConfig:
     # degraded weight tiers and swap under load.  False = off; True =
     # default GovernorConfig; or a GovernorConfig instance.
     governor: Any = False
+    # tensor-parallel degree: shard packed weights over the first ``tp``
+    # devices' "model" mesh axis (launch.mesh.make_serving_mesh) and run
+    # the shard_map'd packed arithmetic (runtime.tp_packed) — decode is
+    # bit-identical to tp=1 by construction.  Plan searches and the plan-
+    # DB key are tp-aware: row-partitioned layers plan against the
+    # widened (post-psum) packed word.  Only the jnp reference paths are
+    # shard_map'd, so tp > 1 rejects use_kernel.
+    tp: int = 1
     # default sampling (submit can override per request)
     temperature: float = 0.0
     top_k: int = 0
@@ -192,6 +214,13 @@ class ServeConfig:
             raise ValueError(
                 "governor needs quant_mode dsp_tuned or dsp_mixed, got "
                 f"{self.quant_mode!r}"
+            )
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.tp > 1 and self.use_kernel:
+            raise ValueError(
+                "tp > 1 runs the shard_map'd jnp reference paths; "
+                "use_kernel=True is not supported under tensor parallelism"
             )
         if self.quant_mode == "dsp_mixed" and self.autotune_plans:
             # the width allocator selects plans by cost proxy only; a
@@ -297,6 +326,7 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
                     n_calib_tokens=serve_cfg.calib_tokens,
                     seed=serve_cfg.seed,
                     exact_first=not serve_cfg.use_kernel,
+                    shard_groups=serve_cfg.tp,
                 )
                 if db is not None:
                     from ..tuning.plandb import allocation_to_json
@@ -334,6 +364,9 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
                     # the f32-GEMM shortcut — rank those first (see
                     # rank_plans)
                     exact_first=not serve_cfg.use_kernel,
+                    # row-partitioned layers plan against the widened
+                    # (post-psum) packed word (see tuner.rank_plans)
+                    shard_groups=serve_cfg.tp,
                 )
                 if db is not None:
                     from ..tuning.plandb import report_to_json
@@ -358,10 +391,35 @@ def _prepare_serving_params(cfg: ModelConfig, params, serve_cfg: ServeConfig,
     return cfg, params, plan_table, resolved_mixed, float_params, db_stats
 
 
+def _shard_for_tp(params, serve_cfg: ServeConfig):
+    """Mesh-partition a quantized serving tree when ``serve_cfg.tp > 1``.
+
+    Returns ``(mesh, params)`` — ``(None, params)`` untouched at tp=1.
+    The wrap happens AFTER quantization (the packed operands are what
+    shards) and raises the certificate-clause-citing error for a row
+    sharding whose widened accumulation would overflow
+    (``runtime.tp_packed.shard_params_tp``)."""
+    if serve_cfg.tp <= 1:
+        return None, params
+    from ..launch.mesh import make_serving_mesh
+    from ..runtime.tp_packed import shard_params_tp
+
+    mesh = make_serving_mesh(serve_cfg.tp)
+    return mesh, shard_params_tp(
+        params, mesh, use_kernel=serve_cfg.use_kernel
+    )
+
+
 def _setup_governor(engine, cfg, float_params, serve_cfg) -> None:
     """Attach the load-adaptive precision governor (shared by both
     engines): build the tier ladder from the post-fusion float weights
-    and hold it prequantized, ready to swap at a step boundary."""
+    and hold it prequantized, ready to swap at a step boundary.
+
+    When a plan database is configured, the tier ladders' plan tables are
+    persisted under the engine's ``plan_key`` entry (``"tiers"`` record,
+    fingerprinted by the governor knobs that shape them) so a warm
+    governed build runs ZERO tier plan searches — the PR-9 follow-up.
+    Weight payloads are never persisted; quantization always re-runs."""
     engine.governor = None
     engine.tiers = None
     engine.active_tier = 0
@@ -372,13 +430,89 @@ def _setup_governor(engine, cfg, float_params, serve_cfg) -> None:
     gcfg = (serve_cfg.governor
             if isinstance(serve_cfg.governor, GovernorConfig)
             else GovernorConfig())
+    # consult the plan DB for persisted tier ladders; the fingerprint pins
+    # every knob the tier searches read, so a changed ladder shape misses
+    # instead of serving the wrong tiers
+    fingerprint = {
+        "narrow_bits": list(gcfg.narrow_bits),
+        "emergency_tier": gcfg.emergency_tier,
+        "emergency_max_mae": gcfg.emergency_max_mae,
+        "use_kernel": serve_cfg.use_kernel,
+    }
+    db = entry = tables = None
+    if serve_cfg.plan_db and engine.plan_db_stats:
+        from ..tuning.plandb import PlanDB, report_from_json
+
+        db = PlanDB(serve_cfg.plan_db)
+        entry = db.get(engine.plan_db_stats["key"])
+        stored = (entry or {}).get("tiers")
+        if stored and stored.get("fingerprint") == fingerprint:
+            tables = {
+                name: {p: report_from_json(r) for p, r in tbl.items()}
+                for name, tbl in stored["tables"].items()
+            }
     engine.tiers = build_tiers(
-        cfg, float_params, serve_cfg, engine.params, engine.plan_table, gcfg
+        cfg, float_params, serve_cfg, engine.params, engine.plan_table, gcfg,
+        tables=tables, shard_groups=serve_cfg.tp,
     )
+    if db is not None and tables is None:
+        # merge-write the fresh ladders next to the plan entry (never
+        # clobber the "kind"/"plans" record _prepare_serving_params wrote)
+        from ..tuning.plandb import report_to_json
+
+        payload = dict(entry or {})
+        payload["tiers"] = {
+            "fingerprint": fingerprint,
+            "tables": {
+                t.name: {p: report_to_json(r)
+                         for p, r in t.plan_table.items()}
+                for t in engine.tiers if t.name != "primary"
+            },
+        }
+        db.put(engine.plan_db_stats["key"], payload)
+    if getattr(engine, "mesh", None) is not None:
+        # non-primary tiers were quantized single-device: partition them
+        # onto the engine's mesh so a swap stays a pointer repoint
+        from ..runtime.tp_packed import shard_params_tp
+
+        engine.tiers = tuple(
+            t if t.params is engine.params else dataclasses.replace(
+                t, params=shard_params_tp(
+                    t.params, engine.mesh, use_kernel=serve_cfg.use_kernel
+                )
+            )
+            for t in engine.tiers
+        )
     engine.governor = Governor(gcfg, len(engine.tiers))
 
 
 class Engine:
+    """Fixed-slot batched serving engine (DESIGN.md §3).
+
+    Each admitted request owns one of ``n_slots`` lanes and that lane's
+    dense cache window for its whole lifetime; capacity is a slot count,
+    nothing is paged or preempted.  The request lifecycle:
+
+    * :meth:`submit` queues a prompt (returns its rid; ``admit=True``
+      pulls it into a free slot immediately);
+    * :meth:`step` advances the whole batch one phase — shed expired
+      deadlines, let the governor re-tier, admit into free slots, then
+      either prefill one chunk (while any slot is still prefilling) or
+      decode one token per active slot — and returns the rids finished
+      this step;
+    * finished tokens are read back via :attr:`outputs` /
+      :meth:`drain_stream`, counters via :meth:`stats`;
+    * :meth:`cancel` aborts a queued or running request with a
+      ``CANCEL_REASONS`` finish reason (its slot frees at the next step
+      boundary); :meth:`generate` wraps the loop for batch callers.
+
+    The quantization mode never changes this surface: every
+    ``quant_mode`` (and every tensor-parallel degree — the weights are
+    sharded at build by ``runtime.tp_packed``) serves bit-identical
+    tokens through the same step loop, which is what lets the
+    conformance suites drive all modes through one engine API.
+    """
+
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
                  mixed_allocation=None):
         """``mixed_allocation`` (a ``tuning.MixedAllocation``) skips the
@@ -390,6 +524,7 @@ class Engine:
          self.plan_db_stats) = _prepare_serving_params(
             cfg, params, serve_cfg, mixed_allocation
         )
+        self.mesh, params = _shard_for_tp(params, serve_cfg)
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
@@ -804,6 +939,9 @@ class Engine:
 
     @property
     def outputs(self) -> dict[int, list[int]]:
+        """rid -> tokens emitted so far, for every request that produced
+        any (finished or not); cancelled requests keep what they emitted
+        before the cancel."""
         return {r.rid: r.tokens for r in self.scheduler.requests.values()
                 if r.tokens}
 
@@ -817,6 +955,9 @@ class Engine:
         return np.asarray(logits[:, -1].astype(jnp.float32))
 
     def stats(self) -> dict:
+        """Scheduler counters (queue depth, per-phase tok/s, TTFT/latency
+        percentiles) plus, when attached, the governor's swap history and
+        active tier name and the plan database's hit/miss counts."""
         s = self.scheduler.stats()
         if self.governor is not None:
             s["governor"] = dict(
@@ -876,6 +1017,7 @@ class ContinuousEngine:
          self.plan_db_stats) = _prepare_serving_params(
             cfg, params, serve_cfg, mixed_allocation
         )
+        self.mesh, params = _shard_for_tp(params, serve_cfg)
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
@@ -1561,10 +1703,16 @@ class ContinuousEngine:
 
     @property
     def outputs(self) -> dict[int, list[int]]:
+        """rid -> tokens emitted so far (see ``Engine.outputs``);
+        preempted requests keep their pre-preemption tokens — resume
+        appends to the same list."""
         return {r.rid: r.tokens for r in self.scheduler.requests.values()
                 if r.tokens}
 
     def stats(self) -> dict:
+        """``Engine.stats`` plus the page-pool gauges (total/free pages,
+        page size, admission watermark) and the straggler detector's
+        rolling-median decode step time."""
         s = self.scheduler.stats()
         s.update(
             n_pages=self.alloc.n_pages,

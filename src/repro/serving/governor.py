@@ -45,7 +45,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
-__all__ = ["GovernorConfig", "Governor", "Tier", "build_tiers"]
+__all__ = ["GovernorConfig", "Governor", "Tier", "TIER_SEARCHES",
+           "build_tiers"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,71 +113,160 @@ class Tier:
         }
 
 
-def _table_mae(plan_table: dict) -> float:
+class _SearchCounter:
+    """Counts tier plan searches (the expensive part of a governed build).
+    The plan database's warm-build tests assert this stays at zero across
+    a cache-hit governed build — the proof that persisted tier ladders
+    skipped the search rather than re-running it and discarding the
+    result (mirrors ``tuning.mixed.PROBES``)."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def reset(self) -> int:
+        """Zero the counter, returning the value it held."""
+        prev, self.count = self.count, 0
+        return prev
+
+
+TIER_SEARCHES = _SearchCounter()
+
+
+def _served_spec(report, path: str, shard_groups: int):
+    """The spec whose arithmetic actually runs for this layer: the plan's
+    own spec, widened for tensor-parallel ROW layers (the cross-device
+    psum accumulates every shard's products in one word — see
+    ``runtime.tp_packed``)."""
+    from ..runtime.sharding import linear_partition
+
+    spec = report.spec
+    if shard_groups > 1 and linear_partition(path) == "row":
+        from ..kernels.ref import widen_for_shards
+
+        spec = widen_for_shards(spec, shard_groups)
+    return spec
+
+
+def _table_mae(plan_table: dict, shard_groups: int = 1) -> float:
+    from ..analysis.verify import certify_spec
+
     out = 0.0
-    for r in plan_table.values():
-        cert = r.certificate
+    for path, r in plan_table.items():
+        cert = certify_spec(_served_spec(r, path, shard_groups))
         out = max(out, 0.0 if cert.exact else float(cert.mae_per_extraction))
     return out
 
 
 def build_tiers(cfg, float_params, serve_cfg, primary_params,
-                primary_table: dict, gcfg: GovernorConfig) -> tuple[Tier, ...]:
+                primary_table: dict, gcfg: GovernorConfig,
+                tables: dict | None = None,
+                shard_groups: int = 1) -> tuple[Tier, ...]:
     """Build the degradation ladder from the post-fusion float weights.
 
     ``float_params`` must be the tree ``primary_params`` was quantized
     FROM (same fusion, same expert splitting applies inside
     ``quantize_for_serving``) so every tier's leaf paths line up and a
     swap changes arithmetic only, never tree shape semantics.
-    """
-    from ..core.packed_params import quantize_for_serving
-    from ..tuning import plan_linear_layers, rank_plans
 
+    ``tables`` short-circuits the tier plan searches with previously
+    persisted tables — ``{"narrow": {path: PlanReport}, "emergency":
+    {...}}`` as deserialized by ``_setup_governor`` from the plan
+    database's ``"tiers"`` record.  Quantization still runs (the weight
+    payloads are never persisted), but no search does:
+    ``TIER_SEARCHES.count`` stays flat.
+
+    ``shard_groups`` is the engine's tensor-parallel degree; tier plan
+    searches select shard-legal plans for row-partitioned layers the same
+    way the primary build does (``tuner.plan_linear_layers``)."""
+    from ..core.packed_params import quantize_for_serving
+    from ..tuning import plan_linear_layers
+
+    tables = tables or {}
     tiers = [Tier("primary", primary_params, dict(primary_table),
-                  _table_mae(primary_table))]
+                  _table_mae(primary_table, shard_groups))]
 
     a, w = gcfg.narrow_bits
-    narrow_table = plan_linear_layers(
-        float_params, a_bits=a, w_bits=w, error_budget=0.0,
-        exact_first=not serve_cfg.use_kernel,
-    )
+    narrow_table = tables.get("narrow")
+    if narrow_table is None:
+        TIER_SEARCHES.count += 1
+        narrow_table = plan_linear_layers(
+            float_params, a_bits=a, w_bits=w, error_budget=0.0,
+            exact_first=not serve_cfg.use_kernel,
+            shard_groups=shard_groups,
+        )
     narrow_params = quantize_for_serving(
         float_params, "dsp_tuned", plans=narrow_table,
         prepack=serve_cfg.prepack,
     )
     tiers.append(Tier("narrow", narrow_params, narrow_table,
-                      _table_mae(narrow_table)))
+                      _table_mae(narrow_table, shard_groups)))
 
     if gcfg.emergency_tier:
-        # the cheapest overpacked plan whose CERTIFIED MAE fits the
-        # ceiling: packing density beyond what exactness permits, quality
-        # bounded by the certificate (never by sampling luck)
-        ranked = rank_plans(a, w, error_budget=gcfg.emergency_max_mae,
-                            exact_first=False)
-        # gate on the CERTIFIED bound, not the sampled MAE rank_plans
-        # filtered on — a lucky zero-measured sample must not admit a plan
-        # whose certificate can't honour the ceiling
-        over = [
-            r for r in ranked
-            if not r.certificate.exact
-            and float(r.certificate.mae_per_extraction) <= gcfg.emergency_max_mae
-        ]
-        if not over:
-            raise ValueError(
-                f"no overpacked a{a}w{w} plan has certified MAE <= "
-                f"{gcfg.emergency_max_mae}; raise emergency_max_mae or "
-                "disable emergency_tier"
+        emergency_table = tables.get("emergency")
+        if emergency_table is None:
+            TIER_SEARCHES.count += 1
+            emergency_table = _emergency_table(
+                a, w, gcfg, narrow_table, shard_groups
             )
-        pick = min(over, key=lambda r: (r.cost_proxy,
-                                        r.mae_per_extraction))
-        emergency_table = {p: pick for p in narrow_table}
         emergency_params = quantize_for_serving(
             float_params, "dsp_tuned", plans=emergency_table,
             prepack=serve_cfg.prepack,
         )
         tiers.append(Tier("emergency", emergency_params, emergency_table,
-                          _table_mae(emergency_table)))
+                          _table_mae(emergency_table, shard_groups)))
     return tuple(tiers)
+
+
+def _emergency_table(a: int, w: int, gcfg: GovernorConfig,
+                     narrow_table: dict, shard_groups: int) -> dict:
+    """The cheapest overpacked plan whose CERTIFIED MAE fits the ceiling:
+    packing density beyond what exactness permits, quality bounded by the
+    certificate (never by sampling luck).  Under tensor parallelism the
+    pick is made per partition kind — a row layer's certificate is the
+    WIDENED spec's (that is the arithmetic the psum realizes)."""
+    from ..analysis.verify import certify_spec
+    from ..tuning import rank_plans
+
+    groups_needed = sorted(
+        {_served_spec_groups(p, shard_groups) for p in narrow_table} or {1}
+    )
+    picks = {}
+    for groups in groups_needed:
+        ranked = rank_plans(a, w, error_budget=gcfg.emergency_max_mae,
+                            exact_first=False, shard_groups=groups)
+        # gate on the CERTIFIED bound of the SERVED spec, not the sampled
+        # MAE rank_plans filtered on — a lucky zero-measured sample must
+        # not admit a plan whose certificate can't honour the ceiling
+        over = []
+        for r in ranked:
+            from ..kernels.ref import widen_for_shards
+
+            spec = widen_for_shards(r.spec, groups) if groups > 1 else r.spec
+            cert = certify_spec(spec)
+            if (not cert.exact
+                    and float(cert.mae_per_extraction)
+                    <= gcfg.emergency_max_mae):
+                over.append(r)
+        if not over:
+            sharded = (f" at shard_groups={groups}" if groups > 1 else "")
+            raise ValueError(
+                f"no overpacked a{a}w{w} plan has certified MAE <= "
+                f"{gcfg.emergency_max_mae}{sharded}; raise "
+                "emergency_max_mae or disable emergency_tier"
+            )
+        picks[groups] = min(over, key=lambda r: (r.cost_proxy,
+                                                 r.mae_per_extraction))
+    return {
+        p: picks[_served_spec_groups(p, shard_groups)] for p in narrow_table
+    }
+
+
+def _served_spec_groups(path: str, shard_groups: int) -> int:
+    from ..runtime.sharding import linear_partition
+
+    if shard_groups > 1 and linear_partition(path) == "row":
+        return shard_groups
+    return 1
 
 
 class Governor:

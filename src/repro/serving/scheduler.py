@@ -73,6 +73,13 @@ def _mean(xs: list[float]) -> float:
 
 @dataclasses.dataclass
 class Request:
+    """One request's whole life: prompt, budget, sampling params, the
+    tokens emitted so far, and the timestamps ``stats()`` turns into
+    TTFT/latency.  ``finish_reason`` is the state machine — ``None``
+    while queued/running, then exactly one of "eos" | "length" |
+    "cancelled" | "deadline" (the last two are ``CANCEL_REASONS``:
+    the scheduler gave up, the request did not complete)."""
+
     rid: int
     prompt: list[int]
     max_new: int
@@ -97,6 +104,14 @@ class Request:
 
 
 class Scheduler:
+    """FIFO admission queue + per-request bookkeeping + engine counters.
+
+    Pure host-side state — no device arrays, no knowledge of slots or
+    pages; the engines translate its decisions into lane/cache moves.
+    ``clock`` is injectable so the traffic bench and the deadline tests
+    can drive virtual time deterministically.
+    """
+
     def __init__(self, clock=time.monotonic):
         self._clock = clock
         self._queue: deque[int] = deque()

@@ -252,6 +252,23 @@ def _layer_costs(sens: LayerSensitivity, plans) -> dict[tuple[int, int], float]:
     }
 
 
+def _plan_table(widths, error_budget, exact_first, shard_groups):
+    """Per-width plan table at one shard count.  Widths with no shard-
+    legal plan are simply absent (a8w8 8-way exceeds the int32 budget) —
+    the allocator then never assigns them to a sharded row layer."""
+    table = {}
+    for b in widths:
+        try:
+            table[b] = select_plan(
+                b[0], b[1], error_budget=error_budget,
+                exact_first=exact_first, shard_groups=shard_groups,
+            )
+        except ValueError:
+            if shard_groups == 1:
+                raise
+    return table
+
+
 def allocate_mixed_plans(
     sensitivities,
     mixed_budget: float = DEFAULT_MIXED_BUDGET,
@@ -259,6 +276,7 @@ def allocate_mixed_plans(
     base_bits: tuple[int, int] | None = None,
     error_budget: float = 0.0,
     exact_first: bool = True,
+    shard_groups: int = 1,
 ) -> MixedAllocation:
     """Greedy budgeted width allocation over measured sensitivities.
 
@@ -270,36 +288,75 @@ def allocate_mixed_plans(
     is the PLAN-level MAE budget forwarded to ``select_plan`` per width;
     the default 0 keeps every per-layer plan provably exact, so the only
     error the model sees is the quantization the sensitivity pass
-    measured."""
+    measured.
+
+    ``shard_groups > 1`` (tensor-parallel engines) keeps each layer's
+    mixed width intact under partitioning — the DeepBurning-MixQ framing —
+    by selecting shard-legal plans for ROW-partitioned layers (their
+    packed words absorb every shard's products before extraction, see
+    ``tuner.rank_plans``).  A width with no shard-legal plan is excluded
+    for row layers; a row layer whose ``base_bits`` is excluded starts at
+    the widest servable candidate instead (forced, so not charged against
+    the budget, but included in ``predicted_error``)."""
     if base_bits is None:
         base_bits = _widest(widths)
     if base_bits not in widths:
         raise ValueError(f"base_bits {base_bits} not among candidates {widths}")
-    plans = {
-        b: select_plan(b[0], b[1], error_budget=error_budget,
-                       exact_first=exact_first)
-        for b in widths
-    }
+    plans = _plan_table(widths, error_budget, exact_first, 1)
+    if shard_groups > 1:
+        from ..runtime.sharding import linear_partition
+
+        plans_row = _plan_table(widths, error_budget, exact_first,
+                                shard_groups)
+
+        def table_for(path):
+            return plans_row if linear_partition(path) == "row" else plans
+    else:
+        def table_for(path):
+            return plans
+
     # Certified packed-arithmetic error prior per candidate width: zero for
     # certificate-exact plans (the defaults), the certificate's analytic
     # per-extraction MAE bound otherwise.  A bounded plan's demotion charge
     # is floored at the *certified* error it adds over the current plan, so
     # a provably lossy plan can never be admitted for free just because the
     # calibration probe happened not to resolve its damage.
-    prior = {
-        b: (0.0 if plans[b].certificate.exact
-            else float(plans[b].certificate.mae_per_extraction))
-        for b in widths
-    }
-    costs = {s.path: _layer_costs(s, plans) for s in sensitivities}
+    def _prior(table):
+        return {
+            b: (0.0 if r.certificate.exact
+                else float(r.certificate.mae_per_extraction))
+            for b, r in table.items()
+        }
+
+    tables = {s.path: table_for(s.path) for s in sensitivities}
+    priors = {s.path: _prior(tables[s.path]) for s in sensitivities}
+    costs = {s.path: _layer_costs(s, tables[s.path]) for s in sensitivities}
     by_path = {s.path: s for s in sensitivities}
-    current = {s.path: base_bits for s in sensitivities}
+    current = {}
+    starts = {}
+    forced = 0.0
+    for s in sensitivities:
+        if base_bits in tables[s.path]:
+            current[s.path] = base_bits
+        else:
+            cands = [b for b in widths if b in tables[s.path]]
+            if not cands:
+                raise ValueError(
+                    f"no candidate width in {tuple(widths)} is servable for "
+                    f"{s.path!r} at shard_groups={shard_groups}; lower the "
+                    "tensor-parallel degree or narrow the candidates"
+                )
+            start = _widest(cands)
+            current[s.path] = start
+            forced += s.delta(start, base_bits)
+        starts[s.path] = current[s.path]
     spent = 0.0
     while True:
         best = None  # (ratio, d_cost, path, bits, d_err)
         for path, sens in sorted(by_path.items()):
             cur = current[path]
-            for bits in widths:
+            prior = priors[path]
+            for bits in costs[path]:
                 d_cost = costs[path][cur] - costs[path][bits]
                 if d_cost <= 0:
                     continue
@@ -319,12 +376,12 @@ def allocate_mixed_plans(
         spent += d_err
     return MixedAllocation(
         assignments=current,
-        plans={p: plans[b] for p, b in current.items()},
+        plans={p: tables[p][b] for p, b in current.items()},
         base_bits=base_bits,
         budget=mixed_budget,
-        predicted_error=spent,
+        predicted_error=spent + forced,
         cost=sum(costs[p][b] for p, b in current.items()),
-        base_cost=sum(costs[p][base_bits] for p in current),
+        base_cost=sum(costs[p][starts[p]] for p in current),
         sensitivities=tuple(sensitivities),
     )
 
@@ -383,8 +440,14 @@ def mixed_precision_plan(
     seed: int = 0,
     metric: str = "kl",
     exact_first: bool = True,
+    shard_groups: int = 1,
 ) -> MixedAllocation:
-    """measure → allocate, end to end (the engine-build entry point)."""
+    """measure → allocate, end to end (the engine-build entry point).
+
+    Sensitivity is measured single-device (quantization damage depends on
+    the width, not the partitioning — the sharded arithmetic is bit-
+    identical by construction); only the allocation's plan tables are
+    shard-aware (see :func:`allocate_mixed_plans`)."""
     sens = measure_layer_sensitivity(
         params, cfg, widths=widths, n_calib_tokens=n_calib_tokens,
         calib_batch=calib_batch, seed=seed, metric=metric,
@@ -393,4 +456,5 @@ def mixed_precision_plan(
     return allocate_mixed_plans(
         sens, mixed_budget=mixed_budget, widths=widths, base_bits=base_bits,
         error_budget=error_budget, exact_first=exact_first,
+        shard_groups=shard_groups,
     )

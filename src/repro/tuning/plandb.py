@@ -64,7 +64,10 @@ __all__ = [
 # Bump whenever the serialized layout (report fields, allocation envelope,
 # key recipe) changes shape: old stores then read as empty and rebuild,
 # never as garbled plans.
-SCHEMA_VERSION = 1
+# v2: the tensor-parallel degree entered the key recipe (sharded row
+# layers select different plans — widened-word constraint) and entries
+# grew an optional "tiers" governor ladder.
+SCHEMA_VERSION = 2
 
 
 # ---- (de)serialization -----------------------------------------------------
@@ -208,6 +211,10 @@ def plan_key(cfg, serve_cfg, params) -> str:
             "seed": serve_cfg.seed,
             "use_kernel": serve_cfg.use_kernel,
             "fuse_projections": serve_cfg.fuse_projections,
+            # the mesh shape is search material: row-partitioned layers
+            # plan against the WIDENED word (tuner shard_groups), so a
+            # tp=2 table is not servable at tp=1 and vice versa
+            "tp": getattr(serve_cfg, "tp", 1),
         },
     }
     blob = json.dumps(material, sort_keys=True, separators=(",", ":"))

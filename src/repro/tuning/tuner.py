@@ -145,6 +145,7 @@ def rank_plans(
     seed: int = 0,
     decode_shape: tuple[int, int, int] | None = None,
     exact_first: bool = False,
+    shard_groups: int = 1,
 ) -> list[PlanReport]:
     """Score every enumerated plan, keep those inside the error budget and
     return them fastest-first.
@@ -160,8 +161,39 @@ def rank_plans(
     (``DspTunedLeaf.w_f32``) at dense-float speed, so they are faster in
     wall-clock than the proxy's multiply count suggests — the serving
     engine switches this on whenever it serves the non-kernel path.
-    Ties break toward lower error, then wider spacing (cheaper restore)."""
-    if specs is None:
+    Ties break toward lower error, then wider spacing (cheaper restore).
+
+    ``shard_groups > 1`` plans for tensor-parallel row sharding
+    (``runtime.tp_packed``): the cross-device psum accumulates
+    ``shard_groups`` shards' pair products in one packed word before
+    extraction, so the arithmetic that actually runs is the WIDENED spec
+    (``n_pairs`` multiplied by the shard count — ``ref.widen_for_shards``).
+    The enumerator emits minimal-spacing plans, so no enumerated spec
+    widens legally; instead each enumerated spec is treated as the
+    widened (post-reduce) spec — it is scored and budget-filtered as
+    such — and the report returned carries the LOCAL per-shard spec
+    (``n_pairs / shard_groups``) that each device executes.  Column
+    counts up to 8 are searched (a8w8 admits no 2-way-shardable plan on
+    the default column grid)."""
+    local_of: dict[PackedDotSpec, PackedDotSpec] = {}
+    if shard_groups > 1:
+        if specs is None:
+            specs = enumerate_specs(a_bits, w_bits,
+                                    n_columns_choices=(1, 2, 4, 8))
+        shardable = []
+        for s in specs:
+            if s.n_pairs % shard_groups:
+                continue
+            try:
+                local = dataclasses.replace(
+                    s, n_pairs=s.n_pairs // shard_groups
+                )
+            except ValueError:  # pragma: no cover - narrowing is always legal
+                continue
+            shardable.append(s)
+            local_of[s] = local
+        specs = shardable
+    elif specs is None:
         specs = enumerate_specs(a_bits, w_bits)
     reports = [_scored(s, n_extractions, samples, seed) for s in specs]
     within = [r for r in reports if r.mae_per_extraction <= error_budget]
@@ -170,6 +202,13 @@ def rank_plans(
         # the certificate is the proof; an exhaustively-enumerated zero is
         # an equally valid finite proof (and cross-checks the certificate)
         return r.certificate.exact or (r.mae == 0 and r.exhaustive)
+
+    def _localize(ranked):
+        # shard_groups: scored as the widened (post-psum) spec, served as
+        # the local per-shard spec — swap specs on the way out
+        if not local_of:
+            return ranked
+        return [dataclasses.replace(r, spec=local_of[r.spec]) for r in ranked]
 
     if autotune:
         if shape is None:
@@ -215,17 +254,17 @@ def rank_plans(
                     decode_us_per_call=phased["decode"].us_per_call,
                 ))
             timed = head + timed[3:]
-        return timed
+        return _localize(timed)
     if exact_first:
-        return sorted(
+        return _localize(sorted(
             within,
             key=lambda r: (not _proven(r), r.cost_proxy,
                            r.mae_per_extraction, -r.spec.p),
-        )
-    return sorted(
+        ))
+    return _localize(sorted(
         within,
         key=lambda r: (r.cost_proxy, r.mae_per_extraction, -r.spec.p),
-    )
+    ))
 
 
 def select_plan(
@@ -236,16 +275,28 @@ def select_plan(
 ) -> PlanReport:
     """The fastest plan inside the budget; falls back to the exact int4
     preset when the budget admits nothing (e.g. budget 0 with widths that
-    have no exact plan raises — there is nothing correct to run)."""
+    have no exact plan raises — there is nothing correct to run).
+
+    The INT4_EXACT fallback is gated on ``shard_groups == 1``: the preset
+    packs at minimal spacing, so its widened form overflows the middle
+    field — serving it row-sharded would be exactly the illegal layout
+    the certificate clauses reject.  A shard count no plan supports
+    (a8w8 8-way exceeds the int32 budget outright) raises instead."""
     ranked = rank_plans(a_bits, w_bits, error_budget=error_budget, **kwargs)
     if ranked:
         return ranked[0]
-    if a_bits == 4 and w_bits == 4:
+    shard_groups = kwargs.get("shard_groups", 1)
+    if a_bits == 4 and w_bits == 4 and shard_groups == 1:
         return _scored(INT4_EXACT, 4, 4096, 0)
+    sharded = (
+        f" with the contraction sharded {shard_groups} ways (the psum'd "
+        "packed word must absorb every shard's products before extraction)"
+        if shard_groups > 1 else ""
+    )
     raise ValueError(
         f"no packing plan for a{a_bits}w{w_bits} fits error budget "
-        f"{error_budget} (MAE per extraction); raise the budget or change "
-        "the operand widths"
+        f"{error_budget} (MAE per extraction){sharded}; raise the budget, "
+        "change the operand widths or lower the tensor-parallel degree"
     )
 
 
@@ -255,6 +306,7 @@ def plan_linear_layers(
     w_bits: int = 4,
     error_budget: float = DEFAULT_ERROR_BUDGET,
     min_dim: int | None = None,
+    shard_groups: int = 1,
     **kwargs,
 ) -> dict[str, PlanReport]:
     """Per-layer plan table for every packable matmul weight in ``params``.
@@ -263,8 +315,16 @@ def plan_linear_layers(
     so the table routes straight into the serving conversion.  Plans are
     selected per distinct weight shape (layers sharing a shape share the
     ranking work); with the cost proxy the winner is shape-independent, with
-    ``autotune=True`` each shape is measured at its own (m, k, n)."""
+    ``autotune=True`` each shape is measured at its own (m, k, n).
+
+    ``shard_groups`` is the tensor-parallel degree of the engine the table
+    is built for.  Only ROW-partitioned linears (``runtime.sharding.
+    linear_partition``) accumulate across shards — their plans are selected
+    with the widened-word constraint (see :func:`rank_plans`); column-
+    partitioned and replicated linears run unmodified single-device
+    arithmetic per shard and plan at ``shard_groups=1``."""
     from ..core.packed_params import MIN_DIM, iter_packable_weights
+    from ..runtime.sharding import linear_partition
 
     if min_dim is None:
         min_dim = MIN_DIM
@@ -273,7 +333,10 @@ def plan_linear_layers(
     autotune = kwargs.get("autotune", False)
     for path, leaf in iter_packable_weights(params, min_dim=min_dim):
         d_in, d_out = leaf.shape[-2:]
-        shape_key = (d_in, d_out)
+        groups = (
+            shard_groups if linear_partition(path) == "row" else 1
+        )
+        shape_key = (d_in, d_out, groups)
         if shape_key not in by_shape:
             call_kwargs = kwargs
             if autotune and "shape" not in kwargs:
@@ -287,7 +350,8 @@ def plan_linear_layers(
                     decode_shape=(8, d_in, d_out),
                 )
             by_shape[shape_key] = select_plan(
-                a_bits, w_bits, error_budget=error_budget, **call_kwargs
+                a_bits, w_bits, error_budget=error_budget,
+                shard_groups=groups, **call_kwargs
             )
         table[path] = by_shape[shape_key]
     return table

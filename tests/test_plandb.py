@@ -196,3 +196,30 @@ def test_dsp_mixed_warm_build_runs_zero_probes(tmp_path):
     assert warm.plan_db_stats["hits"] == 1
     assert warm.mixed_allocation == cold.mixed_allocation
     assert warm.generate(prompts, max_new=6) == cold_out
+
+
+def test_governed_warm_build_runs_zero_tier_searches(tmp_path):
+    """A governed engine builds a tier ladder (narrow fallback table on
+    top of the primary); the ladder's plan searches are persisted under
+    the same plan_key entry, so a warm governed build runs ZERO tier
+    searches (``governor.TIER_SEARCHES`` stays flat — the tier analogue
+    of the PROBES contract) yet exposes the identical ladder and
+    tokens."""
+    from repro.serving.governor import TIER_SEARCHES
+
+    dbdir = str(tmp_path / "db")
+    prompts = [[2, 3, 4, 5], [7, 8, 9]]
+    scfg = dict(quant_mode="dsp_tuned", plan_db=dbdir, governor=True)
+
+    TIER_SEARCHES.reset()
+    cold = Engine(CFG, PARAMS, _scfg(**scfg))
+    assert TIER_SEARCHES.count > 0  # the cold build really searched
+    cold_out = cold.generate(prompts, max_new=6)
+    cold_ladder = [(t.name, t.max_certified_mae) for t in cold.tiers]
+
+    TIER_SEARCHES.reset()
+    warm = Engine(CFG, PARAMS, _scfg(**scfg))
+    assert TIER_SEARCHES.count == 0, "warm governed build re-ran tier search"
+    assert warm.plan_db_stats["hits"] == 1
+    assert [(t.name, t.max_certified_mae) for t in warm.tiers] == cold_ladder
+    assert warm.generate(prompts, max_new=6) == cold_out

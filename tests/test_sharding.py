@@ -9,7 +9,13 @@ import textwrap
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.runtime.sharding import cache_pspec, param_pspec
+from repro.runtime.sharding import (
+    batch_pspec,
+    cache_pspec,
+    fsdp_axes,
+    linear_partition,
+    param_pspec,
+)
 
 
 class FakeMesh:
@@ -63,6 +69,48 @@ def test_cache_seq_parallel_for_batch1():
 def test_cache_batch_parallel():
     spec = cache_pspec(MESH1, (40, 128, 32768, 8, 128), batch=128)
     assert spec[1] == "data"
+
+
+def test_fsdp_axes_with_and_without_pod():
+    assert fsdp_axes(MESH1) == ("data",)
+    assert fsdp_axes(MESH2) == ("pod", "data")
+
+
+def test_linear_partition_exact_token_match():
+    # Megatron conventions shared with the serving TP wrapper
+    assert linear_partition("groups/attn/wq/w") == "col"
+    assert linear_partition("groups/mlp/up/w") == "col"
+    assert linear_partition("lm_head/w") == "col"
+    assert linear_partition("groups/attn/wo/w") == "row"
+    assert linear_partition("groups/mlp/down/w") == "row"
+    # unnamed roles replicate
+    assert linear_partition("groups/ln1/scale") is None
+    assert linear_partition("groups/moe/router/w") is None
+    # exact token matching, never substring: 'groups' must not match
+    # 'up' ("§Perf iteration 7" — the bug col-sharded every stacked
+    # weight), nor 'wo_gated' match 'wo'
+    assert linear_partition("groups/groupnorm/w") is None
+    assert linear_partition("upstream/w") is None
+
+
+def test_batch_pspec_divisibility():
+    assert batch_pspec(MESH1, 128) == P("data", None)
+    assert batch_pspec(MESH2, 64) == P(("pod", "data"), None)
+    # indivisible batch replicates rather than padding implicitly
+    assert batch_pspec(MESH1, 7) == P(None, None)
+    assert batch_pspec(MESH2, 16) == P(None, None)  # 16 % 32 != 0
+
+
+def test_cache_pspec_both_meshes():
+    # attn KV (G, B, S, kv, hd): batch over the composite fsdp axis
+    spec = cache_pspec(MESH2, (40, 64, 32768, 8, 128), batch=64)
+    assert spec[1] == ("pod", "data")
+    # batch=1 falls back to sequence parallelism on the same mesh
+    spec = cache_pspec(MESH2, (4, 1, 524288, 8, 128), batch=1)
+    assert spec[1] is None and spec[2] == ("pod", "data")
+    # state caches (G, B, feat): batch on fsdp, biggest feature on model
+    spec = cache_pspec(MESH1, (4, 128, 4096), batch=128, path="mamba")
+    assert spec[1] == "data" and spec[2] == "model"
 
 
 @pytest.mark.slow

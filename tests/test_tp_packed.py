@@ -1,0 +1,192 @@
+"""Tensor-parallel packed arithmetic, in-process (no mesh needed).
+
+The word-space reduction invariant (DESIGN.md §4) at the math level:
+summing per-shard packed partial words and extracting ONCE must be
+bit-identical to a single device running the widened spec
+(``kernels.ref.widen_for_shards``).  Mesh/engine-level bit-identity
+lives in ``tests/test_tp_serving.py`` (subprocess host meshes); this
+file pins the algebra and the build-time legality surface.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.runtime.tp_packed import TpLinear, _widened_grouping
+from repro.tuning import enumerate_specs, rank_plans, select_plan
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---- widen_for_shards ------------------------------------------------------
+
+
+def test_widen_identity_at_one_shard():
+    assert ref.widen_for_shards(ref.INT4_EXACT, 1) is ref.INT4_EXACT
+    with pytest.raises(ValueError, match="n_shards"):
+        ref.widen_for_shards(ref.INT4_EXACT, 0)
+
+
+def test_widen_multiplies_pairs_only():
+    spec = select_plan(4, 4, shard_groups=2).spec
+    wide = ref.widen_for_shards(spec, 2)
+    assert wide.n_pairs == 2 * spec.n_pairs
+    # extraction parameters are untouched: extracting the psum'd word
+    # with the original spec is the same operation
+    assert (wide.p, wide.correction, wide.n_columns) == (
+        spec.p, spec.correction, spec.n_columns)
+
+
+def test_widen_rejection_cites_certificate_clause():
+    """The presets sit at the single-word accumulation ceiling, so ANY
+    row sharding of them must be rejected — with the violated clause
+    named, like an illegal n_pairs."""
+    for spec in (ref.INT4_EXACT, ref.INT4_MR_OVERPACKED, ref.INT2_EXACT):
+        with pytest.raises(ValueError) as e:
+            ref.widen_for_shards(spec, 2)
+        msg = str(e.value)
+        assert "cannot be row-sharded 2 ways" in msg
+        assert "certificate clause" in msg
+
+
+# ---- word-path algebra: shard-sum == widened single device -----------------
+
+
+def _sharded_word_matmul(x_u, w_s, spec, S):
+    """Mirror ``tp_packed._tuned_row``'s word path with the psums replaced
+    by explicit per-shard sums (pure math, no shard_map)."""
+    pw = ref.pack_weight_words(w_s, spec)
+    words = _widened_grouping(pw.words, S, 0, 1)
+    wsc = None if pw.wsc is None else _widened_grouping(pw.wsc, S, 0, 1)
+    m, k = x_u.shape
+    c, merged, n = words.shape
+    npair = spec.n_pairs
+    acc = jnp.zeros((m, n), jnp.int32)
+    for j in range(spec.n_columns):
+        xa = ref.slice_column(x_u, spec, j).reshape(m, k // 2, 2)
+        a_words = (xa[:, :, 0] + (xa[:, :, 1] << spec.p)).reshape(m, c, merged)
+        xa4 = xa.reshape(m, c, merged, 2)
+        partial = jnp.zeros((c, m, n), jnp.int32)
+        contam = jnp.zeros((c, m, n), jnp.int32) if spec.uses_mr else None
+        for d in range(S):  # one iteration per "device"
+            sl = slice(d * npair, (d + 1) * npair)
+            partial = partial + jax.lax.dot_general(
+                a_words[:, :, sl], words[:, sl, :],
+                (((2,), (1,)), ((1,), (0,))),
+                preferred_element_type=jnp.int32,
+            )
+            if spec.uses_mr:
+                contam = contam + ref.contamination_terms(
+                    xa4[:, :, sl, :], wsc[:, sl], spec
+                )
+        if spec.uses_mr:
+            # residues mod 2**mr_bits compose across shards
+            contam = contam & jnp.int32(ref.contamination_mask(spec))
+        field = ref.extract_accumulated_field(partial, spec, contam)
+        col = jnp.sum(field, axis=0)
+        shift = spec.column_shift(j)
+        acc = acc + (col << shift if shift else col)
+    return acc
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_shard_sum_matches_widened_spec_bitwise(shards):
+    """Per-shard word accumulation + one extraction == the widened plan on
+    one device, bit-for-bit — including mr contamination composition
+    (the planner's shard-aware pick at 4,4 is an mr multi-column plan,
+    so the hard case is exercised)."""
+    spec = select_plan(4, 4, shard_groups=shards).spec
+    wide = ref.widen_for_shards(spec, shards)
+    rng = np.random.default_rng(0)
+    k = shards * spec.chunk * 2
+    x_u = jnp.asarray(rng.integers(0, 2 ** spec.bits_a, (5, k)), jnp.int32)
+    w_s = jnp.asarray(
+        rng.integers(-(2 ** (spec.bits_w - 1)), 2 ** (spec.bits_w - 1),
+                     (k, 7)), jnp.int32)
+    got = _sharded_word_matmul(x_u, w_s, spec, shards)
+    want = ref.ref_packed_matmul(x_u, w_s, wide)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert spec.uses_mr  # the planner pick really exercises mr psum
+
+
+def test_shard_sum_matches_widened_spec_non_mr():
+    """Same identity on an exact-spacing (non-mr) plan.
+
+    Enumerated plans sit at the single-word accumulation ceiling, so the
+    per-device spec is the enumerated one NARROWED (n_pairs / S) — which
+    is exactly how the shard-aware planner serves them: widening the
+    narrowed spec recovers the enumerated plan."""
+    wide_src = next(
+        s for s in enumerate_specs(4, 4)
+        if not s.uses_mr and s.n_pairs % 2 == 0
+    )
+    spec = dataclasses.replace(wide_src, n_pairs=wide_src.n_pairs // 2)
+    wide = ref.widen_for_shards(spec, 2)
+    assert wide == wide_src
+    rng = np.random.default_rng(1)
+    k = 2 * spec.chunk * 3
+    x_u = jnp.asarray(rng.integers(0, 16, (4, k)), jnp.int32)
+    w_s = jnp.asarray(rng.integers(-8, 8, (k, 6)), jnp.int32)
+    got = _sharded_word_matmul(x_u, w_s, spec, 2)
+    want = ref.ref_packed_matmul(x_u, w_s, wide)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _widens_ok(spec, s):
+    try:
+        ref.widen_for_shards(spec, s)
+        return True
+    except ValueError:
+        return False
+
+
+# ---- shard-aware planner ---------------------------------------------------
+
+
+def test_rank_plans_shard_groups_only_emits_shardable_plans():
+    for s in (2, 8):
+        ranked = rank_plans(4, 4, shard_groups=s)
+        assert ranked, f"no shardable a4w4 plans at shard_groups={s}"
+        for r in ranked:
+            assert _widens_ok(r.spec, s), r.spec.name()
+
+
+def test_select_plan_no_int4_fallback_under_sharding():
+    """The INT4_EXACT preset is un-shardable, so the shard-aware search
+    must never fall back to it."""
+    r = select_plan(4, 4, shard_groups=8)
+    assert r.spec.name() != ref.INT4_EXACT.name()
+    assert _widens_ok(r.spec, 8)
+
+
+def test_select_plan_reports_unshardable_width_family():
+    """a8w8 has no plan whose widened spec fits one word 8 ways — the
+    search fails loudly, naming the sharding, instead of silently
+    narrowing the served widths."""
+    with pytest.raises(ValueError, match="sharded 8 ways"):
+        select_plan(8, 8, error_budget=0.0, shard_groups=8)
+
+
+# ---- TpLinear pytree -------------------------------------------------------
+
+
+def test_tp_linear_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        TpLinear({}, kind="diag", mesh=None, n_shards=2)
+
+
+def test_tp_linear_pytree_roundtrip_keeps_aux_static():
+    inner = {"w_f32": jnp.ones((4, 4)), "scale": jnp.ones((1, 4)),
+             "packed": jnp.zeros((2, 4), jnp.uint8)}
+    w = TpLinear(inner, kind="row", mesh=None, n_shards=2)
+    leaves, treedef = jax.tree_util.tree_flatten(w)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (back.kind, back.n_shards, back.axis) == ("row", 2, "model")
+    # mapping over the tree touches the inner arrays, not the aux
+    doubled = jax.tree.map(lambda a: a * 2, w)
+    np.testing.assert_array_equal(
+        np.asarray(doubled.inner["w_f32"]), 2 * np.ones((4, 4)))

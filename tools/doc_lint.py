@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Doc lint: module docstrings + architecture-doc cross-references.
+
+The tree's docstrings cite the architecture documents by section —
+``DESIGN.md §4``, or ``EXPERIMENTS.md §Perf cell A`` — and the documents
+cite source files back.  Those references rot silently: ``runtime/
+sharding.py`` shipped citing a DESIGN.md that did not exist for nine
+PRs.  This lint makes both directions fail CI instead:
+
+1. every Python module under ``src/repro/`` has a module docstring;
+2. every ``DESIGN`` / ``EXPERIMENTS`` section citation in the tree
+   (``src``, ``tests``, ``benchmarks``, ``examples``, ``tools`` and the
+   top-level ``*.md``) resolves to a real ``§``-anchored heading, and a
+   qualifier riding the citation (``cell A``, ``cells A/C``,
+   ``iteration 7``) appears verbatim in that section's body;
+3. every repo-relative file path named in DESIGN.md / EXPERIMENTS.md /
+   README.md (backticked or in a layout block) exists — module-style
+   paths like ``runtime/tp_packed.py`` are resolved under ``src/repro/``.
+
+Run from the repo root (CI runs it in the fast-lane static-analysis
+job): ``python tools/doc_lint.py``.  Exit 0 = clean, 1 = findings (one
+per line, ``path:line: message``).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: documents whose sections may be cited as ``<NAME>.md §<token>``
+DOCS = ("DESIGN", "EXPERIMENTS")
+
+#: where citations are collected from
+CITING_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+# ``DESIGN.md §4`` / ``EXPERIMENTS §Perf`` (the ``.md`` is optional in
+# prose); ``\s+`` tolerates citations wrapped across comment lines.
+CITE_RE = re.compile(
+    r"\b(%s)(?:\.md)?\s+§([A-Za-z0-9][A-Za-z0-9-]*)" % "|".join(DOCS)
+)
+# qualifier immediately after a §Perf citation: "cell A", "cells A/C",
+# "iteration 7" (optionally comma-separated from the section token)
+QUAL_RE = re.compile(r"^[,\s]*\(?(cells?\s+[A-Z](?:/[A-Z])*|iterations?\s+\d+)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# backticked repo paths in the docs; skip templates (<arch>, BENCH_*)
+PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|toml|yml))`")
+
+
+def iter_py_files():
+    for d in CITING_DIRS:
+        base = ROOT / d
+        if base.is_dir():
+            yield from sorted(base.rglob("*.py"))
+
+
+def check_module_docstrings(findings: list[str]) -> None:
+    for path in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        try:
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+        except SyntaxError as e:  # pragma: no cover - would fail tests too
+            findings.append(f"{path.relative_to(ROOT)}:{e.lineno}: {e.msg}")
+            continue
+        if ast.get_docstring(tree) is None:
+            findings.append(
+                f"{path.relative_to(ROOT)}:1: missing module docstring"
+            )
+
+
+def parse_sections(doc: Path) -> dict[str, str]:
+    """Map ``§``-anchored heading token -> section body text."""
+    text = doc.read_text(encoding="utf-8")
+    sections: dict[str, str] = {}
+    matches = list(HEADING_RE.finditer(text))
+    for i, m in enumerate(matches):
+        for tok in re.findall(r"§([A-Za-z0-9][A-Za-z0-9-]*)", m.group(1)):
+            end = matches[i + 1].start() if i + 1 < len(matches) else len(text)
+            sections[tok] = text[m.start():end]
+    return sections
+
+
+def check_citations(findings: list[str]) -> None:
+    sections = {}
+    for name in DOCS:
+        doc = ROOT / f"{name}.md"
+        sections[name] = parse_sections(doc) if doc.exists() else None
+
+    # ISSUE.md / CHANGES.md are driver/log files that quote section
+    # syntax as placeholders; they are not citation sources
+    files = list(iter_py_files()) + sorted(
+        p for p in ROOT.glob("*.md") if p.name not in ("ISSUE.md", "CHANGES.md")
+    )
+    for path in files:
+        text = path.read_text(encoding="utf-8")
+        # normalize comment/docstring wrapping so qualifiers split across
+        # lines ("...§Perf\n# iteration 1") still attach to the citation
+        flat = re.sub(r"\s*\n\s*#?\s*", " ", text)
+        for m in CITE_RE.finditer(flat):
+            doc, tok = m.group(1), m.group(2)
+            line = text[: text.find(m.group(0).split()[0])].count("\n") + 1
+            rel = path.relative_to(ROOT)
+            if sections[doc] is None:
+                findings.append(f"{rel}:{line}: cites missing {doc}.md")
+                continue
+            body = sections[doc].get(tok)
+            if body is None:
+                findings.append(
+                    f"{rel}:{line}: {doc}.md has no section anchored §{tok}"
+                )
+                continue
+            q = QUAL_RE.match(flat[m.end():m.end() + 40])
+            if q:
+                qual = re.sub(r"\s+", " ", q.group(1))
+                # "cells A/C" / "iterations 1-2" expand to each member
+                plural, _, spec = qual.partition(" ")
+                singular = plural.rstrip("s")
+                for part in re.split(r"[/,]| and ", spec):
+                    want = f"{singular} {part.strip()}"
+                    if part.strip() and want not in body:
+                        findings.append(
+                            f"{rel}:{line}: {doc}.md §{tok} does not "
+                            f"mention {want!r}"
+                        )
+
+
+def check_doc_paths(findings: list[str]) -> None:
+    for name in ("DESIGN.md", "EXPERIMENTS.md", "README.md"):
+        doc = ROOT / name
+        if not doc.exists():
+            findings.append(f"{name}:1: document missing")
+            continue
+        text = doc.read_text(encoding="utf-8")
+        for m in PATH_RE.finditer(text):
+            rel = m.group(1)
+            if any(c in rel for c in "<>*{"):
+                continue
+            candidates = (ROOT / rel, ROOT / "src" / rel,
+                          ROOT / "src" / "repro" / rel)
+            if not any(c.exists() for c in candidates):
+                line = text[: m.start()].count("\n") + 1
+                findings.append(f"{name}:{line}: dangling path {rel!r}")
+
+
+def run() -> list[str]:
+    findings: list[str] = []
+    check_module_docstrings(findings)
+    check_citations(findings)
+    check_doc_paths(findings)
+    return findings
+
+
+def main() -> int:
+    findings = run()
+    for f in findings:
+        print(f)
+    print(f"doc_lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
